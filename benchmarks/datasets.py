@@ -1,0 +1,38 @@
+"""Benchmark dataset registry: synthetic analogues of the paper's four
+(Table I), sized for CPU-runnable benchmarks, with generation metadata
+(dt, dx, dy) for the SL predictor's CFL factors."""
+from __future__ import annotations
+
+from repro.data import synthetic
+
+
+def load_all(small=True):
+    if small:
+        dims = dict(
+            SCF=dict(T=40, H=64, W=96),
+            DG=dict(T=40, H=48, W=96),
+            HCBA=dict(T=40, H=96, W=48),
+            FS=dict(T=40, H=64, W=64),
+        )
+    else:
+        dims = dict(
+            SCF=dict(T=120, H=100, W=225),
+            DG=dict(T=120, H=64, W=128),
+            HCBA=dict(T=120, H=150, W=90),
+            FS=dict(T=120, H=128, W=128),
+        )
+    out = {}
+    u, v = synthetic.vortex_street(**dims["SCF"])
+    out["SCF"] = (u, v, dict(dt=0.05, dx=2.0 / (dims["SCF"]["W"] - 1),
+                             dy=1.0 / (dims["SCF"]["H"] - 1)))
+    u, v = synthetic.double_gyre(**dims["DG"])
+    out["DG"] = (u, v, dict(dt=0.1, dx=2.0 / (dims["DG"]["W"] - 1),
+                            dy=1.0 / (dims["DG"]["H"] - 1)))
+    u, v = synthetic.heated_plume(**dims["HCBA"])
+    out["HCBA"] = (u, v, dict(dt=1.0, dx=1.0, dy=1.0))
+    u, v = synthetic.turbulence(**dims["FS"])
+    out["FS"] = (u, v, dict(dt=1.0, dx=1.0, dy=1.0))
+    adv_dims = dict(T=40, H=64, W=64) if small else dict(T=120, H=128, W=128)
+    u, v = synthetic.advected_turbulence(**adv_dims)
+    out["ADV"] = (u, v, dict(dt=1.0, dx=1.0, dy=1.0))
+    return out

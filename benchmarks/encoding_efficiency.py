@@ -1,0 +1,95 @@
+"""Fig. 6/7 analogue: PMF / tail-CCDF of quantization symbols and
+run-length CCDF of the center symbol, per predictor, plus zero-order
+entropy H0 and the realized Huffman rate."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import encode
+from repro.core.compressor import (
+    CompressionConfig, _abs_eb, _as_fields, _derive_eb_jit, _encode_stage,
+    _residuals,
+)
+from repro.core import fixedpoint, quantize
+import jax.numpy as jnp
+
+from . import datasets
+
+
+def residual_symbols(u, v, meta, predictor, eb=1e-2):
+    cfg = CompressionConfig(eb=eb, mode="rel", predictor=predictor, **meta)
+    u, v = _as_fields(u, v)
+    eb_abs = _abs_eb(u, v, cfg)
+    scale, ufp, vfp = fixedpoint.to_fixed(u, v, cfg.fixed_bits)
+    tau = max(int(np.floor(eb_abs * scale)), 1)
+    xi_unit, _ = quantize.ladder(tau, cfg.n_levels)
+    ufp_j, vfp_j = jnp.asarray(ufp), jnp.asarray(vfp)
+    ebv, _, _ = _derive_eb_jit(ufp_j, vfp_j, tau)
+    xu, xv, lossless = _encode_stage(
+        ufp_j, vfp_j, ebv, xi_unit, cfg.n_levels,
+        jnp.zeros(u.shape, bool), cfg)
+    res_u, res_v, bm = _residuals(xu, xv, scale, xi_unit, cfg)
+    sym_u, _ = encode.to_symbols(np.asarray(res_u))
+    sym_v, _ = encode.to_symbols(np.asarray(res_v))
+    return np.concatenate([sym_u, sym_v])
+
+
+def pmf_ccdf(sym, kmax=16):
+    freq = np.bincount(sym, minlength=256).astype(np.float64)
+    p = freq / freq.sum()
+    # folded symbol k corresponds to signed residual via zigzag
+    pmf = {int(k): float(p[k]) for k in range(2 * kmax)}
+    ccdf = {int(k): float(p[k:].sum()) for k in range(2 * kmax)}
+    h0 = float(-(p[p > 0] * np.log2(p[p > 0])).sum())
+    return pmf, ccdf, h0
+
+
+def run_lengths(sym, maxlen=20):
+    """CCDF of run lengths of the center (zero-residual) symbol."""
+    zero = sym == 0
+    # run-length encode
+    change = np.flatnonzero(np.diff(zero.astype(np.int8)))
+    bounds = np.concatenate([[-1], change, [len(zero) - 1]])
+    lens = np.diff(bounds)
+    vals = zero[bounds[1:]]
+    runs = lens[vals]
+    if len(runs) == 0:
+        return {k: 0.0 for k in range(maxlen + 1)}, {}
+    ccdf = {int(L): float((runs >= L).mean()) for L in range(maxlen + 1)}
+    stats = {
+        "mean": float(runs.mean()),
+        "p75": float(np.percentile(runs, 75)),
+        "p90": float(np.percentile(runs, 90)),
+    }
+    return ccdf, stats
+
+
+def main(small=True, eb=1e-2, log=print):
+    out = []
+    for name, (u, v, meta) in datasets.load_all(small).items():
+        for pred in ("lorenzo", "sl", "mop"):
+            sym = residual_symbols(u, v, meta, pred, eb)
+            pmf, ccdf, h0 = pmf_ccdf(sym)
+            rl_ccdf, rl_stats = run_lengths(sym)
+            hbits = encode.huffman_stream_size_bits(sym) / max(len(sym), 1)
+            out.append({
+                "dataset": name, "predictor": pred, "H0": round(h0, 4),
+                "huffman_bits_per_sym": round(hbits, 4),
+                "p_center": round(pmf[0] + pmf.get(1, 0.0), 4),
+                "tail_gt3": round(ccdf.get(7, 0.0), 6),
+                "run_mean": round(rl_stats.get("mean", 0.0), 2),
+                "run_p90": round(rl_stats.get("p90", 0.0), 2),
+                "pmf": pmf, "rl_ccdf": rl_ccdf,
+            })
+            log(f"[enc] {name} {pred:8s} H0={h0:.3f} huff={hbits:.3f} "
+                f"P(|q|<=1)={out[-1]['p_center']:.3f} "
+                f"run_mean={out[-1]['run_mean']}")
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    rows = main()
+    with open("experiments/encoding_efficiency.json", "w") as f:
+        json.dump(rows, f, indent=1)

@@ -1,0 +1,84 @@
+"""Tables II-V analogue: every compressor on every dataset.
+
+Columns match the paper: CR, PSNR, FC_t, FC_s, #Traj (orig vs rec),
+plus timings.  Our method appears as 3DL / SL / MoP rows.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.baselines import REGISTRY
+from repro.core import CompressionConfig, compress, decompress, metrics
+
+from . import datasets
+
+
+def run_dataset(name, u, v, meta, eb=1e-2, with_tracks=True, log=print):
+    rows = []
+
+    def finish(res, scale_needed=True):
+        m = metrics.evaluate(
+            u, v, res["u_rec"], res["v_rec"],
+            _scale(u, v), res["orig_bytes"], res["comp_bytes"],
+            with_tracks=with_tracks,
+        )
+        row = {
+            "dataset": name, "method": res["name"],
+            "CR": round(res["ratio"], 2),
+            "PSNR": round(m["PSNR"], 2) if np.isfinite(m["PSNR"]) else "inf",
+            "FC_t": m["FC_t"], "FC_s": m["FC_s"],
+            "traj_orig": m.get("n_traj_orig"), "traj_rec": m.get("n_traj_rec"),
+            "max_err": m["max_err"],
+            "t_c": round(res["t_compress"], 2),
+            "t_d": round(res["t_decompress"], 2),
+        }
+        rows.append(row)
+        log(f"  {row['method']:10s} CR={row['CR']:8.2f} PSNR={row['PSNR']} "
+            f"FC_t={row['FC_t']} FC_s={row['FC_s']} "
+            f"traj {row['traj_orig']}->{row['traj_rec']}")
+
+    for bname, fn in REGISTRY.items():
+        res = fn(u, v, eb=eb, mode="rel")
+        finish(res)
+
+    for pred in ("lorenzo", "sl", "mop"):
+        cfg = CompressionConfig(eb=eb, mode="rel", predictor=pred, **meta)
+        t0 = time.perf_counter()
+        blob, stats = compress(u, v, cfg)
+        tc = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ur, vr = decompress(blob)
+        td = time.perf_counter() - t0
+        finish({
+            "name": {"lorenzo": "ours-3DL", "sl": "ours-SL",
+                     "mop": "ours-MoP"}[pred],
+            "ratio": stats["ratio"], "orig_bytes": stats["orig_bytes"],
+            "comp_bytes": stats["comp_bytes"], "u_rec": ur, "v_rec": vr,
+            "t_compress": tc, "t_decompress": td,
+        })
+    return rows
+
+
+def _scale(u, v):
+    from repro.core import fixedpoint
+
+    s, _, _ = fixedpoint.to_fixed(u, v)
+    return s
+
+
+def main(eb=1e-2, small=True, with_tracks=True, log=print):
+    all_rows = []
+    for name, (u, v, meta) in datasets.load_all(small).items():
+        log(f"[quantitative] dataset {name} {u.shape}")
+        all_rows += run_dataset(name, u, v, meta, eb, with_tracks, log)
+    return all_rows
+
+
+if __name__ == "__main__":
+    import json
+
+    rows = main()
+    with open("experiments/quantitative.json", "w") as f:
+        json.dump(rows, f, indent=1, default=str)

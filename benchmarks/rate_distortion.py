@@ -1,0 +1,44 @@
+"""Fig. 5 analogue: rate-distortion curves (bitrate vs PSNR) per dataset
+for 3DL / SL / MoP, plus the fraction of MoP blocks selecting SL."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CompressionConfig, compress, decompress, metrics
+
+from . import datasets
+
+EBS = (1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2)
+
+
+def main(small=True, ebs=EBS, log=print):
+    rows = []
+    for name, (u, v, meta) in datasets.load_all(small).items():
+        for pred in ("lorenzo", "sl", "mop"):
+            for eb in ebs:
+                cfg = CompressionConfig(eb=eb, mode="rel", predictor=pred,
+                                        **meta)
+                blob, stats = compress(u, v, cfg)
+                ur, vr = decompress(blob)
+                psnr = metrics.psnr(u, v, ur, vr)
+                bitrate = 32.0 / stats["ratio"]
+                rows.append({
+                    "dataset": name, "predictor": pred, "eb": eb,
+                    "bitrate": round(bitrate, 4),
+                    "PSNR": round(psnr, 2),
+                    "CR": round(stats["ratio"], 2),
+                    "sl_frac": round(stats["sl_block_frac"], 4),
+                    "lossless_frac": round(stats["lossless_frac"], 4),
+                })
+                log(f"[rd] {name} {pred:8s} eb={eb:.0e} "
+                    f"bpp={bitrate:6.3f} PSNR={psnr:6.2f} "
+                    f"slfrac={stats['sl_block_frac']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+
+    rows = main()
+    with open("experiments/rate_distortion.json", "w") as f:
+        json.dump(rows, f, indent=1)

@@ -1,0 +1,50 @@
+"""Fig. 8 analogue: compression/decompression wall time per method."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.baselines import REGISTRY
+from repro.core import CompressionConfig, compress, decompress
+
+from . import datasets
+
+
+def main(small=True, eb=1e-2, log=print):
+    rows = []
+    for name, (u, v, meta) in datasets.load_all(small).items():
+        mb = (u.nbytes + v.nbytes) / 2**20
+        for bname, fn in REGISTRY.items():
+            res = fn(u, v, eb=eb, mode="rel")
+            rows.append({
+                "dataset": name, "method": bname,
+                "t_c": round(res["t_compress"], 3),
+                "t_d": round(res["t_decompress"], 3),
+                "MBps_c": round(mb / max(res["t_compress"], 1e-9), 1),
+            })
+        for pred in ("lorenzo", "sl", "mop"):
+            cfg = CompressionConfig(eb=eb, mode="rel", predictor=pred, **meta)
+            t0 = time.perf_counter()
+            blob, stats = compress(u, v, cfg)
+            tc = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            decompress(blob)
+            td = time.perf_counter() - t0
+            rows.append({
+                "dataset": name, "method": f"ours-{pred}",
+                "t_c": round(tc, 3), "t_d": round(td, 3),
+                "MBps_c": round(mb / max(tc, 1e-9), 1),
+            })
+        for r in rows[-9:]:
+            log(f"[timing] {name} {r['method']:12s} tc={r['t_c']}s "
+                f"td={r['t_d']}s")
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+
+    rows = main()
+    with open("experiments/timing.json", "w") as f:
+        json.dump(rows, f, indent=1)

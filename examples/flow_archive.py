@@ -1,0 +1,53 @@
+"""Scenario: archival + remote analysis of a simulation campaign.
+
+A "simulation" produces frames; the archiver compresses the stream in
+windows with trajectory preservation; an "analyst" later decompresses
+and extracts critical-point tracks, which must match the originals
+exactly -- the paper's motivating workflow end to end.
+
+    PYTHONPATH=src python examples/flow_archive.py
+"""
+import numpy as np
+
+from repro.core import CompressionConfig, compress, decompress, fixedpoint
+from repro.core import trajectory
+from repro.data import synthetic
+
+
+def main():
+    # the full campaign (e.g. streamed from a solver)
+    u, v = synthetic.double_gyre(T=48, H=48, W=96)
+    meta = dict(dt=0.1, dx=2.0 / 95, dy=1.0 / 47)
+
+    # --- archiver: window the stream, compress each window
+    window = 16
+    blobs = []
+    for t0 in range(0, u.shape[0], window):
+        cfg = CompressionConfig(eb=5e-3, mode="rel", predictor="mop", **meta)
+        blob, stats = compress(u[t0 : t0 + window], v[t0 : t0 + window], cfg)
+        blobs.append(blob)
+        print(f"window {t0:3d}: ratio {stats['ratio']:6.2f}x  "
+              f"{stats['verify_rounds']} corrections")
+    raw = u.nbytes + v.nbytes
+    comp = sum(len(b) for b in blobs)
+    print(f"archive: {raw / 2**20:.1f} MiB -> {comp / 2**20:.2f} MiB "
+          f"({raw / comp:.1f}x)")
+
+    # --- analyst: restore and extract trajectories per window
+    for i, blob in enumerate(blobs):
+        t0 = i * window
+        ur, vr = decompress(blob)
+        scale, uo, vo = fixedpoint.to_fixed(u[t0 : t0 + window],
+                                            v[t0 : t0 + window])
+        ud, vd = fixedpoint.refix(ur, vr, scale)
+        tr0 = trajectory.extract_tracks(uo, vo)
+        tr1 = trajectory.extract_tracks(ud, vd)
+        assert tr0 == tr1, (tr0, tr1)
+        print(f"window {t0:3d}: {tr0['n_tracks']} tracks, "
+              f"{tr0['n_crossing_nodes']} crossings -- identical after "
+              f"decompression")
+    print("campaign archived and analyzed with zero topology distortion.")
+
+
+if __name__ == "__main__":
+    main()

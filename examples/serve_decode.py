@@ -1,0 +1,20 @@
+"""Serve a small model with batched requests (continuous batching).
+
+    PYTHONPATH=src python examples/serve_decode.py
+
+Thin wrapper over the production launcher (repro.launch.serve) using the
+reduced yi-6b-family config on CPU.
+"""
+from repro.launch import serve
+
+
+def main():
+    serve.main([
+        "--arch", "yi_6b", "--smoke",
+        "--requests", "12", "--batch", "4",
+        "--prompt-len", "32", "--gen-len", "12",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+with checkpointing + error-bounded gradient compression.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+The model is a qwen-family decoder (12L x 512d, 50k vocab ~= 101M
+params).  Gradients pass through the paper-derived eb-quantizer (int8 +
+error feedback) before the optimizer -- the cross-pod compression path
+of the production mesh, exercised here on CPU.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.tokens import TokenPipelineConfig, global_batch
+from repro.models.config import ModelConfig
+from repro.models.transformer import build_model
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt
+from repro.train.grad_compress import GradCompressConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+CFG = ModelConfig(
+    name="demo-100m", family="dense", n_layers=12, d_model=512,
+    n_heads=8, n_kv_heads=8, d_ff=2048, vocab=50304,
+    qkv_bias=True, attn_chunk=256,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    model = build_model(CFG)
+    print(f"params: {CFG.param_count() / 1e6:.0f}M")
+    ocfg = opt.AdamWConfig(lr=6e-4, warmup_steps=50)
+    gc_cfg = GradCompressConfig(enabled=True)
+    params, state = init_train_state(model, jax.random.PRNGKey(0), ocfg, gc_cfg)
+    step_fn = jax.jit(make_train_step(model, ocfg, 1, gc_cfg),
+                      donate_argnums=(0, 1))
+    tp = TokenPipelineConfig(vocab=CFG.vocab, batch=args.batch,
+                             seq_len=args.seq)
+    for step in range(args.steps):
+        tokens, labels = global_batch(tp, step)
+        params, state, m = step_fn(
+            params, state,
+            {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)})
+        if step % 20 == 0:
+            print(f"step {step:4d} loss {float(m['loss']):.4f} "
+                  f"gnorm {float(m['grad_norm']):.3f}")
+        if (step + 1) % 100 == 0:
+            ckpt.save(args.ckpt_dir, step + 1,
+                      {"params": params, "opt": state})
+            print(f"  checkpoint @ {step + 1}")
+    print(f"final loss {float(m['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+from .lossless import gzip_compress, zstd_compress, fpzip_like  # noqa: F401
+from .lossy import zfp_like, sz3_like, cpsz_like  # noqa: F401
+
+REGISTRY = {
+    "gzip": gzip_compress,
+    "zstd": zstd_compress,
+    "fpzip-like": fpzip_like,
+    "zfp-like": zfp_like,
+    "sz3-like": sz3_like,
+    "cpsz-like": cpsz_like,
+}

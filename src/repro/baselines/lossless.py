@@ -1,0 +1,93 @@
+"""Lossless baselines (paper Tables II-V upper-bound rows).
+
+gzip / zstd are the real codecs; "fpzip-like" approximates FPZIP's
+float-stream decorrelation with byte-plane splitting + per-plane delta +
+zstd (the actual FPZIP predictive coder is patented/external; byte-plane
+splitting captures most of its advantage on smooth fields and is
+labelled accordingly everywhere it is reported).
+"""
+from __future__ import annotations
+
+import time
+import zlib
+
+import numpy as np
+import zstandard
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def gzip_compress(u, v, **kw):
+    raw = np.ascontiguousarray(u).tobytes() + np.ascontiguousarray(v).tobytes()
+    blob, tc = _timed(lambda: zlib.compress(raw, 6))
+    dec, td = _timed(lambda: zlib.decompress(blob))
+    assert dec == raw
+    n = len(raw)
+    return {
+        "name": "gzip", "lossless": True,
+        "orig_bytes": n, "comp_bytes": len(blob),
+        "ratio": n / len(blob), "t_compress": tc, "t_decompress": td,
+        "u_rec": u, "v_rec": v,
+    }
+
+
+def zstd_compress(u, v, level=12, **kw):
+    raw = np.ascontiguousarray(u).tobytes() + np.ascontiguousarray(v).tobytes()
+    c = zstandard.ZstdCompressor(level=level)
+    blob, tc = _timed(lambda: c.compress(raw))
+    d = zstandard.ZstdDecompressor()
+    dec, td = _timed(lambda: d.decompress(blob))
+    assert dec == raw
+    n = len(raw)
+    return {
+        "name": "zstd", "lossless": True,
+        "orig_bytes": n, "comp_bytes": len(blob),
+        "ratio": n / len(blob), "t_compress": tc, "t_decompress": td,
+        "u_rec": u, "v_rec": v,
+    }
+
+
+def _byteplane(arr: np.ndarray) -> bytes:
+    """Byte-plane split + per-plane delta (fpzip-flavoured decorrelation)."""
+    b = np.ascontiguousarray(arr).view(np.uint8).reshape(-1, arr.dtype.itemsize)
+    planes = [np.diff(b[:, i].astype(np.int16), prepend=np.int16(0)).astype(np.int8)
+              for i in range(arr.dtype.itemsize)]
+    return np.concatenate(planes).tobytes()
+
+
+def _unbyteplane(raw: bytes, shape, dtype) -> np.ndarray:
+    n = int(np.prod(shape))
+    item = np.dtype(dtype).itemsize
+    planes = np.frombuffer(raw, np.int8).reshape(item, n)
+    b = np.empty((n, item), np.uint8)
+    for i in range(item):
+        b[:, i] = np.cumsum(planes[i].astype(np.int16)).astype(np.uint8)
+    return b.reshape(-1).view(dtype)[:n].reshape(shape)
+
+
+def fpzip_like(u, v, level=12, **kw):
+    c = zstandard.ZstdCompressor(level=level)
+    raw_u = _byteplane(u)
+    raw_v = _byteplane(v)
+    blob, tc = _timed(lambda: (c.compress(raw_u), c.compress(raw_v)))
+    d = zstandard.ZstdDecompressor()
+
+    def dec():
+        ur = _unbyteplane(d.decompress(blob[0]), u.shape, u.dtype)
+        vr = _unbyteplane(d.decompress(blob[1]), v.shape, v.dtype)
+        return ur, vr
+
+    (ur, vr), td = _timed(dec)
+    assert (ur == u).all() and (vr == v).all()
+    n = u.nbytes + v.nbytes
+    total = len(blob[0]) + len(blob[1])
+    return {
+        "name": "fpzip-like", "lossless": True,
+        "orig_bytes": n, "comp_bytes": total,
+        "ratio": n / total, "t_compress": tc, "t_decompress": td,
+        "u_rec": u, "v_rec": v,
+    }

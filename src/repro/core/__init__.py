@@ -1,0 +1,10 @@
+"""Core library: critical-point-trajectory-preserving compression.
+
+Importing this package enables jax x64 (the SoS predicates require exact
+int64 arithmetic).  The LM/model stack is dtype-explicit and unaffected.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from .compressor import CompressionConfig, compress, decompress  # noqa: E402,F401

@@ -1,0 +1,345 @@
+"""Critical-point-trajectory-preserving compressor (paper Alg. 3).
+
+Public API:
+
+    blob, stats = compress(u, v, CompressionConfig(eb=...))
+    u_rec, v_rec = decompress(blob)
+
+Pipeline (encode):
+  1. fixed-point conversion (fixedpoint.py)
+  2. face predicates + per-vertex error bounds (ebound.py, Alg. 2/4)
+  3. eb log-quantization + dual-quantization -> integer field X
+  4. predictors: block-local 3D Lorenzo and/or semi-Lagrangian + MoP
+  5. verify-and-correct: simulate the *exact* decode (including the
+     float32 output rounding), re-evaluate every SoS face predicate on
+     the reconstruction, force the vertices of any violated face (or any
+     vertex breaking the pointwise bound) to lossless, and repeat.  The
+     loop is monotone (the lossless set only grows) and terminates; on
+     exit FC_t = FC_s = 0 *by construction* -- an end-to-end guarantee
+     rather than a derivation-time one (DESIGN.md #3.5).
+  6. escape-coded symbol streams + lossless side channels -> zstd
+     container (encode.py)
+
+Decode is a scan over frames: X_t from residuals (+ tile-local cumsum or
+SL prediction per the blockmap), reconstruction X * g / S, lossless
+overrides.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ebound, encode, fixedpoint, mop, predictors, quantize
+
+jax.config.update("jax_enable_x64", True)
+
+
+@dataclasses.dataclass
+class CompressionConfig:
+    eb: float = 1e-2                  # error bound
+    mode: str = "rel"                 # 'abs' or 'rel' (relative to value range)
+    predictor: str = "mop"            # 'mop' | 'lorenzo' | 'sl'
+    block: int = predictors.DEFAULT_BLOCK
+    n_levels: int = quantize.DEFAULT_LEVELS
+    fixed_bits: int = fixedpoint.DEFAULT_BITS
+    dt: float = 1.0
+    dx: float = 1.0
+    dy: float = 1.0
+    d_max: float = 2.0
+    n_max: int = 32
+    zstd_level: int = 12
+    verify: bool = True
+    max_rounds: int = 12
+
+
+def _as_fields(u, v):
+    u = np.asarray(u)
+    v = np.asarray(v)
+    assert u.shape == v.shape and u.ndim == 3, "expect (T, H, W) u and v"
+    assert u.shape[0] >= 2 and u.shape[1] >= 2 and u.shape[2] >= 2, (
+        "need at least a 2x2x2 space-time grid"
+    )
+    return u.astype(np.float32), v.astype(np.float32)
+
+
+def _abs_eb(u, v, cfg):
+    if cfg.mode == "abs":
+        return float(cfg.eb)
+    rng = float(
+        max(u.max(), v.max()) - min(u.min(), v.min())
+    )
+    return float(cfg.eb) * max(rng, 1e-30)
+
+
+# ----------------------------------------------------------------------
+# jitted stages
+# ----------------------------------------------------------------------
+
+@jax.jit
+def _predicates(ufp, vfp):
+    return ebound.all_face_predicates(ufp, vfp)
+
+
+_derive_eb_jit = jax.jit(ebound.derive_vertex_eb, static_argnums=2)
+
+
+def _encode_stage(ufp, vfp, eb, xi_unit, n_levels, lossless_extra,
+                  cfg: CompressionConfig):
+    """eb -> X fields.  eb is the precomputed per-vertex bound."""
+    k, lossless = quantize.quantize_eb(eb, xi_unit, n_levels)
+    lossless = jnp.logical_or(lossless, lossless_extra)
+    k = jnp.where(lossless_extra, -1, k)
+    xu = quantize.dual_quantize(ufp, k, lossless, xi_unit)
+    xv = quantize.dual_quantize(vfp, k, lossless, xi_unit)
+    return xu, xv, lossless
+
+
+def _residuals(xu, xv, scale, xi_unit, cfg: CompressionConfig):
+    g2f = (2.0 * xi_unit) / scale
+    cfl_x = cfg.dt / cfg.dx
+    cfl_y = cfg.dt / cfg.dy
+    res3_u = predictors.lorenzo_encode(xu, cfg.block)
+    res3_v = predictors.lorenzo_encode(xv, cfg.block)
+    if cfg.predictor == "lorenzo":
+        T = xu.shape[0]
+        nbi = -(-xu.shape[1] // cfg.block)
+        nbj = -(-xu.shape[2] // cfg.block)
+        bm = jnp.zeros((T, nbi, nbj), dtype=bool)
+        return res3_u, res3_v, bm
+    ressl_u, ressl_v = predictors.sl_encode(
+        xu, xv, g2f, cfl_x, cfl_y, cfg.d_max, cfg.n_max
+    )
+    if cfg.predictor == "sl":
+        T = xu.shape[0]
+        nbi = -(-xu.shape[1] // cfg.block)
+        nbj = -(-xu.shape[2] // cfg.block)
+        bm = jnp.ones((T, nbi, nbj), dtype=bool).at[0].set(False)
+    else:
+        bm = mop.select(res3_u, res3_v, ressl_u, ressl_v, cfg.block)
+    res_u = mop.assemble(res3_u, ressl_u, bm, cfg.block)
+    res_v = mop.assemble(res3_v, ressl_v, bm, cfg.block)
+    return res_u, res_v, bm
+
+
+def _decode_fields(res_u, res_v, blockmap, scale, xi_unit, block,
+                   cfl_x, cfl_y, d_max, n_max):
+    """Scan over frames: residuals -> X fields (int64)."""
+    g2f = (2.0 * xi_unit) / scale
+    T, H, W = res_u.shape
+
+    def frame0(res_u0, res_v0):
+        xu = predictors.c2_block(res_u0, block)
+        xv = predictors.c2_block(res_v0, block)
+        return xu, xv
+
+    def step(carry, inp):
+        xu_p, xv_p = carry
+        ru, rv, bm = inp
+        xu3 = predictors.lorenzo_decode_frame(xu_p, ru, block)
+        xv3 = predictors.lorenzo_decode_frame(xv_p, rv, block)
+        pu, pv = predictors.sl_predict_frame(
+            xu_p, xv_p, g2f, cfl_x, cfl_y, d_max, n_max
+        )
+        xus = ru + pu
+        xvs = rv + pv
+        mask = jnp.repeat(jnp.repeat(bm, block, axis=0), block, axis=1)[:H, :W]
+        xu = jnp.where(mask, xus, xu3)
+        xv = jnp.where(mask, xvs, xv3)
+        return (xu, xv), (xu, xv)
+
+    xu0, xv0 = frame0(res_u[0], res_v[0])
+    (_, _), (xu_rest, xv_rest) = jax.lax.scan(
+        step, (xu0, xv0), (res_u[1:], res_v[1:], blockmap[1:])
+    )
+    xu = jnp.concatenate([xu0[None], xu_rest], axis=0)
+    xv = jnp.concatenate([xv0[None], xv_rest], axis=0)
+    return xu, xv
+
+
+_decode_fields_jit = jax.jit(
+    _decode_fields, static_argnums=(5, 8, 9), static_argnames=()
+)
+
+
+def _reconstruct(xu, xv, scale, xi_unit, lossless, u_raw, v_raw):
+    g = 2.0 * xi_unit
+    u_rec = (xu.astype(jnp.float64) * (g / scale)).astype(jnp.float32)
+    v_rec = (xv.astype(jnp.float64) * (g / scale)).astype(jnp.float32)
+    u_rec = jnp.where(lossless, u_raw, u_rec)
+    v_rec = jnp.where(lossless, v_raw, v_rec)
+    return u_rec, v_rec
+
+
+# ----------------------------------------------------------------------
+# public API
+# ----------------------------------------------------------------------
+
+def compress(u, v, cfg: CompressionConfig = CompressionConfig()):
+    t0 = time.perf_counter()
+    u, v = _as_fields(u, v)
+    T, H, W = u.shape
+    eb_abs = _abs_eb(u, v, cfg)
+    scale, ufp, vfp = fixedpoint.to_fixed(u, v, cfg.fixed_bits)
+    tau = max(int(np.floor(eb_abs * scale)), 0)
+    xi_unit, n_usable = quantize.ladder(tau, cfg.n_levels)
+
+    ufp_j = jnp.asarray(ufp)
+    vfp_j = jnp.asarray(vfp)
+    slice_pred0, slab_pred0 = _predicates(ufp_j, vfp_j)
+
+    lossless_extra = jnp.zeros((T, H, W), dtype=bool)
+    if tau < 1 or n_usable < 1:
+        lossless_extra = jnp.ones((T, H, W), dtype=bool)
+
+    cfl_x = cfg.dt / cfg.dx
+    cfl_y = cfg.dt / cfg.dy
+
+    eb_vertex, _, _ = _derive_eb_jit(ufp_j, vfp_j, int(max(tau, 1)))
+
+    rounds = 0
+    stats_rounds = []
+    while True:
+        xu, xv, lossless = _encode_stage(
+            ufp_j, vfp_j, eb_vertex, xi_unit, cfg.n_levels, lossless_extra, cfg
+        )
+        res_u, res_v, blockmap = _residuals(xu, xv, scale, xi_unit, cfg)
+
+        if not cfg.verify:
+            break
+        # simulate the exact decode
+        xu_d, xv_d = _decode_fields_jit(
+            res_u, res_v, blockmap, scale, xi_unit, cfg.block,
+            cfl_x, cfl_y, cfg.d_max, cfg.n_max,
+        )
+        u_rec, v_rec = _reconstruct(
+            xu_d, xv_d, scale, xi_unit, lossless, jnp.asarray(u), jnp.asarray(v)
+        )
+        # end-to-end predicate check on the refixed reconstruction
+        ur_fp, vr_fp = fixedpoint.refix(np.asarray(u_rec), np.asarray(v_rec), scale)
+        slice_pred1, slab_pred1 = _predicates(jnp.asarray(ur_fp), jnp.asarray(vr_fp))
+        bad_slice = np.asarray(slice_pred0 ^ slice_pred1)
+        bad_slab = np.asarray(slab_pred0 ^ slab_pred1)
+        # pointwise bound check (float32 output, strict)
+        err = np.maximum(
+            np.abs(np.asarray(u_rec, dtype=np.float64) - u.astype(np.float64)),
+            np.abs(np.asarray(v_rec, dtype=np.float64) - v.astype(np.float64)),
+        )
+        bad_pt = err > eb_abs
+
+        n_bad = int(bad_slice.sum()) + int(bad_slab.sum()) + int(bad_pt.sum())
+        stats_rounds.append(n_bad)
+        if n_bad == 0 or rounds >= cfg.max_rounds:
+            break
+        extra = np.asarray(lossless_extra).copy()
+        extra |= bad_pt
+        extra |= _faces_to_vertex_mask(bad_slice, bad_slab, T, H, W)
+        lossless_extra = jnp.asarray(extra)
+        rounds += 1
+
+    sym_u, esc_u = encode.to_symbols(np.asarray(res_u))
+    sym_v, esc_v = encode.to_symbols(np.asarray(res_v))
+    lossless_np = np.asarray(lossless)
+    u_ll = u[lossless_np]
+    v_ll = v[lossless_np]
+
+    header = {
+        "version": 1,
+        "shape": [int(T), int(H), int(W)],
+        "scale": float(scale),
+        "xi_unit": int(xi_unit),
+        "block": int(cfg.block),
+        "cfl_x": float(cfl_x),
+        "cfl_y": float(cfl_y),
+        "d_max": float(cfg.d_max),
+        "n_max": int(cfg.n_max),
+        "eb_abs": float(eb_abs),
+    }
+    sections = {
+        "sym_u": sym_u,
+        "sym_v": sym_v,
+        "esc_u": esc_u,
+        "esc_v": esc_v,
+        "lossless": np.packbits(lossless_np),
+        "u_ll": u_ll,
+        "v_ll": v_ll,
+        "blockmap": np.packbits(np.asarray(blockmap)),
+        "bm_shape": np.asarray(blockmap.shape, dtype=np.int32),
+    }
+    blob = encode.pack(header, sections, cfg.zstd_level)
+    t1 = time.perf_counter()
+    orig_bytes = u.nbytes + v.nbytes
+    stats = {
+        "orig_bytes": orig_bytes,
+        "comp_bytes": len(blob),
+        "ratio": orig_bytes / max(len(blob), 1),
+        "lossless_frac": float(lossless_np.mean()),
+        "sl_block_frac": float(np.asarray(blockmap).mean()),
+        "verify_rounds": rounds,
+        "verify_bad_counts": stats_rounds,
+        "eb_abs": eb_abs,
+        "scale": scale,
+        "tau": tau,
+        "xi_unit": xi_unit,
+        "seconds": t1 - t0,
+    }
+    return blob, stats
+
+
+def _faces_to_vertex_mask(bad_slice, bad_slab, T, H, W):
+    """Mark all vertices of violated faces."""
+    from . import grid
+
+    HW = H * W
+    mask = np.zeros(T * HW, dtype=bool)
+    slice_tab = grid.slab_faces(H, W)["slice0"]
+    slab_tab = ebound.slab_face_table(H, W)
+    for t in range(bad_slice.shape[0]):
+        f = np.nonzero(bad_slice[t])[0]
+        if len(f):
+            mask[(slice_tab[f].astype(np.int64) + t * HW).reshape(-1)] = True
+    for t in range(bad_slab.shape[0]):
+        f = np.nonzero(bad_slab[t])[0]
+        if len(f):
+            mask[(slab_tab[f].astype(np.int64) + t * HW).reshape(-1)] = True
+    return mask.reshape(T, H, W)
+
+
+def decompress(blob: bytes):
+    header, sections = encode.unpack(blob)
+    T, H, W = header["shape"]
+    res_u = encode.from_symbols(sections["sym_u"], sections["esc_u"], (T, H, W))
+    res_v = encode.from_symbols(sections["sym_v"], sections["esc_v"], (T, H, W))
+    bm_shape = tuple(int(x) for x in sections["bm_shape"])
+    n_bm = int(np.prod(bm_shape))
+    blockmap = np.unpackbits(sections["blockmap"], count=n_bm).astype(bool)
+    blockmap = blockmap.reshape(bm_shape)
+    lossless = np.unpackbits(sections["lossless"], count=T * H * W).astype(bool)
+    lossless = lossless.reshape(T, H, W)
+
+    xu, xv = _decode_fields_jit(
+        jnp.asarray(res_u),
+        jnp.asarray(res_v),
+        jnp.asarray(blockmap),
+        header["scale"],
+        header["xi_unit"],
+        header["block"],
+        header["cfl_x"],
+        header["cfl_y"],
+        header["d_max"],
+        header["n_max"],
+    )
+    u_raw = np.zeros((T, H, W), dtype=np.float32)
+    v_raw = np.zeros((T, H, W), dtype=np.float32)
+    u_raw[lossless] = sections["u_ll"]
+    v_raw[lossless] = sections["v_ll"]
+    u_rec, v_rec = _reconstruct(
+        xu, xv, header["scale"], header["xi_unit"],
+        jnp.asarray(lossless), jnp.asarray(u_raw), jnp.asarray(v_raw),
+    )
+    return np.asarray(u_rec), np.asarray(v_rec)

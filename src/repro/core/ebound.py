@@ -1,0 +1,189 @@
+"""Per-vertex error-bound derivation (paper Alg. 2 + Alg. 4).
+
+For every triangular face of the space-time mesh we evaluate Alg. 2 once
+per vertex rotation (the algorithm is asymmetric: it bounds the
+perturbation of the vertex in slot 2 with the other two fixed), zero the
+bound on faces already crossed by the zero set (so their vertices are
+stored losslessly and the crossing geometry is exact), and scatter-min
+into the per-vertex bound array.  Faces are processed slab-by-slab with
+``lax.scan``; the face tables (grid.py) are static constants.
+
+Alg. 2's sufficiency is for a single moving vertex; the compressor's
+verify-and-correct loop (compressor.py) upgrades this to an unconditional
+guarantee under simultaneous perturbation -- see DESIGN.md #3.5.
+
+All bounds are integers in fixed-point units.  Divisions run in float64
+with a conservative down-rounding (relative margin 2^-40, then -1), which
+keeps every returned bound strictly below the exact real-valued bound.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import grid, sos
+
+_MARGIN = 1.0 - 2.0 ** -40
+
+
+def _alg2_eb(xp, u0, u1, u2, v0, v1, v2):
+    """Alg. 2: max perturbation of (u2, v2) that cannot flip the face
+    predicate, with (u0,v0), (u1,v1) held fixed.  int64 in, int64 out."""
+    m0 = u2 * v0 - u0 * v2
+    m1 = u1 * v2 - u2 * v1
+    m2 = u0 * v1 - u1 * v0
+    m = m0 + m1 + m2
+
+    f = jnp.float64 if xp is jnp else np.float64
+    absm = xp.abs(m).astype(f)
+    den0 = (xp.abs(u1 - u0) + xp.abs(v0 - v1)).astype(f)
+    den1 = (xp.abs(u1) + xp.abs(v1)).astype(f)
+    den2 = (xp.abs(u0) + xp.abs(v0)).astype(f)
+
+    big = xp.asarray(2.0**62, dtype=f)
+    eb = xp.where(den0 > 0, absm / xp.maximum(den0, 1.0), big)
+    eb = xp.minimum(eb, xp.abs(m1).astype(f) / xp.maximum(den1, 1.0))
+    eb = xp.minimum(eb, xp.abs(m0).astype(f) / xp.maximum(den2, 1.0))
+
+    # same-sign relaxation: if all u (resp. v) share a strict sign the
+    # face can never be crossed while each vertex keeps its own sign, so
+    # |u2| - 1 is a safe integer bound for this vertex.
+    su0, su1, su2 = xp.sign(u0), xp.sign(u1), xp.sign(u2)
+    sv0, sv1, sv2 = xp.sign(v0), xp.sign(v1), xp.sign(v2)
+    same_u = (su0 == su1) & (su1 == su2) & (su2 != 0)
+    same_v = (sv0 == sv1) & (sv1 == sv2) & (sv2 != 0)
+    eb = xp.where(same_u, xp.maximum(eb, (xp.abs(u2) - 1).astype(f)), eb)
+    eb = xp.where(same_v, xp.maximum(eb, (xp.abs(v2) - 1).astype(f)), eb)
+
+    eb_int = xp.floor(eb * _MARGIN).astype(xp.int64) - 1
+    # paper early-outs: degenerate face (M == 0) or a fixed vertex exactly
+    # at the origin -> lossless.
+    zero = (m == 0) | (den1 == 0) | (den2 == 0)
+    eb_int = xp.where(zero, xp.zeros_like(eb_int), eb_int)
+    return xp.maximum(eb_int, 0)
+
+
+def face_rotation_ebs(xp, fu, fv, crossed):
+    """Alg. 2 for the three rotations of each face.
+
+    fu, fv: (..., 3) int64 values;  crossed: (...,) bool.
+    Returns (..., 3) int64 bounds aligned with the face's vertex slots.
+    """
+    a_u, b_u, c_u = fu[..., 0], fu[..., 1], fu[..., 2]
+    a_v, b_v, c_v = fv[..., 0], fv[..., 1], fv[..., 2]
+    eb_c = _alg2_eb(xp, a_u, b_u, c_u, a_v, b_v, c_v)
+    eb_a = _alg2_eb(xp, b_u, c_u, a_u, b_v, c_v, a_v)
+    eb_b = _alg2_eb(xp, c_u, a_u, b_u, c_v, a_v, b_v)
+    ebs = xp.stack([eb_a, eb_b, eb_c], axis=-1)
+    return xp.where(crossed[..., None], xp.zeros_like(ebs), ebs)
+
+
+def _faces_eb_update(u_flat, v_flat, idx_base, faces, tau, n_verts):
+    """Per-face ebs scatter-min'd into a fresh (n_verts,) array.
+
+    u_flat/v_flat: (n_verts,) int64 values of the vertex planes involved;
+    idx_base: scalar global id of local vertex 0 (for SoS indices);
+    faces: (F, 3) int32 static table.
+    """
+    fu = u_flat[faces]
+    fv = v_flat[faces]
+    fidx = faces.astype(jnp.int64) + idx_base
+    crossed = sos.face_crossed_vals(jnp, fu, fv, fidx)
+    ebs = face_rotation_ebs(jnp, fu, fv, crossed)
+    out = jnp.full((n_verts,), tau, dtype=jnp.int64)
+    out = out.at[faces.reshape(-1)].min(ebs.reshape(-1))
+    return out, crossed
+
+
+def derive_vertex_eb(ufp, vfp, tau: int):
+    """Per-vertex error bounds over the full space-time mesh.
+
+    ufp, vfp: (T, H, W) int64.  Returns (eb (T, H, W) int64,
+    slice_crossed (T, Fs) bool, slab_crossed (T-1, Fb) bool).
+    """
+    T, H, W = ufp.shape
+    HW = H * W
+    slice_tab = jnp.asarray(grid.slab_faces(H, W)["slice0"])
+    sf = grid.slab_faces(H, W)
+    slab_tab = jnp.asarray(np.concatenate([sf["side"], sf["internal"]], axis=0))
+
+    u2 = ufp.reshape(T, HW)
+    v2 = vfp.reshape(T, HW)
+
+    def slice_body(t, uv):
+        u_t, v_t = uv
+        eb, crossed = _faces_eb_update(u_t, v_t, t * HW, slice_tab, tau, HW)
+        return eb, crossed
+
+    def slice_scan(carry, x):
+        t, u_t, v_t = x
+        eb, crossed = slice_body(t, (u_t, v_t))
+        return carry, (eb, crossed)
+
+    _, (eb_slice, slice_crossed) = jax.lax.scan(
+        slice_scan, 0, (jnp.arange(T, dtype=jnp.int64), u2, v2)
+    )
+
+    def slab_scan(carry, x):
+        t, u_pair, v_pair = x
+        eb, crossed = _faces_eb_update(
+            u_pair.reshape(-1), v_pair.reshape(-1), t * HW, slab_tab, tau, 2 * HW
+        )
+        return carry, (eb.reshape(2, HW), crossed)
+
+    pairs_u = jnp.stack([u2[:-1], u2[1:]], axis=1)  # (T-1, 2, HW)
+    pairs_v = jnp.stack([v2[:-1], v2[1:]], axis=1)
+    _, (eb_slab2, slab_crossed) = jax.lax.scan(
+        slab_scan, 0, (jnp.arange(T - 1, dtype=jnp.int64), pairs_u, pairs_v)
+    )
+
+    eb = eb_slice
+    # slab [t, t+1] contributes its plane-0 bounds to time t ...
+    eb = eb.at[:-1].min(eb_slab2[:, 0])
+    # ... and its plane-1 bounds to time t+1.
+    eb = eb.at[1:].min(eb_slab2[:, 1])
+    return eb.reshape(T, H, W), slice_crossed, slab_crossed
+
+
+def all_face_predicates(ufp, vfp):
+    """SoS predicates for every face.  Returns (slice (T, Fs), slab (T-1, Fb))."""
+    T, H, W = ufp.shape
+    HW = H * W
+    slice_tab = jnp.asarray(grid.slab_faces(H, W)["slice0"])
+    sf = grid.slab_faces(H, W)
+    slab_tab = jnp.asarray(np.concatenate([sf["side"], sf["internal"]], axis=0))
+    u2 = ufp.reshape(T, HW)
+    v2 = vfp.reshape(T, HW)
+
+    def slice_scan(carry, x):
+        t, u_t, v_t = x
+        fu, fv = u_t[slice_tab], v_t[slice_tab]
+        fidx = slice_tab.astype(jnp.int64) + t * HW
+        return carry, sos.face_crossed_vals(jnp, fu, fv, fidx)
+
+    _, slice_pred = jax.lax.scan(
+        slice_scan, 0, (jnp.arange(T, dtype=jnp.int64), u2, v2)
+    )
+
+    def slab_scan(carry, x):
+        t, u_pair, v_pair = x
+        uf = u_pair.reshape(-1)[slab_tab]
+        vf = v_pair.reshape(-1)[slab_tab]
+        fidx = slab_tab.astype(jnp.int64) + t * HW
+        return carry, sos.face_crossed_vals(jnp, uf, vf, fidx)
+
+    pairs_u = jnp.stack([u2[:-1], u2[1:]], axis=1)
+    pairs_v = jnp.stack([v2[:-1], v2[1:]], axis=1)
+    _, slab_pred = jax.lax.scan(
+        slab_scan, 0, (jnp.arange(T - 1, dtype=jnp.int64), pairs_u, pairs_v)
+    )
+    return slice_pred, slab_pred
+
+
+def slab_face_table(H, W):
+    """(Fb, 3) int32 side+internal face table (local 2-plane ids)."""
+    sf = grid.slab_faces(H, W)
+    return np.concatenate([sf["side"], sf["internal"]], axis=0)

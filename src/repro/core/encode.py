@@ -1,0 +1,208 @@
+"""Entropy/backend coding (paper Sec. V "lossless_comp" stage).
+
+Residual symbols are zigzag-folded, escape-coded into a uint8 stream
+(values >= 255 escape to an int64 side list), and the packed container is
+compressed with zstd (FSE entropy + LZ77 matching ~= the paper's
+Huffman + Zstd stack, but with a vectorizable decoder -- DESIGN.md #3.6).
+A canonical Huffman coder is also provided; it is bit-exact round-trip
+tested and used by the encoding-efficiency benchmark to report the same
+quantities as the paper's Fig. 6/7 analysis.
+
+Container layout: msgpack header + raw sections, the whole thing inside
+one zstd frame.
+"""
+from __future__ import annotations
+
+import heapq
+import io
+import struct
+
+import msgpack
+import numpy as np
+import zstandard
+
+MAGIC = b"CPTZ1"
+ESC = 255
+
+
+# ----------------------------------------------------------------------
+# symbol stream
+# ----------------------------------------------------------------------
+
+def fold_np(res):
+    res = np.asarray(res, dtype=np.int64)
+    return np.where(res >= 0, 2 * res, -2 * res - 1)
+
+
+def unfold_np(z):
+    z = np.asarray(z, dtype=np.int64)
+    return np.where(z % 2 == 0, z // 2, -(z + 1) // 2)
+
+
+def to_symbols(res):
+    """int64 residuals -> (uint8 stream, int64 escapes)."""
+    z = fold_np(res).reshape(-1)
+    esc_mask = z >= ESC
+    sym = np.where(esc_mask, ESC, z).astype(np.uint8)
+    escapes = res.reshape(-1)[esc_mask].astype(np.int64)
+    return sym, escapes
+
+
+def from_symbols(sym, escapes, shape):
+    z = sym.astype(np.int64)
+    res = unfold_np(z)
+    esc_mask = sym == ESC
+    res[esc_mask] = escapes
+    return res.reshape(shape)
+
+
+# ----------------------------------------------------------------------
+# canonical Huffman (reference entropy coder)
+# ----------------------------------------------------------------------
+
+def huffman_code_lengths(freq):
+    """Code length per symbol via the standard heap construction."""
+    items = [(int(f), i) for i, f in enumerate(freq) if f > 0]
+    if not items:
+        return np.zeros(len(freq), dtype=np.int32)
+    if len(items) == 1:
+        ln = np.zeros(len(freq), dtype=np.int32)
+        ln[items[0][1]] = 1
+        return ln
+    heap = [(f, n, (s,)) for n, (f, s) in enumerate(items)]
+    heapq.heapify(heap)
+    counter = len(heap)
+    depth = {}
+    while len(heap) > 1:
+        f1, _, s1 = heapq.heappop(heap)
+        f2, _, s2 = heapq.heappop(heap)
+        for s in s1 + s2:
+            depth[s] = depth.get(s, 0) + 1
+        counter += 1
+        heapq.heappush(heap, (f1 + f2, counter, s1 + s2))
+    ln = np.zeros(len(freq), dtype=np.int32)
+    for s, d in depth.items():
+        ln[s] = d
+    return ln
+
+
+def canonical_codes(lengths):
+    """(codes uint32, lengths) canonical assignment."""
+    order = np.lexsort((np.arange(len(lengths)), lengths))
+    codes = np.zeros(len(lengths), dtype=np.uint32)
+    code = 0
+    prev_len = 0
+    for s in order:
+        ln = int(lengths[s])
+        if ln == 0:
+            continue
+        if prev_len == 0:
+            prev_len = ln
+        code <<= ln - prev_len
+        codes[s] = code
+        code += 1
+        prev_len = ln
+    return codes, lengths
+
+
+def huffman_encode(sym):
+    """uint8 symbols -> (lengths table, packed bits, n_symbols)."""
+    freq = np.bincount(sym, minlength=256)
+    lengths = huffman_code_lengths(freq)
+    # keep ln + intra-byte offset <= 64 for the vectorized packer
+    while lengths.max() > 56:
+        freq = np.where(freq > 0, (freq + 1) // 2, 0)
+        lengths = huffman_code_lengths(freq)
+    codes, _ = canonical_codes(lengths)
+    ln = lengths[sym].astype(np.int64)
+    cd = codes[sym].astype(np.uint64)
+    total = int(ln.sum())
+    # vectorized MSB-first bit packing
+    ends = np.cumsum(ln)
+    starts = ends - ln
+    nbytes = (total + 7) // 8
+    buf = np.zeros(nbytes + 8, dtype=np.uint8)
+    # write each symbol's code into a 64-bit window at its byte offset
+    byte_off = (starts // 8).astype(np.int64)
+    bit_off = (starts % 8).astype(np.int64)
+    shift = (64 - bit_off - ln).astype(np.uint64)
+    vals = (cd << shift).astype(">u8")
+    # scatter with per-byte accumulation: process in 8 passes so windows
+    # touching the same bytes never collide (codes <= 56 bits + 7 offset).
+    view = vals.view(np.uint8).reshape(-1, 8)
+    for b in range(8):
+        np.add.at(buf, byte_off + b, view[:, b])
+    return lengths, buf[:nbytes].tobytes(), len(sym)
+
+
+def huffman_decode(lengths, data, n):
+    """Table-driven canonical Huffman decode (peek-table, python loop in
+    chunks -- reference implementation, used on test/bench sized inputs)."""
+    codes, _ = canonical_codes(lengths)
+    maxlen = int(lengths.max()) if lengths.max() > 0 else 1
+    peek = np.zeros(1 << maxlen, dtype=np.uint16)
+    plen = np.zeros(1 << maxlen, dtype=np.uint8)
+    for s in range(256):
+        ln = int(lengths[s])
+        if ln == 0:
+            continue
+        prefix = int(codes[s]) << (maxlen - ln)
+        span = 1 << (maxlen - ln)
+        peek[prefix : prefix + span] = s
+        plen[prefix : prefix + span] = ln
+    bits = np.unpackbits(np.frombuffer(data, dtype=np.uint8))
+    out = np.empty(n, dtype=np.uint8)
+    pos = 0
+    # pad so window reads never run off the end
+    bits = np.concatenate([bits, np.zeros(maxlen, dtype=np.uint8)])
+    pw = (1 << np.arange(maxlen - 1, -1, -1)).astype(np.uint32)
+    for i in range(n):
+        window = int(bits[pos : pos + maxlen] @ pw)
+        s = peek[window]
+        out[i] = s
+        pos += int(plen[window])
+    return out
+
+
+def huffman_stream_size_bits(sym):
+    freq = np.bincount(sym, minlength=256)
+    lengths = huffman_code_lengths(freq)
+    return int((lengths[sym]).sum())
+
+
+# ----------------------------------------------------------------------
+# container
+# ----------------------------------------------------------------------
+
+def pack(header: dict, sections: dict, level: int = 12) -> bytes:
+    body = io.BytesIO()
+    sec_index = {}
+    for name, arr in sections.items():
+        raw = np.ascontiguousarray(arr).tobytes()
+        sec_index[name] = {
+            "off": body.tell(),
+            "len": len(raw),
+            "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+        }
+        body.write(raw)
+    header = dict(header)
+    header["sections"] = sec_index
+    hdr = msgpack.packb(header, use_bin_type=True)
+    payload = struct.pack("<I", len(hdr)) + hdr + body.getvalue()
+    comp = zstandard.ZstdCompressor(level=level).compress(payload)
+    return MAGIC + comp
+
+
+def unpack(blob: bytes):
+    assert blob[: len(MAGIC)] == MAGIC, "not a CPTZ container"
+    payload = zstandard.ZstdDecompressor().decompress(blob[len(MAGIC):])
+    (hlen,) = struct.unpack("<I", payload[:4])
+    header = msgpack.unpackb(payload[4 : 4 + hlen], raw=False)
+    base = 4 + hlen
+    sections = {}
+    for name, meta in header.pop("sections").items():
+        raw = payload[base + meta["off"] : base + meta["off"] + meta["len"]]
+        arr = np.frombuffer(raw, dtype=np.dtype(meta["dtype"]))
+        sections[name] = arr.reshape(meta["shape"])
+    return header, sections

@@ -1,0 +1,151 @@
+"""Space-time simplicial mesh over a regular (T, H, W) grid.
+
+Spatial triangulation (paper Alg. 4, cases): every cell
+(i, j)-(i+1, j+1) is split along the main diagonal into
+
+    tri1 = {(i, j), (i+1, j), (i+1, j+1)}
+    tri2 = {(i, j), (i, j+1), (i+1, j+1)}
+
+Spatial ids sid(i, j) = i * W + j are strictly increasing within each
+triangle tuple above, so the Kuhn/Freudenthal prism split keyed on global
+vertex order is simply, for a sorted triangle (a, b, c) over slab
+[t, t+1]:
+
+    tau1 = (a0, b0, c0, c1)
+    tau2 = (a0, b0, b1, c1)
+    tau3 = (a0, a1, b1, c1)
+
+(x0 = vertex at time t, x1 = at time t+1).  Quad sides split along the
+(p0, q1) diagonal for p < q -- consistent between the two prisms sharing
+an edge, giving a conforming tetrahedralization (paper Sec. III-B).
+
+Face families per slab (local vertex id = plane * H*W + sid, plane in
+{0, 1}):
+
+    slice0    bottom time-slice triangles            2 (H-1)(W-1)
+    slice1    top time-slice triangles (same + HW)   2 (H-1)(W-1)
+    side      2 per spatial edge (h, v, d edges)     2 (H(W-1) + (H-1)W + (H-1)(W-1))
+    internal  2 per spatial triangle                 4 (H-1)(W-1)
+
+Per-vertex incident faces across the two adjacent slabs total <= 36,
+matching the paper's "3x3x3 neighborhood, 6 case families" analysis.
+
+Tables are numpy int32, built once per (H, W) and treated as static
+constants by the jax pipeline.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import numpy as np
+
+
+def _sid(i, j, W):
+    return i * W + j
+
+
+@lru_cache(maxsize=32)
+def spatial_triangles(H: int, W: int) -> np.ndarray:
+    """(2*(H-1)*(W-1), 3) int32 sorted spatial-id triangles."""
+    ii, jj = np.meshgrid(np.arange(H - 1), np.arange(W - 1), indexing="ij")
+    v00 = _sid(ii, jj, W).ravel()
+    v10 = _sid(ii, jj + 1, W).ravel()
+    v01 = _sid(ii + 1, jj, W).ravel()
+    v11 = _sid(ii + 1, jj + 1, W).ravel()
+    tri1 = np.stack([v00, v01, v11], axis=1)
+    tri2 = np.stack([v00, v10, v11], axis=1)
+    return np.concatenate([tri1, tri2], axis=0).astype(np.int32)
+
+
+@lru_cache(maxsize=32)
+def spatial_edges(H: int, W: int) -> np.ndarray:
+    """(E, 2) int32 sorted spatial edges: horizontal, vertical, diagonal."""
+    edges = []
+    ii, jj = np.meshgrid(np.arange(H), np.arange(W - 1), indexing="ij")
+    edges.append(np.stack([_sid(ii, jj, W).ravel(), _sid(ii, jj + 1, W).ravel()], 1))
+    ii, jj = np.meshgrid(np.arange(H - 1), np.arange(W), indexing="ij")
+    edges.append(np.stack([_sid(ii, jj, W).ravel(), _sid(ii + 1, jj, W).ravel()], 1))
+    ii, jj = np.meshgrid(np.arange(H - 1), np.arange(W - 1), indexing="ij")
+    edges.append(np.stack([_sid(ii, jj, W).ravel(), _sid(ii + 1, jj + 1, W).ravel()], 1))
+    return np.concatenate(edges, axis=0).astype(np.int32)
+
+
+@lru_cache(maxsize=32)
+def slab_faces(H: int, W: int):
+    """Face tables for one slab, dict name -> (F, 3) int32 local ids.
+
+    Local vertex id = plane * (H*W) + spatial id, plane in {0, 1}.
+    Vertex ids within a face are strictly increasing, so the face key is
+    canonical and the SoS index order is the id order.
+    """
+    HW = H * W
+    tris = spatial_triangles(H, W).astype(np.int64)
+    edges = spatial_edges(H, W).astype(np.int64)
+    a, b, c = tris[:, 0], tris[:, 1], tris[:, 2]
+    p, q = edges[:, 0], edges[:, 1]
+
+    slice0 = tris.copy()
+    slice1 = tris + HW
+    side = np.concatenate(
+        [
+            np.stack([p, q, q + HW], 1),       # (p0, q0, q1)
+            np.stack([p, p + HW, q + HW], 1),  # (p0, p1, q1)
+        ],
+        axis=0,
+    )
+    internal = np.concatenate(
+        [
+            np.stack([a, b, c + HW], 1),        # (a0, b0, c1)
+            np.stack([a, b + HW, c + HW], 1),   # (a0, b1, c1)
+        ],
+        axis=0,
+    )
+    return {
+        "slice0": slice0.astype(np.int32),
+        "slice1": slice1.astype(np.int32),
+        "side": side.astype(np.int32),
+        "internal": internal.astype(np.int32),
+    }
+
+
+@lru_cache(maxsize=32)
+def slab_faces_concat(H: int, W: int, include_top: bool):
+    """Concatenated face table for a slab: slice0 + side + internal
+    (+ slice1 when include_top, used for the final slab only).
+    Returns (faces (F, 3) int32, slice0_count, slab_face_count)."""
+    f = slab_faces(H, W)
+    parts = [f["slice0"], f["side"], f["internal"]]
+    if include_top:
+        parts.append(f["slice1"])
+    faces = np.concatenate(parts, axis=0)
+    return faces, len(f["slice0"]), len(f["side"]) + len(f["internal"])
+
+
+@lru_cache(maxsize=32)
+def slab_tets(H: int, W: int) -> np.ndarray:
+    """(3 * n_tris, 4) int32 tetrahedra of one slab in local 2-plane ids."""
+    HW = H * W
+    tris = spatial_triangles(H, W).astype(np.int64)
+    a, b, c = tris[:, 0], tris[:, 1], tris[:, 2]
+    tau1 = np.stack([a, b, c, c + HW], 1)
+    tau2 = np.stack([a, b, b + HW, c + HW], 1)
+    tau3 = np.stack([a, a + HW, b + HW, c + HW], 1)
+    return np.concatenate([tau1, tau2, tau3], axis=0).astype(np.int32)
+
+
+# The 4 triangular faces of a tetrahedron (vertex ids sorted ascending
+# within each face because tet vertex tuples are sorted).
+TET_FACES = np.array([[0, 1, 2], [0, 1, 3], [0, 2, 3], [1, 2, 3]], dtype=np.int32)
+
+
+def face_counts(H: int, W: int, T: int) -> dict:
+    """Total face counts for reporting."""
+    f = slab_faces(H, W)
+    n_slice = len(f["slice0"])
+    n_side = len(f["side"])
+    n_internal = len(f["internal"])
+    return {
+        "slice_faces": n_slice * T,
+        "slab_faces": (n_side + n_internal) * (T - 1),
+        "tets": 6 * (H - 1) * (W - 1) * (T - 1),
+    }

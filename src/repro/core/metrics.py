@@ -1,0 +1,50 @@
+"""Evaluation metrics (paper Sec. VII-C)."""
+from __future__ import annotations
+
+import numpy as np
+
+from . import trajectory
+
+
+def compression_ratio(orig_bytes: int, comp_bytes: int) -> float:
+    return orig_bytes / max(comp_bytes, 1)
+
+
+def psnr(u, v, u_rec, v_rec) -> float:
+    """PSNR = 20 log10(range) - 10 log10(MSE), over both components."""
+    d = np.concatenate(
+        [
+            (np.asarray(u, np.float64) - np.asarray(u_rec, np.float64)).ravel(),
+            (np.asarray(v, np.float64) - np.asarray(v_rec, np.float64)).ravel(),
+        ]
+    )
+    mse = float(np.mean(d * d))
+    vals = np.concatenate([np.asarray(u).ravel(), np.asarray(v).ravel()])
+    rng = float(vals.max() - vals.min())
+    if mse == 0.0:
+        return float("inf")
+    return 20.0 * np.log10(max(rng, 1e-300)) - 10.0 * np.log10(mse)
+
+
+def evaluate(u, v, u_rec, v_rec, scale, orig_bytes, comp_bytes,
+             with_tracks: bool = True) -> dict:
+    """Full metric suite: CR, PSNR, FC_t, FC_s, #Traj (orig vs rec)."""
+    from . import fixedpoint
+
+    out = {
+        "CR": compression_ratio(orig_bytes, comp_bytes),
+        "PSNR": psnr(u, v, u_rec, v_rec),
+        "max_err": float(
+            max(
+                np.abs(np.asarray(u, np.float64) - np.asarray(u_rec, np.float64)).max(),
+                np.abs(np.asarray(v, np.float64) - np.asarray(v_rec, np.float64)).max(),
+            )
+        ),
+    }
+    out.update(trajectory.false_cases(u, v, u_rec, v_rec, scale))
+    if with_tracks:
+        uo, vo = fixedpoint.refix(u, v, scale)
+        ur, vr = fixedpoint.refix(u_rec, v_rec, scale)
+        out["n_traj_orig"] = trajectory.extract_tracks(uo, vo)["n_tracks"]
+        out["n_traj_rec"] = trajectory.extract_tracks(ur, vr)["n_tracks"]
+    return out

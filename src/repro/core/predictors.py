@@ -1,0 +1,202 @@
+"""Predictors on the dual-quantized integer field X (quantize.py).
+
+Block-local first-order 3D Lorenzo (3DL)
+----------------------------------------
+The classic Lorenzo predictor reads *reconstructed* causal neighbors,
+which serializes SZ-style encoders.  On the dual-quantized integers the
+predictor feedback disappears, and we additionally re-block the spatial
+context into ``block x block`` tiles (default 16): cells on a tile's
+leading edges use the temporal term only.  Residual
+
+    res_t = D2(X_t) - D2(X_{t-1})   (t > 0),      res_0 = D2(X_0)
+
+with D2 the *tile-local* 2D first-order difference.  Decode is
+
+    X_t = X_{t-1} + C2(res_t),      X_0 = C2(res_0)
+
+with C2 the tile-local 2D inclusive cumsum -- exact integer inverses,
+embarrassingly parallel across (t, tiles).  See DESIGN.md #3.2.
+
+Semi-Lagrangian (SL) predictor (paper Sec. VI-A)
+------------------------------------------------
+Backtrace from each grid point along the previous *reconstructed*
+velocity field: RK2 midpoint when the local CFL displacement d_inf is
+within ``d_max`` pixels, else up to ``n_max`` clamped Euler substeps;
+bilinear-sample frame t-1 at the departure point.  Depends only on frame
+t-1, so the encoder evaluates all frames in parallel; the decoder runs it
+inside the frame scan.  Both sides call the *same* function on the same
+integers, so predictions match bit-for-bit.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_BLOCK = 16
+
+
+# ----------------------------------------------------------------------
+# block-local Lorenzo
+# ----------------------------------------------------------------------
+
+def _shift1(x, axis):
+    """x[..., i-1, ...] with zero at i == 0."""
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (1, 0)
+    sl = [slice(None)] * x.ndim
+    sl[axis] = slice(0, -1)
+    return jnp.pad(x, pad)[tuple(sl)]
+
+
+def _edge_mask(n, block, dtype):
+    idx = jnp.arange(n)
+    return ((idx % block) != 0).astype(dtype)
+
+
+def d2_block(x, block=DEFAULT_BLOCK):
+    """Tile-local 2D first-order difference over the last two axes."""
+    mi = _edge_mask(x.shape[-2], block, x.dtype)[:, None]
+    mj = _edge_mask(x.shape[-1], block, x.dtype)[None, :]
+    xi = _shift1(x, -2) * mi
+    xj = _shift1(x, -1) * mj
+    xij = _shift1(_shift1(x, -2), -1) * (mi * mj)
+    return x - xi - xj + xij
+
+
+def c2_block(r, block=DEFAULT_BLOCK):
+    """Tile-local 2D inclusive cumsum (inverse of d2_block)."""
+
+    def cs(a, axis):
+        n = a.shape[axis]
+        nb = -(-n // block)
+        pad = [(0, 0)] * a.ndim
+        pad[axis] = (0, nb * block - n)
+        ap = jnp.pad(a, pad)
+        shape = list(ap.shape)
+        shape[axis : axis + 1] = [nb, block]
+        ap = ap.reshape(shape)
+        ap = jnp.cumsum(ap, axis=axis + 1)
+        shape2 = list(a.shape)
+        shape2[axis] = nb * block
+        ap = ap.reshape(shape2)
+        sl = [slice(None)] * a.ndim
+        sl[axis] = slice(0, n)
+        return ap[tuple(sl)]
+
+    return cs(cs(r, r.ndim - 2), r.ndim - 1)
+
+
+def lorenzo_encode(x, block=DEFAULT_BLOCK):
+    """res (T, H, W) int64 from X (T, H, W) int64."""
+    d2 = d2_block(x, block)
+    return d2 - _shift1(d2, 0)
+
+
+def lorenzo_decode_frame(prev_x, res_t, block=DEFAULT_BLOCK):
+    return prev_x + c2_block(res_t, block)
+
+
+# ----------------------------------------------------------------------
+# semi-Lagrangian
+# ----------------------------------------------------------------------
+
+def bilinear(f, fi, fj):
+    """Paper Eq. 6: bilinear sample of f (H, W) at float positions."""
+    H, W = f.shape[-2], f.shape[-1]
+    i0 = jnp.clip(jnp.floor(fi), 0, H - 1)
+    j0 = jnp.clip(jnp.floor(fj), 0, W - 1)
+    a = fi - i0
+    b = fj - j0
+    i0 = i0.astype(jnp.int32)
+    j0 = j0.astype(jnp.int32)
+    i1 = jnp.minimum(i0 + 1, H - 1)
+    j1 = jnp.minimum(j0 + 1, W - 1)
+    f00 = f[..., i0, j0]
+    f01 = f[..., i0, j1]
+    f10 = f[..., i1, j0]
+    f11 = f[..., i1, j1]
+    return (
+        (1 - a) * (1 - b) * f00
+        + (1 - a) * b * f01
+        + a * (1 - b) * f10
+        + a * b * f11
+    )
+
+
+def sl_departure(u_prev, v_prev, cfl_x, cfl_y, d_max=2.0, n_max=32):
+    """Departure points (i*, j*) for every grid node (paper Eqs. 4, 7-9)."""
+    H, W = u_prev.shape
+    ii, jj = jnp.meshgrid(
+        jnp.arange(H, dtype=u_prev.dtype),
+        jnp.arange(W, dtype=u_prev.dtype),
+        indexing="ij",
+    )
+    u0 = u_prev
+    v0 = v_prev
+    d_inf = jnp.maximum(jnp.abs(u0) * cfl_x, jnp.abs(v0) * cfl_y)
+
+    # RK2 midpoint
+    i_h = jnp.clip(ii - 0.5 * v0 * cfl_y, 0.0, H - 1.0)
+    j_h = jnp.clip(jj - 0.5 * u0 * cfl_x, 0.0, W - 1.0)
+    u_h = bilinear(u_prev, i_h, j_h)
+    v_h = bilinear(v_prev, i_h, j_h)
+    i_rk = ii - v_h * cfl_y
+    j_rk = jj - u_h * cfl_x
+
+    # adaptive substepping
+    n_sub = jnp.clip(jnp.ceil(d_inf / d_max), 1.0, float(n_max))
+
+    def body(s, pos):
+        pi, pj = pos
+        us = bilinear(u_prev, pi, pj)
+        vs = bilinear(v_prev, pi, pj)
+        active = s < n_sub
+        pi = jnp.where(active, jnp.clip(pi - vs * cfl_y / n_sub, 0.0, H - 1.0), pi)
+        pj = jnp.where(active, jnp.clip(pj - us * cfl_x / n_sub, 0.0, W - 1.0), pj)
+        return (pi, pj)
+
+    pi, pj = jax.lax.fori_loop(0, n_max, body, (ii, jj))
+
+    use_rk = d_inf <= d_max
+    i_star = jnp.clip(jnp.where(use_rk, i_rk, pi), 0.0, H - 1.0)
+    j_star = jnp.clip(jnp.where(use_rk, j_rk, pj), 0.0, W - 1.0)
+    return i_star, j_star
+
+
+def sl_predict_frame(xu_prev, xv_prev, grid_to_float, cfl_x, cfl_y,
+                     d_max=2.0, n_max=32):
+    """Predict frame t's integer grid values from frame t-1's X fields.
+
+    xu_prev, xv_prev: int64 (H, W) base-grid integers of frame t-1.
+    grid_to_float: g / S -- converts base-grid ints to data units.
+    Returns (pu, pv) int64 predictions on the base grid.
+    """
+    u_prev = xu_prev.astype(jnp.float64) * grid_to_float
+    v_prev = xv_prev.astype(jnp.float64) * grid_to_float
+    i_s, j_s = sl_departure(u_prev, v_prev, cfl_x, cfl_y, d_max, n_max)
+    pu = bilinear(u_prev, i_s, j_s) / grid_to_float
+    pv = bilinear(v_prev, i_s, j_s) / grid_to_float
+    return jnp.rint(pu).astype(jnp.int64), jnp.rint(pv).astype(jnp.int64)
+
+
+def sl_encode(xu, xv, grid_to_float, cfl_x, cfl_y, d_max=2.0, n_max=32):
+    """SL residuals for all frames (frame 0 copies the 3DL convention of
+    spatial-only coding and is never selected by MoP)."""
+    predict = partial(
+        sl_predict_frame,
+        grid_to_float=grid_to_float,
+        cfl_x=cfl_x,
+        cfl_y=cfl_y,
+        d_max=d_max,
+        n_max=n_max,
+    )
+    pu, pv = jax.vmap(predict)(xu[:-1], xv[:-1])
+    res_u = xu[1:] - pu
+    res_v = xv[1:] - pv
+    zero = jnp.zeros_like(xu[:1])
+    return (
+        jnp.concatenate([zero, res_u], axis=0),
+        jnp.concatenate([zero, res_v], axis=0),
+    )

@@ -1,0 +1,128 @@
+"""Critical-point trajectory extraction and false-case counting.
+
+Mirrors the FTK-style procedure the paper uses for evaluation
+(Sec. VII-G): every crossed face of the space-time tet mesh yields a
+crossing node; within each tetrahedron the (0 or 2, under SoS) crossed
+faces are joined by a zero-set segment; segments glue across tets sharing
+a crossed face.  Union-find over crossing nodes gives the track set.
+Runs host-side (numpy + python union-find over the sparse crossings).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import fixedpoint, grid, sos
+
+
+def face_predicate_tables(ufp, vfp):
+    """All face predicates, numpy, organized per slab.
+
+    Returns dict with 'slice' (T, Fs) and 'slab' (T-1, Fb) bool arrays.
+    (Same face enumeration as ebound.all_face_predicates, but computed
+    with numpy so host tooling does not need jax.)
+    """
+    T, H, W = ufp.shape
+    HW = H * W
+    u2 = ufp.reshape(T, HW)
+    v2 = vfp.reshape(T, HW)
+    slice_tab = grid.slab_faces(H, W)["slice0"].astype(np.int64)
+    sf = grid.slab_faces(H, W)
+    slab_tab = np.concatenate([sf["side"], sf["internal"]], 0).astype(np.int64)
+
+    slice_pred = np.zeros((T, len(slice_tab)), dtype=bool)
+    for t in range(T):
+        fu = u2[t][slice_tab]
+        fv = v2[t][slice_tab]
+        idx = slice_tab + t * HW
+        slice_pred[t] = sos.face_crossed_vals(np, fu, fv, idx)
+
+    slab_pred = np.zeros((T - 1, len(slab_tab)), dtype=bool)
+    for t in range(T - 1):
+        vals_u = np.concatenate([u2[t], u2[t + 1]])
+        vals_v = np.concatenate([v2[t], v2[t + 1]])
+        fu = vals_u[slab_tab]
+        fv = vals_v[slab_tab]
+        idx = slab_tab + t * HW
+        slab_pred[t] = sos.face_crossed_vals(np, fu, fv, idx)
+    return {"slice": slice_pred, "slab": slab_pred}
+
+
+class _UnionFind:
+    def __init__(self):
+        self.parent = {}
+
+    def find(self, x):
+        p = self.parent.setdefault(x, x)
+        while p != self.parent[p]:
+            self.parent[p] = self.parent[self.parent[p]]
+            p = self.parent[p]
+        self.parent[x] = p
+        return p
+
+    def union(self, a, b):
+        ra, rb = self.find(a), self.find(b)
+        if ra != rb:
+            self.parent[ra] = rb
+
+
+def _face_key(verts):
+    """Canonical global face key (verts already sorted ascending)."""
+    return (int(verts[0]), int(verts[1]), int(verts[2]))
+
+
+def extract_tracks(ufp, vfp):
+    """Track statistics of the zero set.
+
+    Returns dict: n_tracks, n_crossings, crossings per kind.
+    """
+    T, H, W = ufp.shape
+    HW = H * W
+    u2 = ufp.reshape(T, HW)
+    v2 = vfp.reshape(T, HW)
+    tets = grid.slab_tets(H, W).astype(np.int64)  # (Ntet, 4) local 2-plane ids
+    tet_faces = tets[:, grid.TET_FACES]           # (Ntet, 4, 3)
+
+    uf = _UnionFind()
+    crossed_total = 0
+
+    for t in range(T - 1):
+        vals_u = np.concatenate([u2[t], u2[t + 1]])
+        vals_v = np.concatenate([v2[t], v2[t + 1]])
+        fu = vals_u[tet_faces]                    # (Ntet, 4, 3)
+        fv = vals_v[tet_faces]
+        idx = tet_faces + t * HW
+        crossed = sos.face_crossed_vals(np, fu, fv, idx)  # (Ntet, 4)
+        n_crossed = crossed.sum(axis=1)
+        # Under SoS each tet has 0 or 2 crossed faces (Lemma 1).
+        active = np.nonzero(n_crossed == 2)[0]
+        crossed_total += int(crossed.sum())
+        for ti in active:
+            fa, fb = np.nonzero(crossed[ti])[0]
+            ka = _face_key(idx[ti, fa])
+            kb = _face_key(idx[ti, fb])
+            uf.union(ka, kb)
+
+    roots = {uf.find(k) for k in uf.parent}
+    return {
+        "n_tracks": len(roots),
+        "n_crossing_nodes": len(uf.parent),
+        "n_crossed_incidences": crossed_total,
+    }
+
+
+def false_cases(u_orig, v_orig, u_rec, v_rec, scale):
+    """FC_t / FC_s / per-time CP counts, per the paper's metrics."""
+    uo, vo = fixedpoint.refix(u_orig, v_orig, scale)
+    ur, vr = fixedpoint.refix(u_rec, v_rec, scale)
+    p0 = face_predicate_tables(uo, vo)
+    p1 = face_predicate_tables(ur, vr)
+    fc_t = int((p0["slice"] ^ p1["slice"]).sum())
+    fc_s = int((p0["slab"] ^ p1["slab"]).sum())
+    return {
+        "FC_t": fc_t,
+        "FC_s": fc_s,
+        "CP_t_orig": int(p0["slice"].sum()),
+        "CP_t_rec": int(p1["slice"].sum()),
+        "CP_slab_orig": int(p0["slab"].sum()),
+        "CP_slab_rec": int(p1["slab"].sum()),
+    }

@@ -1,0 +1,348 @@
+"""Trip-count-aware cost extraction from optimized HLO text.
+
+``compiled.cost_analysis()`` visits every computation once: a
+``lax.scan`` over 64 layers is costed as ONE layer (verified
+empirically; XLA's HloCostAnalysis does not multiply while bodies by
+their trip count).  For a scanned-layer transformer that undercounts
+FLOPs by orders of magnitude, which would poison the roofline.
+
+XLA's optimized HLO, however, annotates every bounded loop with
+``backend_config={"known_trip_count":{"n":"64"}}``.  This module parses
+the per-device optimized module text and aggregates, weighting every
+computation by the product of trip counts on its call path:
+
+  * FLOPs    -- dot ops: 2 * |result| * contracted-dim product (batch and
+                free dims are in |result|); elementwise flops approximated
+                as 1/element of fusion outputs (transformers are
+                dot-dominated; softmax/norm contribute O(1%)).
+  * HBM bytes -- sum of operand+result sizes of *top-level* ops in each
+                computation (fusion internals live in registers/VMEM,
+                matching HloCostAnalysis's fusion treatment).
+  * collective bytes -- operand sizes of all-reduce / all-gather /
+                reduce-scatter / all-to-all / collective-permute ops,
+                trip-weighted.
+
+Everything is computed on the PER-DEVICE partitioned module, so results
+are per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_TOKEN = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HEADER = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*[^{]+\{\s*$"
+)
+_NAME_EQ = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+
+
+def _parse_op_line(line):
+    """Procedural parse of '%name = TYPE opcode(...)rest' -- regexes fail
+    on tuple types containing '/*index=5*/' comments."""
+    m = _NAME_EQ.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    n = len(line)
+    if i < n and line[i] == "(":          # tuple type: scan to match
+        depth = 0
+        j = i
+        while j < n:
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        type_str = line[i : j + 1]
+        i = j + 1
+    else:                                  # array type token
+        t = re.match(r"[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?", line[i:])
+        if not t:
+            return None
+        type_str = t.group(0)
+        i += t.end()
+    o = re.match(r"\s*([\w\-]+)\(", line[i:])
+    if not o:
+        return None
+    opcode = o.group(1)
+    rest = line[i + o.end():]
+    return name, type_str, opcode, rest
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_SINGLE = re.compile(r"(?:body|condition|calls|to_apply)=%?([\w.\-]+)")
+_CALLED_LIST = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _called_names(rest: str):
+    names = list(_CALLED_SINGLE.findall(rest))
+    for grp in _CALLED_LIST.findall(rest):
+        names += [n.strip().lstrip("%") for n in grp.split(",") if n.strip()]
+    return names
+
+COLLECTIVE_OPS = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+    "all-reduce-start", "all-gather-start", "collective-permute-start",
+}
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "after-all", "partition-id", "replica-id",
+    "bitcast-convert", "iota",
+}
+
+# Pure elementwise ops fuse into their consumers on TPU; the CPU backend
+# leaves many of them unfused, which would wildly inflate the HBM-bytes
+# estimate.  We simulate TPU fusion by not charging bytes for top-level
+# elementwise ops (their large inputs are dot/fusion results, which are
+# charged where produced).  They still contribute 1 flop/element.
+_ELEMENTWISE_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "power", "exponential", "log", "tanh", "rsqrt", "sqrt", "negate",
+    "abs", "sign", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "convert", "compare", "select", "and", "or",
+    "xor", "not", "clamp", "broadcast", "reshape", "exponential-minus-one",
+    "log-plus-one", "logistic", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "is-finite", "atan2", "remainder",
+}
+
+
+def _elem_count(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_TOKEN.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt in _DTYPE_BYTES:
+            total += _elem_count(dims) * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_TOKEN.finditer(type_str):
+        if m.group(1) in _DTYPE_BYTES:
+            total += _elem_count(m.group(2))
+    return total
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str            # text after the opening paren (operands + attrs)
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: List[_Op]
+    is_entry: bool
+
+
+def _split_computations(text: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    for line in text.splitlines():
+        h = _COMP_HEADER.match(line)
+        if h and line.rstrip().endswith("{"):
+            cur = _Computation(h.group(2), [], bool(h.group(1)))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        parsed = _parse_op_line(line)
+        if parsed and cur is not None:
+            name, type_str, opcode, rest = parsed
+            # operand names: %refs inside the top-level parens
+            depth = 1
+            arg_text = []
+            for ch in rest:
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                arg_text.append(ch)
+            args = "".join(arg_text)
+            operands = re.findall(r"%([\w.\-]+)", args)
+            cur.ops.append(_Op(name, type_str, opcode, rest, operands))
+    return comps
+
+
+def _dot_flops(op: _Op, shapes: Dict[str, str]) -> float:
+    result_elems = shape_elems(op.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    if not m or not op.operands:
+        return 2.0 * result_elems  # degenerate
+    lhs_type = shapes.get(op.operands[0], "")
+    tok = _SHAPE_TOKEN.search(lhs_type)
+    if not tok:
+        return 2.0 * result_elems
+    lhs_dims = [int(d) for d in tok.group(2).split(",") if d]
+    contracted = 1
+    for idx in (int(i) for i in m.group(1).split(",") if i):
+        if idx < len(lhs_dims):
+            contracted *= lhs_dims[idx]
+    return 2.0 * result_elems * contracted
+
+
+_PARAM_IDX = re.compile(r"^\s*(\d+)\s*\)")
+
+
+def _fusion_windowed_discount(op, comps, shapes):
+    """Bytes to subtract from a fusion's operand charge: operands that
+    the fused computation only reads through a dynamic-slice window
+    (classic scan-xs access) are charged the window, not the buffer."""
+    discount = 0
+    for callee in _called_names(op.rest):
+        comp = comps.get(callee)
+        if comp is None:
+            continue
+        # parameter name -> fusion operand index
+        param_idx = {}
+        for o in comp.ops:
+            if o.opcode == "parameter":
+                m = _PARAM_IDX.search(o.rest)
+                if m:
+                    param_idx[o.name] = int(m.group(1))
+        sliced_params = set()
+        window = {}
+        for o in comp.ops:
+            if o.opcode == "dynamic-slice" and o.operands:
+                src = o.operands[0]
+                if src in param_idx:
+                    sliced_params.add(src)
+                    window[src] = shape_bytes(o.type_str)
+        # a parameter read ONLY via dynamic-slice gets the discount
+        for o in comp.ops:
+            if o.opcode in ("dynamic-slice", "parameter"):
+                continue
+            for src in list(sliced_params):
+                if src in o.operands:
+                    sliced_params.discard(src)
+        for src in sliced_params:
+            idx = param_idx[src]
+            if idx < len(op.operands):
+                full = shape_bytes(shapes.get(op.operands[idx], ""))
+                discount += max(full - 2 * window.get(src, 0), 0)
+    return discount
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    coll_breakdown: Dict[str, float] = dataclasses.field(default_factory=dict)
+    loop_info: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
+
+
+def analyze_text(text: str) -> HloCost:
+    comps = _split_computations(text)
+    # global symbol table (names are unique module-wide in HLO dumps)
+    shapes: Dict[str, str] = {}
+    for c in comps.values():
+        for op in c.ops:
+            shapes[op.name] = op.type_str
+
+    cost = HloCost()
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return cost
+
+    def visit(comp: _Computation, mult: float, in_fusion: bool):
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "dot":
+                cost.flops += mult * _dot_flops(op, shapes)
+            elif oc == "convolution":
+                # spatial conv: 2 * |out| * (in_ch * kernel_elems)
+                cost.flops += mult * 2.0 * shape_elems(op.type_str) * 64
+            elif oc not in _SKIP_BYTES_OPS and not in_fusion:
+                # elementwise estimate: 1 flop per output element
+                cost.flops += mult * shape_elems(op.type_str)
+
+            base = oc.replace("-start", "")
+            if base in ("all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all", "collective-permute",
+                        "ragged-all-to-all") and not oc.endswith("-done"):
+                b = sum(shape_bytes(shapes.get(o, "")) for o in op.operands)
+                if b == 0:
+                    b = shape_bytes(op.type_str)
+                cost.collective_bytes += mult * b
+                cost.coll_breakdown[base] = (
+                    cost.coll_breakdown.get(base, 0.0) + mult * b
+                )
+
+            if (not in_fusion and oc not in _SKIP_BYTES_OPS
+                    and oc not in _ELEMENTWISE_OPS):
+                if oc in ("dynamic-slice", "gather"):
+                    # reads only the sliced window, not the full operand
+                    # (charging the operand would bill scans for the whole
+                    # stacked xs buffer on every iteration)
+                    b = 2 * shape_bytes(op.type_str)
+                elif oc in ("dynamic-update-slice", "scatter"):
+                    # writes only the update window (operand 1)
+                    upd = shapes.get(op.operands[1], "") if len(op.operands) > 1 else ""
+                    b = 2 * shape_bytes(upd) if upd else shape_bytes(op.type_str)
+                else:
+                    b = shape_bytes(op.type_str) + sum(
+                        shape_bytes(shapes.get(o, "")) for o in op.operands
+                    )
+                    # fusions rooted in (dynamic-)update-slice write/read
+                    # only the window; the full aliased buffer appears as
+                    # both an operand and the result -- back both out.
+                    if oc == "fusion" and "dynamic-update-slice" in op.name:
+                        b = max(b - 2 * shape_bytes(op.type_str), 0)
+                    elif oc == "fusion":
+                        # operands consumed inside the fused computation
+                        # through a dynamic-slice are windowed reads
+                        # (scan xs): charge the window, not the buffer.
+                        b -= _fusion_windowed_discount(op, comps, shapes)
+                        b = max(b, 0)
+                cost.bytes += mult * b
+
+            # recurse into called computations
+            if oc == "while":
+                t = _TRIP.search(op.rest)
+                trip = int(t.group(1)) if t else 1
+                cost.loop_info.append((op.name, trip))
+                for n in _called_names(op.rest):
+                    if n in comps:
+                        visit(comps[n], mult * trip, in_fusion)
+            elif oc == "fusion":
+                for n in _called_names(op.rest):
+                    if n in comps:
+                        visit(comps[n], mult, True)
+            elif oc in ("call", "conditional", "custom-call"):
+                for n in _called_names(op.rest):
+                    if n in comps:
+                        visit(comps[n], mult, in_fusion)
+            # reduce/sort/map comparators: skipped (negligible)
+
+    visit(entry, 1.0, False)
+    return cost

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compression hot spots.
+
+Each subpackage ships:
+    kernel.py -- pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+    ops.py    -- jit'd dispatch wrapper (TPU -> kernel, else ref)
+    ref.py    -- pure-jnp oracle
+
+Kernels are validated in interpret mode on CPU (exact equality for the
+integer kernels); the dry-run model path never requires them (the
+framework is pure-JAX functional on any backend).
+"""

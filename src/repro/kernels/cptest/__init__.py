@@ -1,0 +1,1 @@
+from .ops import face_crossed_batch  # noqa: F401

@@ -1,0 +1,12 @@
+"""Oracle: int64 SoS face predicate (core.sos on jnp)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core import sos
+
+
+def face_crossed(u, v, idx):
+    """u, v (N, 3) int64 values; idx (N, 3) int64.  Returns (N,) bool."""
+    return sos.face_crossed_vals(jnp, u.astype(jnp.int64),
+                                 v.astype(jnp.int64), idx.astype(jnp.int64))

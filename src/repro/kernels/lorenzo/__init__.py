@@ -1,0 +1,1 @@
+from .ops import dualquant_lorenzo_residual  # noqa: F401

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle: fused dual-quantization + block-local 3D Lorenzo
+residual for one frame pair (matches core.quantize + core.predictors,
+int32 domain)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core import predictors
+
+
+def round_div(d, g, k):
+    """round-half-away(d / (g << k)), exact in integer arithmetic:
+    ((|d| + q/2) >> k) // g with q = g << k (g even)."""
+    q_half = (g << k) >> 1
+    mag = ((jnp.abs(d) + q_half) >> k) // g
+    return jnp.sign(d) * mag
+
+
+def dual_quantize_frame(dfp, k, lossless, xi_unit):
+    g = jnp.int32(2 * xi_unit)
+    kk = jnp.maximum(k, 0)
+    x = round_div(dfp, g, kk) << kk
+    x0 = round_div(dfp, g, jnp.zeros_like(kk))
+    return jnp.where(lossless, x0, x)
+
+
+def residual_frame_pair(dfp_t, dfp_p, k_t, k_p, ll_t, ll_p, xi_unit,
+                        is_first, block=16):
+    """Residual of frame t given frame t-1 (all int32, (H, W))."""
+    x_t = dual_quantize_frame(dfp_t, k_t, ll_t, xi_unit)
+    x_p = dual_quantize_frame(dfp_p, k_p, ll_p, xi_unit)
+    d2_t = predictors.d2_block(x_t, block)
+    d2_p = predictors.d2_block(x_p, block)
+    return jnp.where(is_first, d2_t, d2_t - d2_p)

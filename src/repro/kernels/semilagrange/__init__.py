@@ -1,0 +1,1 @@
+from .ops import sl_predict  # noqa: F401

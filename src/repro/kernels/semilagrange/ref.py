@@ -1,0 +1,17 @@
+"""Oracle: float32 semi-Lagrangian prediction (core.predictors math in
+the kernel's dtype)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core import predictors
+
+
+def sl_predict(u_prev, v_prev, cfl_x, cfl_y, d_max=2.0, n_max=8):
+    u32 = u_prev.astype(jnp.float32)
+    v32 = v_prev.astype(jnp.float32)
+    i_s, j_s = predictors.sl_departure(u32, v32, cfl_x, cfl_y, d_max, n_max)
+    return (
+        predictors.bilinear(u32, i_s, j_s),
+        predictors.bilinear(v32, i_s, j_s),
+    )

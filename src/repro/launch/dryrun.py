@@ -1,0 +1,279 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the
+device count at first init).  512 placeholder host devices back the
+production meshes:
+
+    single-pod : (16, 16)      ("data", "model")   256 chips
+    multi-pod  : (2, 16, 16)   ("pod", "data", "model")   512 chips
+
+For each runnable cell this script builds the real step function
+(train_step with AdamW + microbatching, prefill, or decode_step),
+lowers it with ShapeDtypeStruct inputs carrying NamedShardings,
+compiles, and records memory_analysis / cost_analysis / collective
+bytes for EXPERIMENTS.md (the roofline reads these).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch yi_6b]
+        [--shape train_4k] [--mesh single|multi|both] [--out out.json]
+"""
+import argparse       # noqa: E402
+import json           # noqa: E402
+import sys            # noqa: E402
+import time           # noqa: E402
+import traceback      # noqa: E402
+
+import jax            # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+import repro.configs as C                      # noqa: E402
+from repro import roofline                     # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.transformer import build_model    # noqa: E402
+from repro.parallel import sharding as shd          # noqa: E402
+from repro.train import optimizer as opt            # noqa: E402
+from repro.train.train_step import make_train_step  # noqa: E402
+
+
+def _axis_size(mesh, axes):
+    if axes is None:
+        return 1
+    if isinstance(axes, (tuple, list)):
+        out = 1
+        for a in axes:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axes]
+
+
+def _fit_spec(spec, shape, mesh):
+    """Drop spec axes that do not divide the dimension (explicit input
+    shardings require exact divisibility; replication is the correct
+    fallback -- GSPMD pads internal tensors, but inputs must be exact)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, axes in zip(shape, parts):
+        if axes is not None and dim % _axis_size(mesh, axes) != 0:
+            axes = None
+        out.append(axes)
+    return P(*out)
+
+
+def _attach(sds_tree, shardings):
+    def one(s, sh):
+        spec = _fit_spec(sh.spec, s.shape, sh.mesh)
+        return jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(sh.mesh, spec)
+        )
+
+    return jax.tree.map(one, sds_tree, shardings)
+
+
+def _batch_shardings(batch_specs, mesh, rules):
+    def spec(name, leaf):
+        nd = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+        if name == "position_ids":                  # (3, B, S)
+            return P(None, rules.dp, None)
+        return P(rules.dp, *([None] * (nd - 1)))
+
+    return {
+        k: NamedSharding(mesh, spec(k, v)) for k, v in batch_specs.items()
+    }
+
+
+def _cache_shardings(cache_sds, mesh, rules, seq_sharded):
+    tp_size = mesh.shape[rules.tp] if rules.tp else 1
+
+    def kv_spec(shape):
+        # (L, B, S, Hkv, Dh).  Preferred: batch over dp, heads over tp.
+        # When Hkv doesn't divide tp, shard the HEAD DIM (contracting-dim
+        # TP); sharding S would put the decode cache update across shards
+        # and trigger full rematerialization (perf iteration H4).  For
+        # long-context (batch = 1) S is sharded over every available axis
+        # (the update crosses shards once per step on a tiny slice).
+        if seq_sharded:
+            axes = tuple(a for a in (rules.fsdp, rules.tp) if a)
+            return P(None, None, axes, None, None)
+        if shape[3] % tp_size == 0:
+            return P(None, rules.dp, None, rules.tp, None)
+        if shape[4] % tp_size == 0:
+            return P(None, rules.dp, None, None, rules.tp)
+        return P(None, rules.dp, None, None, None)
+
+    def spec(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        nd = len(leaf.shape)
+        if name in ("k", "v", "ek", "ev"):
+            return NamedSharding(mesh, kv_spec(leaf.shape))
+        if name == "length":
+            return NamedSharding(mesh, P())
+        if name == "wkv":                            # (L, B, H, dk, dv)
+            return NamedSharding(mesh, P(None, rules.dp, rules.tp, None, None))
+        if name in ("conv", "ssm"):                  # (G, g-1, B, ..)
+            return NamedSharding(mesh, P(None, None, rules.dp))
+        if name in ("tm_x", "cm_x"):                 # (L, B, 1, D)
+            return NamedSharding(mesh, P(None, rules.dp, None, None))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(spec, cache_sds)
+
+
+def lower_cell(arch_mod, shape_name, mesh, mesh_name):
+    cfg = arch_mod.CONFIG
+    cell = arch_mod.CELLS[shape_name]
+    arch = cfg.name
+    if cell.skip:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skip", "reason": cell.skip}
+
+    model = build_model(cfg)
+    rules = shd.rules_for_mesh(mesh)
+    n_chips = int(np_prod(mesh.devices.shape))
+
+    t0 = time.perf_counter()
+    with mesh, shd.use_rules(rules):
+        params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        pshard = shd.param_shardings(params_sds, mesh)
+        params_in = _attach(params_sds, pshard)
+
+        batch_specs = C.input_specs(cfg, cell)
+        bshard = _batch_shardings(batch_specs, mesh, rules)
+        batch_in = _attach(batch_specs, bshard)
+
+        if cell.kind == "train":
+            ocfg = opt.AdamWConfig(state_dtype=cfg.opt_state_dtype)
+            # never split the global batch below one example per
+            # data-parallel shard (GSPMD would pad: half the chips would
+            # compute padding -- perf iteration H9)
+            dp_size = rules.dp_size
+            mb = max(min(cell.microbatches, cell.global_batch // dp_size), 1)
+            step = make_train_step(model, ocfg, mb)
+            opt_sds = jax.eval_shape(
+                lambda p: {"adam": opt.init_state(p, ocfg)}, params_sds
+            )
+            oshard = {
+                "adam": {
+                    "m": pshard, "v": pshard,
+                    "step": NamedSharding(mesh, P()),
+                }
+            }
+            opt_in = _attach(opt_sds, oshard)
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+                params_in, opt_in, batch_in
+            )
+        elif cell.kind == "prefill":
+            lowered = jax.jit(model.prefill).lower(params_in, batch_in)
+        else:  # decode
+            kv_dt = jnp.dtype(cell.kv_dtype)
+            with shd.use_rules(None):
+                if cfg.is_encoder_decoder:
+                    cache_sds = jax.eval_shape(
+                        lambda: model.init_cache(
+                            cell.global_batch, cell.cache_len,
+                            enc_len=cell.enc_len, dtype=kv_dt)
+                    )
+                elif cfg.family == "ssm":
+                    cache_sds = jax.eval_shape(
+                        lambda: model.init_cache(cell.global_batch)
+                    )
+                else:
+                    cache_sds = jax.eval_shape(
+                        lambda: model.init_cache(
+                            cell.global_batch, cell.cache_len, dtype=kv_dt)
+                    )
+            cshard = _cache_shardings(cache_sds, mesh, rules,
+                                      cell.seq_sharded_cache)
+            cache_in = _attach(cache_sds, cshard)
+            lowered = jax.jit(model.decode_step, donate_argnums=(2,)).lower(
+                params_in, batch_in, cache_in
+            )
+
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+        rl = roofline.analyze(
+            compiled, arch, shape_name, mesh_name, n_chips, cfg, cell
+        )
+        row = rl.row()
+        row.update({
+            "status": "ok",
+            "kind": cell.kind,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+        })
+        mem = row["memory"].get("resident_bytes")
+        print(
+            f"[dryrun] {arch:24s} {shape_name:12s} {mesh_name:6s} OK  "
+            f"compile={t_compile:6.1f}s  flops/dev={rl.flops_per_device:.3e}  "
+            f"resident={mem / 2**30 if mem else -1:.2f}GiB  "
+            f"bottleneck={rl.bottleneck}",
+            flush=True,
+        )
+        return row
+
+
+def np_prod(t):
+    out = 1
+    for x in t:
+        out *= int(x)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch module name")
+    ap.add_argument("--shape", default=None, choices=list(C.SHAPE_TABLE))
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    assert len(jax.devices()) == 512, (
+        "dry-run needs 512 placeholder devices; do not import jax before "
+        "this module sets XLA_FLAGS"
+    )
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", make_production_mesh(multi_pod=True)))
+
+    archs = [args.arch] if args.arch else C.ARCHS
+    shapes = [args.shape] if args.shape else list(C.SHAPE_TABLE)
+
+    rows = []
+    failures = 0
+    for arch_name in archs:
+        mod = C.get(arch_name)
+        for mesh_name, mesh in meshes:
+            for shape_name in shapes:
+                try:
+                    rows.append(lower_cell(mod, shape_name, mesh, mesh_name))
+                except Exception:
+                    failures += 1
+                    print(f"[dryrun] {arch_name} {shape_name} {mesh_name} "
+                          f"FAILED", flush=True)
+                    traceback.print_exc()
+                    rows.append({
+                        "arch": arch_name, "shape": shape_name,
+                        "mesh": mesh_name, "status": "fail",
+                        "error": traceback.format_exc()[-2000:],
+                    })
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+        print(f"[dryrun] wrote {args.out}")
+    ok = sum(1 for r in rows if r.get("status") == "ok")
+    skip = sum(1 for r in rows if r.get("status") == "skip")
+    print(f"[dryrun] {ok} ok, {skip} skip, {failures} fail")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

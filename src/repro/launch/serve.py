@@ -1,0 +1,134 @@
+"""Batched serving driver: prefill + decode with continuous batching.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi_6b --smoke \
+        --requests 16 --batch 4 --prompt-len 32 --gen-len 16
+
+A fixed pool of ``--batch`` slots decodes in lockstep; finished requests
+free their slot and the next queued request is prefilled into it
+(continuous batching).  Reports per-phase latency and decode
+tokens/sec.  Works for every decoder arch (dense/moe/ssm/hybrid/vlm);
+enc-dec (whisper) serves one utterance batch per prefill.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.models.transformer import build_model
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1_5_0_5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    mod = C.get(args.arch)
+    cfg = mod.SMOKE if args.smoke else mod.CONFIG
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+
+    decode = jax.jit(model.decode_step)
+    prefill = jax.jit(model.prefill)
+
+    if cfg.is_encoder_decoder:
+        frames = jnp.asarray(rng.normal(
+            0, 1, (args.batch, args.prompt_len, cfg.d_model)
+        ).astype(np.float32))
+        toks = jnp.asarray(rng.integers(
+            0, cfg.vocab, (args.batch, 8)).astype(np.int32))
+        t0 = time.perf_counter()
+        logits, cache = prefill(params, {"frames": frames, "tokens": toks})
+        # pad self cache to max_len
+        full = model.init_cache(args.batch, args.max_len,
+                                enc_len=args.prompt_len)
+        full["k"] = full["k"].at[:, :, :8].set(cache["k"])
+        full["v"] = full["v"].at[:, :, :8].set(cache["v"])
+        full["ek"], full["ev"] = cache["ek"], cache["ev"]
+        full["length"] = cache["length"]
+        cache = full
+        t1 = time.perf_counter()
+        n_gen = 0
+        for _ in range(args.gen_len):
+            nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            logits, cache = decode(params, {"tokens": nxt}, cache)
+            n_gen += args.batch
+        t2 = time.perf_counter()
+        print(f"[serve] enc-dec prefill {t1 - t0:.3f}s, "
+              f"decode {n_gen / (t2 - t1):.1f} tok/s")
+        return 0
+
+    def new_request(rid):
+        if cfg.embedding_inputs:
+            emb = rng.normal(0, 1, (1, args.prompt_len, cfg.d_model))
+            return {
+                "embeds": jnp.asarray(emb.astype(np.float32)).astype(jnp.bfloat16),
+                "position_ids": jnp.broadcast_to(
+                    jnp.arange(args.prompt_len, dtype=jnp.int32)[None, None],
+                    (3, 1, args.prompt_len)),
+            }
+        toks = rng.integers(0, cfg.vocab, (1, args.prompt_len))
+        return {"tokens": jnp.asarray(toks.astype(np.int32))}
+
+    # continuous batching with per-slot caches (batch=1 per slot keeps the
+    # demo simple; production would use a paged batched cache)
+    queue = list(range(args.requests))
+    slots = [None] * args.batch   # (rid, cache, logits, generated)
+    done = 0
+    t0 = time.perf_counter()
+    decoded_tokens = 0
+    prefills = 0
+    while done < args.requests:
+        for s in range(args.batch):
+            if slots[s] is None and queue:
+                rid = queue.pop(0)
+                logits, cache = prefill(params, new_request(rid))
+                if not (cfg.family == "ssm"):
+                    full = model.init_cache(1, args.max_len)
+                    pl_len = int(cache["length"])
+                    full["k"] = full["k"].at[:, :, :pl_len].set(cache["k"])
+                    full["v"] = full["v"].at[:, :, :pl_len].set(cache["v"])
+                    full["length"] = cache["length"]
+                    cache = full
+                slots[s] = [rid, cache, logits, 0]
+                prefills += 1
+        for s in range(args.batch):
+            if slots[s] is None:
+                continue
+            rid, cache, logits, n = slots[s]
+            nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            if cfg.embedding_inputs:
+                step_in = {"embeds": jnp.zeros(
+                    (1, 1, cfg.d_model), jnp.bfloat16)}
+            else:
+                step_in = {"tokens": nxt}
+            logits, cache = decode(params, step_in, cache)
+            decoded_tokens += 1
+            n += 1
+            if n >= args.gen_len:
+                slots[s] = None
+                done += 1
+            else:
+                slots[s] = [rid, cache, logits, n]
+    dt = time.perf_counter() - t0
+    print(f"[serve] {args.requests} requests, {prefills} prefills, "
+          f"{decoded_tokens} tokens in {dt:.2f}s "
+          f"({decoded_tokens / dt:.1f} tok/s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,339 @@
+"""Shared layer primitives: norms, rotary embeddings (RoPE / M-RoPE),
+GQA attention (full, query-chunked, decode), MLPs, embeddings.
+
+Conventions
+-----------
+* params are plain nested dicts of jnp arrays (a pytree), `param_dtype`
+  (default f32) at rest, cast to `dtype` (default bf16) at use.
+* activations: (B, S, D).  Attention works on (B, S, Hkv, G, Dh) grouped
+  heads so GQA never materializes repeated KV.
+* KV caches store un-repeated KV heads: (B, S, Hkv, Dh).
+* every function is functional + jit/scan friendly; dtypes are explicit
+  everywhere (the repo enables jax x64 globally for the compression
+  library, so nothing here may rely on default dtypes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ----------------------------------------------------------------- init
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms
+
+def rmsnorm(x, scale, eps=1e-6):
+    """RMS statistics accumulate in f32 via the dot's accumulator
+    (preferred_element_type) -- no f32 copy of the activation is ever
+    materialized (perf iteration H5; REPRO_PERF_BASELINE=1 restores the
+    classic f32-materializing form)."""
+    from .. import perfflags
+
+    if perfflags.BASELINE:
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps)
+        return (out * scale.astype(jnp.float32)).astype(x.dtype)
+    var = jnp.einsum(
+        "...d,...d->...", x, x, preferred_element_type=jnp.float32
+    ) / x.shape[-1]
+    inv = jax.lax.rsqrt(var + eps)[..., None].astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_params(cfg: ModelConfig, key):
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((cfg.d_model,), pdtype_of(cfg))}
+    return {
+        "scale": jnp.ones((cfg.d_model,), pdtype_of(cfg)),
+        "bias": jnp.zeros((cfg.d_model,), pdtype_of(cfg)),
+    }
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+# ----------------------------------------------------------------- rotary
+
+def rope_angles(positions, dim, theta):
+    """positions (..., S) int32 -> (..., S, dim//2) f32 angles."""
+    half = dim // 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / float(half))
+    )
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def apply_rope(x, angles):
+    """x (B, S, ..., Dh); angles broadcastable to (B, S, 1, .., Dh//2)."""
+    half = x.shape[-1] // 2
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    cos = jnp.cos(angles)
+    sin = jnp.sin(angles)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    return jnp.concatenate([o1, o2], axis=-1).astype(x.dtype)
+
+
+def mrope_angles(position_ids, dim, theta, sections):
+    """M-RoPE (Qwen2-VL): position_ids (3, B, S); sections sum to dim//2.
+
+    Each contiguous frequency section takes its angle from the matching
+    positional stream (temporal / height / width).
+    """
+    half = dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / float(half))
+    )
+    # for each of the half frequencies pick stream sec_id[f] (static)
+    import numpy as _np
+
+    sec_id = jnp.asarray(
+        _np.repeat(_np.arange(len(sections)), _np.asarray(sections))
+    )
+    # position_ids: (3, B, S) -> (B, S, half)
+    p = jnp.moveaxis(position_ids.astype(jnp.float32), 0, -1)  # (B, S, 3)
+    psel = jnp.take(p, sec_id, axis=-1)                         # (B, S, half)
+    return psel * freqs
+
+
+# ----------------------------------------------------------------- attention
+
+def qkv_params(cfg: ModelConfig, key):
+    d, hd = cfg.d_model, cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    pd = pdtype_of(cfg)
+    p = {
+        "wq": dense_init(kq, d, cfg.n_heads * hd, pd),
+        "wk": dense_init(kk, d, cfg.n_kv_heads * hd, pd),
+        "wv": dense_init(kv, d, cfg.n_kv_heads * hd, pd),
+        "wo": dense_init(ko, cfg.n_heads * hd, d, pd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), pd)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), pd)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), pd)
+    return p
+
+
+def project_qkv(cfg: ModelConfig, p, x, angles=None):
+    """x (B, S, D) -> q (B, S, Hkv, G, Dh), k/v (B, S, Hkv, Dh).
+
+    The *flat* (B, S, H*Dh) projections are constrained to shard their
+    head-product dim over the model axis before the (Hkv, G, Dh) split:
+    H*Dh is 16-divisible for every assigned arch even when Hkv alone is
+    not, so GSPMD keeps attention logits head-sharded instead of
+    replicating them (perf iteration H1, EXPERIMENTS.md #Perf)."""
+    from ..parallel import sharding as shd
+
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    hkv = cfg.n_kv_heads
+    g = cfg.n_heads // hkv
+    dt = x.dtype
+    from .. import perfflags
+
+    q = x @ p["wq"].astype(dt)
+    if not perfflags.BASELINE:
+        q = shd.act(q, "logits")
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(B, S, hkv, g, hd)
+    k = k.reshape(B, S, hkv, hd)
+    v = v.reshape(B, S, hkv, hd)
+    if angles is not None:
+        q = apply_rope(q, angles[:, :, None, None, :])
+        k = apply_rope(k, angles[:, :, None, :])
+    return q, k, v
+
+
+def _softmax_attend(q, k, v, mask, scale):
+    """q (B,Sq,Hkv,G,Dh), k/v (B,Skv,Hkv,Dh), mask (Sq,Skv) or None."""
+    logits = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if mask is not None:
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v.dtype), v)
+    return out
+
+
+def causal_attention(cfg: ModelConfig, q, k, v, causal=True, chunk=None):
+    """Full or query-chunked causal attention.
+
+    Query-chunking bounds the live attention matrix to
+    (B, chunk, Hkv, G, Skv) -- the TPU-memory-sane formulation for the
+    32k/500k cells (flash-attention is the Pallas analogue; XLA fuses the
+    masked softmax here, and the chunk loop is a scan).
+    """
+    B, Sq, hkv, g, hd = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    chunk = chunk or cfg.attn_chunk
+    if Sq <= chunk or Sq % chunk != 0:
+        mask = None
+        if causal:
+            mask = jnp.tril(jnp.ones((Sq, Skv), dtype=bool), k=Skv - Sq)
+        return _softmax_attend(q, k, v, mask, scale)
+
+    n_chunks = Sq // chunk
+    qc = q.reshape(B, n_chunks, chunk, hkv, g, hd)
+
+    def body(carry, xs):
+        qi, start = xs
+        pos_q = start + jnp.arange(chunk)
+        pos_k = jnp.arange(Skv)
+        mask = pos_k[None, :] <= (pos_q[:, None] + (Skv - Sq))
+        out = _softmax_attend(qi, k, v, mask if causal else None, scale)
+        return carry, out
+
+    starts = jnp.arange(n_chunks) * chunk
+    _, outs = jax.lax.scan(body, None, (jnp.moveaxis(qc, 1, 0), starts))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, hkv, g, hd)
+
+
+KV_INT8_SCALE = 16.0  # fixed-point scale for int8 KV caches
+
+
+def quantize_kv(x, cache_dtype):
+    """bf16 KV -> cache dtype (int8 caches use a fixed 16x scale)."""
+    if jnp.dtype(cache_dtype) == jnp.int8:
+        return jnp.clip(
+            jnp.round(x.astype(jnp.float32) * KV_INT8_SCALE), -127, 127
+        ).astype(jnp.int8)
+    return x.astype(cache_dtype)
+
+
+def _dequant_kv(x):
+    if x.dtype == jnp.int8:
+        return x.astype(jnp.float32) * (1.0 / KV_INT8_SCALE)
+    return x.astype(jnp.float32)
+
+
+def decode_attention(q, k_cache, v_cache, length):
+    """Single-step attention against a (possibly sequence-sharded) cache.
+
+    q (B, 1, Hkv, G, Dh); caches (B, S, Hkv, Dh); length: valid prefix.
+    Reductions over S lower to mesh collectives when S is sharded
+    (long-context cells shard S over the 'data' axis).  int8 caches are
+    dequantized at use (qwen32b decode_32k -- DESIGN.md #6).
+    """
+    B, _, hkv, g, hd = q.shape
+    S = k_cache.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", q.astype(jnp.float32), _dequant_kv(k_cache)
+    ) * scale
+    valid = (jnp.arange(S) < length)[None, None, None, None, :]
+    logits = jnp.where(valid, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    vf = _dequant_kv(v_cache) if v_cache.dtype == jnp.int8 else v_cache
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(vf.dtype), vf)
+    return out
+
+
+def attn_out(cfg: ModelConfig, p, out):
+    B, S = out.shape[0], out.shape[1]
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"].astype(out.dtype)
+
+
+# ----------------------------------------------------------------- mlp
+
+def mlp_params(cfg: ModelConfig, key, d_ff=None):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    pd = pdtype_of(cfg)
+    if cfg.mlp == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": dense_init(k1, d, ff, pd),
+            "w_up": dense_init(k2, d, ff, pd),
+            "w_down": dense_init(k3, ff, d, pd),
+        }
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "w_up": dense_init(k1, d, ff, pd),
+        "b_up": jnp.zeros((ff,), pd),
+        "w_down": dense_init(k2, ff, d, pd),
+        "b_down": jnp.zeros((d,), pd),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p, x):
+    dt = x.dtype
+    if cfg.mlp == "swiglu":
+        gate = jax.nn.silu(x @ p["w_gate"].astype(dt))
+        up = x @ p["w_up"].astype(dt)
+        return (gate * up) @ p["w_down"].astype(dt)
+    h = jax.nn.gelu(x @ p["w_up"].astype(dt) + p["b_up"].astype(dt))
+    return h @ p["w_down"].astype(dt) + p["b_down"].astype(dt)
+
+
+# ----------------------------------------------------------------- embeddings
+
+def embed_params(cfg: ModelConfig, key):
+    pd = pdtype_of(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": dense_init(k1, cfg.vocab, cfg.d_model, pd, scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k2, cfg.d_model, cfg.vocab, pd)
+    return p
+
+
+def embed(cfg: ModelConfig, p, tokens):
+    return p["embedding"].astype(dtype_of(cfg))[tokens]
+
+
+def unembed(cfg: ModelConfig, p, x):
+    dt = x.dtype
+    if cfg.tie_embeddings:
+        return (x @ p["embedding"].astype(dt).T).astype(jnp.float32)
+    return (x @ p["lm_head"].astype(dt)).astype(jnp.float32)
+
+
+def sinusoidal_positions(S, d, dtype):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / float(d))
+    pe = jnp.zeros((S, d), dtype=jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang))
+    return pe.astype(dtype)

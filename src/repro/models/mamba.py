@@ -1,0 +1,170 @@
+"""Mamba (S6) selective-state-space mixer for the hybrid (Jamba) family.
+
+Training path: time-chunked — ``lax.scan`` over chunks of ``scan_chunk``
+tokens with an intra-chunk ``associative_scan`` (log-depth), so the HLO
+stays small and the live state is (B, d_inner, d_state) per boundary.
+Decode path: O(1) recurrent update carrying (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, pdtype_of
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.mamba_expand * cfg.d_model
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(cfg.d_model // 16, 1)
+
+
+def mamba_params(cfg: ModelConfig, key):
+    d = cfg.d_model
+    di = d_inner(cfg)
+    ds = cfg.mamba_d_state
+    dr = dt_rank(cfg)
+    dc = cfg.mamba_d_conv
+    pd = pdtype_of(cfg)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(k1, d, 2 * di, pd),
+        "conv_w": (jax.random.normal(k2, (dc, di), jnp.float32) * 0.1).astype(pd),
+        "conv_b": jnp.zeros((di,), pd),
+        "x_proj": dense_init(k3, di, dr + 2 * ds, pd),
+        "dt_proj": dense_init(k4, dr, di, pd),
+        "dt_bias": jnp.zeros((di,), pd),
+        "a_log": jnp.log(a).astype(pd),       # A = -exp(a_log)
+        "d_skip": jnp.ones((di,), pd),
+        "out_proj": dense_init(k5, di, d, pd),
+    }
+
+
+def _ssm_inputs(cfg, p, xc):
+    """xc (B, L, di) post-conv activations -> discretized (abar, bx, c)."""
+    ds = cfg.mamba_d_state
+    dr = dt_rank(cfg)
+    dt_bc = xc @ p["x_proj"].astype(xc.dtype)            # (B, L, dr+2ds)
+    dt = dt_bc[..., :dr] @ p["dt_proj"].astype(xc.dtype) + p["dt_bias"].astype(xc.dtype)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))          # (B, L, di)
+    b = dt_bc[..., dr : dr + ds].astype(jnp.float32)      # (B, L, ds)
+    c = dt_bc[..., dr + ds :].astype(jnp.float32)         # (B, L, ds)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))          # (di, ds)
+    abar = jnp.exp(dt[..., None] * a[None, None])         # (B, L, di, ds)
+    bx = (dt * xc.astype(jnp.float32))[..., None] * b[..., None, :]
+    return abar, bx, c
+
+
+def _chunk_scan(abar, bx, h0):
+    """Intra-chunk associative scan of h_t = abar_t h_{t-1} + bx_t.
+
+    Perf note (EXPERIMENTS.md #Perf, H6): a sequential lax.scan variant
+    ("fused-kernel formulation") was implemented and MEASURED SLOWER on
+    the corrected byte accounting (355.7 s vs 330.3 s memory term for the
+    398B train cell) -- the log-depth combine tree's intermediates are
+    transient and cheaper than 64 per-step fusion round-trips + scan VJP
+    residuals.  Hypothesis refuted; associative form retained.
+    """
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    a_acc, b_acc = jax.lax.associative_scan(combine, (abar, bx), axis=1)
+    h = a_acc * h0[:, None] + b_acc                        # (B, L, di, ds)
+    return h, h[:, -1]
+
+
+def causal_conv(cfg, p, x, conv_state=None):
+    """Depthwise causal conv along time.  x (B, L, di)."""
+    dc = cfg.mamba_d_conv
+    w = p["conv_w"].astype(x.dtype)                        # (dc, di)
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                 # (B, L+dc-1, di)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None] for i in range(dc)
+    )
+    new_state = xp[:, -(dc - 1) :] if dc > 1 else pad[:, :0]
+    return out + p["conv_b"].astype(x.dtype), new_state
+
+
+def mamba_forward(cfg: ModelConfig, p, x, chunk=None, return_state=False):
+    """Training/prefill forward.  x (B, S, D) -> (B, S, D) [, final state]."""
+    B, S, D = x.shape
+    di = d_inner(cfg)
+    ds = cfg.mamba_d_state
+    chunk = chunk or cfg.scan_chunk
+    dt = x.dtype
+
+    xz = x @ p["in_proj"].astype(dt)                       # (B, S, 2di)
+    xin, z = xz[..., :di], xz[..., di:]
+    xc, _ = causal_conv(cfg, p, xin)
+    xc = jax.nn.silu(xc)
+
+    if S % chunk != 0:
+        chunk = S  # degenerate sizes: single chunk
+    n_chunks = S // chunk
+    xc_c = xc.reshape(B, n_chunks, chunk, di)
+
+    # remat the chunk body: the (B, chunk, di, ds) discretized tensors are
+    # recomputed in the backward pass instead of being saved per chunk --
+    # 3 x 67 MB transient instead of ~13 GB resident per mamba layer for
+    # the 398B train cell (perf iteration H2); y is cast to the activation
+    # dtype inside the body so only bf16 leaves the scan (H3).
+    from .. import perfflags
+
+    def body(h, xck):
+        abar, bx, c = _ssm_inputs(cfg, p, xck)
+        h_seq, h_last = _chunk_scan(abar, bx, h)
+        y = jnp.einsum("blds,bls->bld", h_seq, c)          # (B, chunk, di)
+        return h_last, (y if perfflags.BASELINE else y.astype(dt))
+
+    body = perfflags.checkpoint_if_optimized(body)
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    h_fin, ys = jax.lax.scan(body, h0, jnp.moveaxis(xc_c, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
+    y = (y + xc * p["d_skip"].astype(dt)).astype(dt)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt)
+    if return_state:
+        dc = cfg.mamba_d_conv
+        conv_state = xin[:, -(dc - 1):] if dc > 1 else xin[:, :0]
+        return out, {"conv": conv_state, "ssm": h_fin}
+    return out
+
+
+def mamba_init_state(cfg: ModelConfig, batch, dtype=jnp.float32):
+    di = d_inner(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32),
+    }
+
+
+def mamba_decode_step(cfg: ModelConfig, p, x, state):
+    """x (B, 1, D); state dict -> (out (B, 1, D), new state)."""
+    B = x.shape[0]
+    di = d_inner(cfg)
+    dt = x.dtype
+    xz = x @ p["in_proj"].astype(dt)
+    xin, z = xz[..., :di], xz[..., di:]
+    xc, conv_state = causal_conv(cfg, p, xin, state["conv"])
+    xc = jax.nn.silu(xc)
+    abar, bx, c = _ssm_inputs(cfg, p, xc)                  # L = 1
+    h = state["ssm"] * abar[:, 0] + bx[:, 0]               # (B, di, ds)
+    y = jnp.einsum("bds,bs->bd", h, c[:, 0])[:, None]      # (B, 1, di)
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y.astype(dt) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt)
+    return out, {"conv": conv_state.astype(state["conv"].dtype), "ssm": h}

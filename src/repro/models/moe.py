@@ -1,0 +1,131 @@
+"""Mixture-of-Experts layer (GShard-style capacity dispatch).
+
+Top-k routing with capacity-bounded one-hot dispatch einsums -- the
+pjit-friendly formulation: expert weights are sharded over the 'model'
+mesh axis (expert parallelism) and the dispatch/combine einsums lower to
+all-to-alls under GSPMD.  Token overflow beyond capacity is dropped
+(standard for capacity-factor routing); an auxiliary load-balancing loss
+is returned for training.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, pdtype_of
+
+
+def moe_params(cfg: ModelConfig, key):
+    d = cfg.d_model
+    ff = cfg.d_ff_expert or cfg.d_ff
+    e = cfg.n_experts
+    pd = pdtype_of(cfg)
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(kr, d, e, pd, scale=0.02),
+        "w_gate": (
+            jax.random.normal(kg, (e, d, ff), jnp.float32) / math.sqrt(d)
+        ).astype(pd),
+        "w_up": (
+            jax.random.normal(ku, (e, d, ff), jnp.float32) / math.sqrt(d)
+        ).astype(pd),
+        "w_down": (
+            jax.random.normal(kd, (e, ff, d), jnp.float32) / math.sqrt(ff)
+        ).astype(pd),
+    }
+    if cfg.n_shared_experts:
+        ks1, ks2, ks3 = jax.random.split(ks, 3)
+        ffs = ff * cfg.n_shared_experts
+        p["shared"] = {
+            "w_gate": dense_init(ks1, d, ffs, pd),
+            "w_up": dense_init(ks2, d, ffs, pd),
+            "w_down": dense_init(ks3, ffs, d, pd),
+        }
+    return p
+
+
+GROUP_SIZE = 1024  # routing-group size: dispatch memory is O(G * Sg * E * Cg)
+
+
+def apply_moe(cfg: ModelConfig, p, x):
+    """x (B, S, D) -> (out (B, S, D), aux_loss scalar f32).
+
+    Tokens are routed in independent groups of GROUP_SIZE (the standard
+    GShard/MaxText trick): the one-hot dispatch tensor is
+    (G, Sg, E, Cg) with Cg = Sg * K * cf / E, i.e. linear -- not
+    quadratic -- in the total token count.
+    """
+    B, S, D = x.shape
+    E = cfg.n_experts
+    K = cfg.top_k
+    N = B * S
+    sg = min(GROUP_SIZE, N)
+    if N % sg != 0:
+        sg = N  # degenerate smoke-test sizes: one group
+    G = N // sg
+    cap = max(int(cfg.capacity_factor * K * sg / E), K)
+    dt = x.dtype
+
+    from .. import perfflags
+
+    xf = x.reshape(G, sg, D)
+    # router logits accumulate in f32 without materializing an f32 copy
+    # of the activations (perf iteration H5)
+    if perfflags.BASELINE:
+        logits = xf.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    else:
+        logits = jnp.einsum(
+            "gsd,de->gse", xf, p["router"].astype(dt),
+            preferred_element_type=jnp.float32,
+        )
+    probs = jax.nn.softmax(logits, axis=-1)                  # (G, Sg, E)
+
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)          # (G, Sg, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # position of each (token, k) within its expert queue (per group)
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)  # (G, Sg, K, E)
+    flat = onehot.reshape(G, sg * K, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat          # (G, Sg*K, E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(G, sg, K)
+    keep = pos < cap
+
+    # dispatch tensor (G, Sg, E, cap) one-hot; combine weights alike
+    disp = (
+        jax.nn.one_hot(expert_idx, E, dtype=dt)[..., None]
+        * jax.nn.one_hot(
+            jnp.where(keep, pos, cap), cap + 1, dtype=dt
+        )[:, :, :, None, :-1]
+    )  # (G, Sg, K, E, cap)
+    dispatch = jnp.sum(disp, axis=2)                          # (G, Sg, E, cap)
+    combine = jnp.sum(disp * gate_vals[..., None, None].astype(dt), axis=2)
+
+    expert_in = jnp.einsum("gsd,gsec->egcd", xf, dispatch)    # (E, G, cap, D)
+    gate = jax.nn.silu(
+        jnp.einsum("egcd,edf->egcf", expert_in, p["w_gate"].astype(dt))
+    )
+    up = jnp.einsum("egcd,edf->egcf", expert_in, p["w_up"].astype(dt))
+    expert_out = jnp.einsum(
+        "egcf,efd->egcd", gate * up, p["w_down"].astype(dt)
+    )
+    out = jnp.einsum("egcd,gsec->gsd", expert_out, combine)
+
+    xflat = xf.reshape(N, D)
+    out = out.reshape(N, D)
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        g = jax.nn.silu(xflat @ sp["w_gate"].astype(dt))
+        out = out + (g * (xflat @ sp["w_up"].astype(dt))) @ sp["w_down"].astype(dt)
+
+    # load-balancing auxiliary loss (Switch/GShard form)
+    density = jnp.mean(
+        jax.nn.one_hot(expert_idx[..., 0], E, dtype=jnp.float32), (0, 1)
+    )
+    density_proxy = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(density * density_proxy) * E
+    return out.reshape(B, S, D), aux.astype(jnp.float32)

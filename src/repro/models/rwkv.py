@@ -1,0 +1,215 @@
+"""RWKV6 ("Finch") attention-free mixer with data-dependent decay.
+
+Time-mix recurrence per head (state S in R^{dk x dv}):
+
+    out_t = r_t @ (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+
+with the *data-dependent* per-channel decay w_t = exp(-exp(w0 + LoRA(x)))
+-- the signature RWKV6 feature.  Token-shift mixing uses static
+per-channel interpolation (the dynamic-ddlerp refinement is noted as a
+simplification in DESIGN.md); output uses per-head RMS normalization in
+place of GroupNorm.
+
+Training path is chunk-parallel (GLA-style): within a chunk all decay
+exponents appear only as *differences* cum_{t-1} - cum_s <= 0, so every
+exp() is <= 1 and fp32-safe; across chunks a ``lax.scan`` carries S.
+Decode is the O(1) recurrence.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, pdtype_of
+
+LORA_RANK = 64
+
+
+def n_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def rwkv_params(cfg: ModelConfig, key):
+    d = cfg.d_model
+    pd = pdtype_of(cfg)
+    ks = jax.random.split(key, 10)
+    p = {
+        "mix_r": jnp.full((d,), 0.5, pd),
+        "mix_k": jnp.full((d,), 0.5, pd),
+        "mix_v": jnp.full((d,), 0.5, pd),
+        "mix_g": jnp.full((d,), 0.5, pd),
+        "mix_w": jnp.full((d,), 0.5, pd),
+        "wr": dense_init(ks[0], d, d, pd),
+        "wk": dense_init(ks[1], d, d, pd),
+        "wv": dense_init(ks[2], d, d, pd),
+        "wg": dense_init(ks[3], d, d, pd),
+        "wo": dense_init(ks[4], d, d, pd),
+        "w0": jnp.full((d,), -1.0, pd),             # base log-log decay
+        "w_lora_a": dense_init(ks[5], d, LORA_RANK, pd),
+        "w_lora_b": dense_init(ks[6], LORA_RANK, d, pd, scale=0.01),
+        "u": (jax.random.normal(ks[7], (d,), jnp.float32) * 0.1).astype(pd),
+        "ln_scale": jnp.ones((d,), pd),
+        # channel mix
+        "cmix_k": jnp.full((d,), 0.5, pd),
+        "cmix_r": jnp.full((d,), 0.5, pd),
+        "c_wk": dense_init(ks[8], d, cfg.d_ff, pd),
+        "c_wv": dense_init(ks[9], cfg.d_ff, d, pd),
+        "c_wr": dense_init(jax.random.fold_in(ks[9], 1), d, d, pd),
+    }
+    return p
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / `last` for t = 0).  x (B, S, D)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _decay(cfg, p, xw):
+    """Data-dependent per-channel decay, log-space.  Returns log(w) <= 0."""
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"].astype(jnp.float32))
+    lora = lora @ p["w_lora_b"].astype(jnp.float32)
+    loglog = p["w0"].astype(jnp.float32) + lora
+    return -jnp.exp(loglog)                          # log w in (-inf, 0)
+
+
+def _head_split(x, H, hd):
+    B, S, _ = x.shape
+    return x.reshape(B, S, H, hd)
+
+
+def _headnorm(x, scale):
+    """Per-head RMS normalization of (B, S, H, hd)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + 1e-6)
+    B, S, H, hd = x.shape
+    return (out.reshape(B, S, H * hd) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def time_mix(cfg: ModelConfig, p, x, chunk=None, state=None, last_x=None):
+    """Chunk-parallel WKV.  x (B, S, D).  state (B, H, dk, dv) or None.
+
+    Returns (out, final_state, final_x) so decode/prefill can chain.
+    """
+    B, S, D = x.shape
+    H = n_heads(cfg)
+    hd = cfg.rwkv_head_dim
+    chunk = chunk or cfg.scan_chunk
+    if S % chunk != 0:
+        chunk = S
+    dt = x.dtype
+
+    from ..parallel import sharding as shd
+
+    xs = _shift(x, last_x)
+    # flat (B, S, D) projections are constrained to shard D over the
+    # model axis before the head split (D is 16-divisible even when the
+    # head count is not), so the (B, L, L, H, dk) pairwise-decay tensor
+    # inherits a head/channel sharding instead of replicating
+    # (perf iteration H8, EXPERIMENTS.md #Perf).
+    from .. import perfflags
+
+    _c = (lambda t: t) if perfflags.BASELINE else (lambda t: shd.act(t, "logits"))
+    r = _head_split(_c(_mix(x, xs, p["mix_r"]) @ p["wr"].astype(dt)), H, hd)
+    k = _head_split(_c(_mix(x, xs, p["mix_k"]) @ p["wk"].astype(dt)), H, hd)
+    v = _head_split(_c(_mix(x, xs, p["mix_v"]) @ p["wv"].astype(dt)), H, hd)
+    g = _mix(x, xs, p["mix_g"]) @ p["wg"].astype(dt)
+    logw = _decay(cfg, p, _mix(x, xs, p["mix_w"]))   # (B, S, D) f32
+    logw = logw.reshape(B, S, H, hd)
+    u = p["u"].astype(jnp.float32).reshape(H, hd)
+
+    rf = r.astype(jnp.float32).reshape(B, S // chunk, chunk, H, hd)
+    kf = k.astype(jnp.float32).reshape(B, S // chunk, chunk, H, hd)
+    vf = v.astype(jnp.float32).reshape(B, S // chunk, chunk, H, hd)
+    lw = logw.reshape(B, S // chunk, chunk, H, hd)
+
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    # remat: the (B, L, L, H, dk) pairwise decay tensor is recomputed in
+    # backward instead of saved per chunk (perf iteration H2).
+    def body(S_in, xs_chunk):
+        rc, kc, vc, lwc = xs_chunk                   # (B, L, H, hd)
+        cum = jnp.cumsum(lwc, axis=1)                # (B, L, H, dk)
+        cum_prev = cum - lwc                         # cum_{t-1}
+        # cross-chunk: r_t decayed to chunk start @ S_in
+        r_dec = rc * jnp.exp(cum_prev)
+        out_cross = jnp.einsum("blhd,bhdv->blhv", r_dec, S_in)
+        # intra-chunk pairwise with safe exponents (<= 0)
+        ediff = cum_prev[:, :, None] - cum[:, None, :]      # (B, t, s, H, dk)
+        L = rc.shape[1]
+        tmask = jnp.tril(jnp.ones((L, L), bool), -1)[None, :, :, None, None]
+        e = jnp.where(tmask, jnp.exp(jnp.minimum(ediff, 0.0)), 0.0)
+        a = jnp.einsum("bthd,bshd,btshd->bths", rc, kc, e)
+        out_intra = jnp.einsum("bths,bshv->bthv", a, vc)
+        # current-token bonus
+        diag = jnp.einsum("blhd,blhd->blh", rc, kc * u[None, None])
+        out_diag = diag[..., None] * vc
+        # state update (factors <= 1)
+        dec_all = jnp.exp(cum[:, -1])                # (B, H, dk)
+        k_dec = kc * jnp.exp(cum[:, -1:] - cum)      # factors <= 1
+        S_out = S_in * dec_all[..., None] + jnp.einsum(
+            "bshd,bshv->bhdv", k_dec, vc
+        )
+        return S_out, out_cross + out_intra + out_diag
+
+    from ..perfflags import checkpoint_if_optimized
+
+    body = checkpoint_if_optimized(body)
+    seq = (
+        jnp.moveaxis(rf, 1, 0),
+        jnp.moveaxis(kf, 1, 0),
+        jnp.moveaxis(vf, 1, 0),
+        jnp.moveaxis(lw, 1, 0),
+    )
+    S_fin, outs = jax.lax.scan(body, state, seq)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd).astype(dt)
+    out = _headnorm(out, p["ln_scale"])
+    out = out * jax.nn.silu(g)
+    return out @ p["wo"].astype(dt), S_fin, x[:, -1:]
+
+
+def time_mix_decode(cfg: ModelConfig, p, x, state, last_x):
+    """Single-token recurrence.  x (B, 1, D)."""
+    B, _, D = x.shape
+    H = n_heads(cfg)
+    hd = cfg.rwkv_head_dim
+    dt = x.dtype
+    xs = last_x
+    r = _mix(x, xs, p["mix_r"]) @ p["wr"].astype(dt)
+    k = _mix(x, xs, p["mix_k"]) @ p["wk"].astype(dt)
+    v = _mix(x, xs, p["mix_v"]) @ p["wv"].astype(dt)
+    g = _mix(x, xs, p["mix_g"]) @ p["wg"].astype(dt)
+    logw = _decay(cfg, p, _mix(x, xs, p["mix_w"]))
+    rf = r.astype(jnp.float32).reshape(B, H, hd)
+    kf = k.astype(jnp.float32).reshape(B, H, hd)
+    vf = v.astype(jnp.float32).reshape(B, H, hd)
+    w = jnp.exp(logw).reshape(B, H, hd)
+    u = p["u"].astype(jnp.float32).reshape(H, hd)
+    wkv = state + (kf * u[None])[..., None] * vf[:, :, None, :]
+    out = jnp.einsum("bhd,bhdv->bhv", rf, wkv)       # (B, H, dv)
+    new_state = state * w[..., None] + kf[..., None] * vf[:, :, None, :]
+    out = out.reshape(B, 1, D).astype(dt)
+    out = _headnorm(out.reshape(B, 1, H, hd), p["ln_scale"])
+    out = out * jax.nn.silu(g)
+    return out @ p["wo"].astype(dt), new_state, x
+
+
+def channel_mix(cfg: ModelConfig, p, x, last_x=None):
+    dt = x.dtype
+    xs = _shift(x, last_x)
+    xk = _mix(x, xs, p["cmix_k"])
+    xr = _mix(x, xs, p["cmix_r"])
+    k = jnp.square(jax.nn.relu(xk @ p["c_wk"].astype(dt)))
+    r = jax.nn.sigmoid(xr @ p["c_wr"].astype(dt))
+    return r * (k @ p["c_wv"].astype(dt)), x[:, -1:]

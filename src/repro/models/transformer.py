@@ -1,0 +1,747 @@
+"""Model assembly for every assigned architecture family.
+
+Four model classes behind one functional API:
+
+  DecoderLM  -- uniform [attn + (mlp|moe)] blocks: dense, moe, vlm(M-RoPE)
+  HybridLM   -- Jamba super-blocks: scan over groups of (1 attn + 7 mamba)
+                sublayers with MoE on alternating sublayers
+  RWKVLM     -- RWKV6 (time-mix + channel-mix) blocks
+  EncDecLM   -- Whisper-style encoder-decoder (stubbed conv frontend:
+                inputs are precomputed frame embeddings)
+
+API (all functional, jit/scan friendly):
+  init(rng) -> params
+  train_loss(params, batch) -> (loss f32, metrics dict)
+  prefill(params, batch) -> (last-position logits, cache)
+  decode_step(params, batch, cache) -> (logits, cache)
+
+Layers are stacked and scanned (`lax.scan`) with `jax.checkpoint` on the
+block body, so HLO size is O(1) in depth and saved activations are one
+(B, S, D) carry per layer.  The cross-entropy is sequence-chunked with
+vocab-sharded logits so the full (B, S, V) tensor never materializes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel import sharding as shd
+from . import layers as L
+from . import mamba as M
+from . import moe as E
+from . import rwkv as R
+from .config import ModelConfig
+
+
+# ----------------------------------------------------------------- loss
+
+def chunked_ce_loss(cfg: ModelConfig, embed_params, x, labels, chunk=1024):
+    """Cross-entropy over vocab-sharded logits, scanned over seq chunks."""
+    B, S, D = x.shape
+    if S % chunk != 0 or S <= chunk:
+        chunk = S
+    n = S // chunk
+    xc = x.reshape(B, n, chunk, D)
+    lc = labels.reshape(B, n, chunk)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        xi, li = inp                                  # (B, chunk, D), (B, chunk)
+        logits = L.unembed(cfg, embed_params, xi)     # (B, chunk, V) f32
+        logits = shd.act(logits, "logits")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(logits, li[..., None].astype(jnp.int32), -1)
+        nll = lse - lab[..., 0]
+        return carry + jnp.sum(nll), None
+
+    total, _ = jax.lax.scan(
+        body, jnp.zeros((), jnp.float32),
+        (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(lc, 1, 0)),
+    )
+    return total / (B * S)
+
+
+def _pos_angles(cfg: ModelConfig, batch, S):
+    if cfg.pos == "mrope":
+        pos = batch["position_ids"]                   # (3, B, S)
+        return L.mrope_angles(pos, cfg.head_dim, cfg.rope_theta,
+                              cfg.mrope_sections)
+    if cfg.pos == "rope":
+        B = batch["tokens"].shape[0] if "tokens" in batch else batch["embeds"].shape[0]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        return L.rope_angles(pos, cfg.head_dim, cfg.rope_theta)
+    return None
+
+
+def _inputs_embed(cfg: ModelConfig, params, batch):
+    if cfg.embedding_inputs:
+        x = batch["embeds"].astype(L.dtype_of(cfg))
+    else:
+        x = L.embed(cfg, params["embed"], batch["tokens"])
+    if cfg.pos == "sinusoidal":
+        x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+    return shd.act(x, "hidden")
+
+
+# =================================================================== DecoderLM
+
+class DecoderLM:
+    """Uniform decoder-only transformer (dense / moe / vlm)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---------------- params
+    def _block_init(self, key):
+        cfg = self.cfg
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = {
+            "ln1": L.norm_params(cfg, k1),
+            "attn": L.qkv_params(cfg, k2),
+            "ln2": L.norm_params(cfg, k3),
+        }
+        if cfg.n_experts:
+            p["moe"] = E.moe_params(cfg, k4)
+        else:
+            p["mlp"] = L.mlp_params(cfg, k4)
+        return p
+
+    def init(self, rng):
+        cfg = self.cfg
+        ke, kb, kf = jax.random.split(rng, 3)
+        blocks = jax.vmap(self._block_init)(jax.random.split(kb, cfg.n_layers))
+        return {
+            "embed": L.embed_params(cfg, ke),
+            "blocks": blocks,
+            "ln_f": L.norm_params(cfg, kf),
+        }
+
+    # ---------------- forward
+    def _block(self, bp, x, angles):
+        cfg = self.cfg
+        h = L.apply_norm(cfg, bp["ln1"], x)
+        q, k, v = L.project_qkv(cfg, bp["attn"], h, angles)
+        att = L.causal_attention(cfg, q, k, v)
+        x = x + L.attn_out(cfg, bp["attn"], att)
+        x = shd.act(x, "hidden")
+        h = L.apply_norm(cfg, bp["ln2"], x)
+        if cfg.n_experts:
+            ff, aux = E.apply_moe(cfg, bp["moe"], h)
+        else:
+            ff, aux = L.apply_mlp(cfg, bp["mlp"], h), jnp.zeros((), jnp.float32)
+        x = shd.act(x + ff, "hidden")
+        return x, aux
+
+    def _backbone(self, params, x, angles):
+        block = jax.checkpoint(lambda xx, bp: self._block(bp, xx, angles))
+
+        def body(xx, bp):
+            return block(xx, bp)
+
+        x, auxs = jax.lax.scan(body, x, params["blocks"])
+        return L.apply_norm(self.cfg, params["ln_f"], x), jnp.sum(auxs)
+
+    def train_loss(self, params, batch):
+        cfg = self.cfg
+        x = _inputs_embed(cfg, params, batch)
+        angles = _pos_angles(cfg, batch, x.shape[1])
+        x, aux = self._backbone(params, x, angles)
+        loss = chunked_ce_loss(cfg, params["embed"], x, batch["labels"])
+        total = loss + 0.01 * aux
+        return total, {"ce": loss, "aux": aux}
+
+    # ---------------- serving
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        x = _inputs_embed(cfg, params, batch)
+        angles = _pos_angles(cfg, batch, x.shape[1])
+
+        @jax.checkpoint
+        def body(xx, bp):
+            h = L.apply_norm(cfg, bp["ln1"], xx)
+            q, k, v = L.project_qkv(cfg, bp["attn"], h, angles)
+            att = L.causal_attention(cfg, q, k, v)
+            xx = xx + L.attn_out(cfg, bp["attn"], att)
+            h = L.apply_norm(cfg, bp["ln2"], xx)
+            if cfg.n_experts:
+                ff, _ = E.apply_moe(cfg, bp["moe"], h)
+            else:
+                ff = L.apply_mlp(cfg, bp["mlp"], h)
+            return shd.act(xx + ff, "hidden"), (k, v)
+
+        x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+        x = L.apply_norm(cfg, params["ln_f"], x)
+        logits = L.unembed(cfg, params["embed"], x[:, -1:])
+        cache = {
+            "k": shd.act(ks, self._cache_kind()),
+            "v": shd.act(vs, self._cache_kind()),
+            "length": jnp.full((), x.shape[1], jnp.int32),
+        }
+        return logits, cache
+
+    def _cache_kind(self):
+        return "cache"
+
+    def init_cache(self, batch_size, max_len, seq_sharded=False,
+                   dtype=None):
+        cfg = self.cfg
+        dt = dtype or L.dtype_of(cfg)
+        hkv = max(cfg.decode_head_pad, cfg.n_kv_heads)
+        shape = (cfg.n_layers, batch_size, max_len, hkv, cfg.head_dim)
+        kind = "cache_seqshard" if seq_sharded else "cache"
+        return {
+            "k": shd.act(jnp.zeros(shape, dt), kind),
+            "v": shd.act(jnp.zeros(shape, dt), kind),
+            "length": jnp.zeros((), jnp.int32),
+        }
+
+    def decode_step(self, params, batch, cache):
+        """batch: tokens (B, 1) [or embeds], position scalar in cache."""
+        cfg = self.cfg
+        x = _inputs_embed(cfg, params, batch)
+        pos = cache["length"]
+        B = x.shape[0]
+        if cfg.pos == "mrope":
+            pid = jnp.broadcast_to(pos[None, None, None], (3, B, 1)).astype(jnp.int32)
+            angles = L.mrope_angles(pid, cfg.head_dim, cfg.rope_theta,
+                                    cfg.mrope_sections)
+        elif cfg.pos == "rope":
+            pid = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+            angles = L.rope_angles(pid, cfg.head_dim, cfg.rope_theta)
+        else:
+            angles = None
+
+        kind = self._cache_kind()
+
+        hkv_pad = max(cfg.decode_head_pad, cfg.n_kv_heads) - cfg.n_kv_heads
+
+        def body(xx, scan_in):
+            bp, kc, vc = scan_in
+            h = L.apply_norm(cfg, bp["ln1"], xx)
+            q, k, v = L.project_qkv(cfg, bp["attn"], h, angles)
+            if hkv_pad:
+                padw = [(0, 0), (0, 0), (0, hkv_pad), (0, 0)]
+                k = jnp.pad(k, padw)
+                v = jnp.pad(v, padw)
+                q = jnp.pad(q, [(0, 0), (0, 0), (0, hkv_pad), (0, 0), (0, 0)])
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                kc, L.quantize_kv(k, kc.dtype), pos, axis=1
+            )
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                vc, L.quantize_kv(v, vc.dtype), pos, axis=1
+            )
+            att = L.decode_attention(q, kc, vc, pos + 1)
+            if hkv_pad:
+                att = att[:, :, : cfg.n_kv_heads]
+            xx = xx + L.attn_out(cfg, bp["attn"], att.astype(xx.dtype))
+            h = L.apply_norm(cfg, bp["ln2"], xx)
+            if cfg.n_experts:
+                ff, _ = E.apply_moe(cfg, bp["moe"], h)
+            else:
+                ff = L.apply_mlp(cfg, bp["mlp"], h)
+            return shd.act(xx + ff, "hidden"), (kc, vc)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+        x = L.apply_norm(cfg, params["ln_f"], x)
+        logits = L.unembed(cfg, params["embed"], x)
+        new_cache = {
+            "k": shd.act(ks, kind),
+            "v": shd.act(vs, kind),
+            "length": pos + 1,
+        }
+        return logits, new_cache
+
+
+# =================================================================== HybridLM
+
+class HybridLM(DecoderLM):
+    """Jamba: super-blocks of `attn_every` sublayers (1 attn + rest mamba),
+    MoE replacing the MLP on alternating sublayers."""
+
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.attn_every > 0 and cfg.n_layers % cfg.attn_every == 0
+        self.cfg = cfg
+        self.group = cfg.attn_every
+        self.n_groups = cfg.n_layers // cfg.attn_every
+
+    def _sub_init(self, key, idx):
+        cfg = self.cfg
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = {"ln1": L.norm_params(cfg, k1), "ln2": L.norm_params(cfg, k3)}
+        if idx == 0:
+            p["attn"] = L.qkv_params(cfg, k2)
+        else:
+            p["mamba"] = M.mamba_params(cfg, k2)
+        if idx % cfg.moe_every == cfg.moe_every - 1:
+            p["moe"] = E.moe_params(cfg, k4)
+        else:
+            p["mlp"] = L.mlp_params(cfg, k4)
+        return p
+
+    def init(self, rng):
+        cfg = self.cfg
+        ke, kb, kf = jax.random.split(rng, 3)
+
+        def group_init(key):
+            ks = jax.random.split(key, self.group)
+            return [self._sub_init(ks[i], i) for i in range(self.group)]
+
+        groups = jax.vmap(group_init)(jax.random.split(kb, self.n_groups))
+        return {
+            "embed": L.embed_params(cfg, ke),
+            "superblocks": groups,
+            "ln_f": L.norm_params(cfg, kf),
+        }
+
+    def _sub_forward(self, idx, sp, x, angles):
+        cfg = self.cfg
+        h = L.apply_norm(cfg, sp["ln1"], x)
+        if idx == 0:
+            q, k, v = L.project_qkv(cfg, sp["attn"], h, angles)
+            att = L.causal_attention(cfg, q, k, v)
+            x = x + L.attn_out(cfg, sp["attn"], att)
+        else:
+            x = x + M.mamba_forward(cfg, sp["mamba"], h)
+        x = shd.act(x, "hidden")
+        h = L.apply_norm(cfg, sp["ln2"], x)
+        if idx % cfg.moe_every == cfg.moe_every - 1:
+            ff, aux = E.apply_moe(cfg, sp["moe"], h)
+        else:
+            ff, aux = L.apply_mlp(cfg, sp["mlp"], h), jnp.zeros((), jnp.float32)
+        return shd.act(x + ff, "hidden"), aux
+
+    def _backbone(self, params, x, angles):
+        cfg = self.cfg
+
+        @jax.checkpoint
+        def body(xx, gp):
+            aux = jnp.zeros((), jnp.float32)
+            for i in range(self.group):
+                xx, a = self._sub_forward(i, gp[i], xx, angles)
+                aux = aux + a
+            return xx, aux
+
+        x, auxs = jax.lax.scan(body, x, params["superblocks"])
+        return L.apply_norm(cfg, params["ln_f"], x), jnp.sum(auxs)
+
+    def train_loss(self, params, batch):
+        cfg = self.cfg
+        x = _inputs_embed(cfg, params, batch)
+        angles = _pos_angles(cfg, batch, x.shape[1])
+        x, aux = self._backbone(params, x, angles)
+        loss = chunked_ce_loss(cfg, params["embed"], x, batch["labels"])
+        return loss + 0.01 * aux, {"ce": loss, "aux": aux}
+
+    # ---------------- serving (attn KV cache + mamba states)
+    def init_cache(self, batch_size, max_len, seq_sharded=False, dtype=None):
+        cfg = self.cfg
+        dt = dtype or L.dtype_of(cfg)
+        di = M.d_inner(cfg)
+        kind = "cache_seqshard" if seq_sharded else "cache"
+        kv_shape = (self.n_groups, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim)
+        return {
+            "k": shd.act(jnp.zeros(kv_shape, dt), kind),
+            "v": shd.act(jnp.zeros(kv_shape, dt), kind),
+            "conv": shd.act(
+                jnp.zeros((self.n_groups, self.group - 1, batch_size,
+                           cfg.mamba_d_conv - 1, di), dt), "hidden"),
+            "ssm": shd.act(
+                jnp.zeros((self.n_groups, self.group - 1, batch_size, di,
+                           cfg.mamba_d_state), jnp.float32), "hidden"),
+            "length": jnp.zeros((), jnp.int32),
+        }
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        x = _inputs_embed(cfg, params, batch)
+        angles = _pos_angles(cfg, batch, x.shape[1])
+
+        def body(xx, gp):
+            convs, ssms = [], []
+            k_out = v_out = None
+            for i in range(self.group):
+                sp = gp[i]
+                h = L.apply_norm(cfg, sp["ln1"], xx)
+                if i == 0:
+                    q, k, v = L.project_qkv(cfg, sp["attn"], h, angles)
+                    att = L.causal_attention(cfg, q, k, v)
+                    xx = xx + L.attn_out(cfg, sp["attn"], att)
+                    k_out, v_out = k, v
+                else:
+                    out, st = M.mamba_forward(cfg, sp["mamba"], h,
+                                              return_state=True)
+                    xx = xx + out
+                    convs.append(st["conv"])
+                    ssms.append(st["ssm"])
+                xx = shd.act(xx, "hidden")
+                h = L.apply_norm(cfg, sp["ln2"], xx)
+                if i % cfg.moe_every == cfg.moe_every - 1:
+                    ff, _ = E.apply_moe(cfg, sp["moe"], h)
+                else:
+                    ff = L.apply_mlp(cfg, sp["mlp"], h)
+                xx = shd.act(xx + ff, "hidden")
+            return xx, (k_out, v_out, jnp.stack(convs), jnp.stack(ssms))
+
+        x, (ks, vs, convs, ssms) = jax.lax.scan(body, x, params["superblocks"])
+        x = L.apply_norm(cfg, params["ln_f"], x)
+        logits = L.unembed(cfg, params["embed"], x[:, -1:])
+        cache = {
+            "k": shd.act(ks, "cache"),
+            "v": shd.act(vs, "cache"),
+            "conv": convs,
+            "ssm": ssms,
+            "length": jnp.full((), x.shape[1], jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params, batch, cache):
+        cfg = self.cfg
+        x = _inputs_embed(cfg, params, batch)
+        pos = cache["length"]
+        B = x.shape[0]
+        pid = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        angles = L.rope_angles(pid, cfg.head_dim, cfg.rope_theta)
+
+        def body(xx, scan_in):
+            gp, kc, vc, conv_st, ssm_st = scan_in
+            new_conv, new_ssm = [], []
+            mi = 0
+            for i in range(self.group):
+                sp = gp[i]
+                h = L.apply_norm(cfg, sp["ln1"], xx)
+                if i == 0:
+                    q, k, v = L.project_qkv(cfg, sp["attn"], h, angles)
+                    kc = jax.lax.dynamic_update_slice_in_dim(
+                        kc, L.quantize_kv(k, kc.dtype), pos, axis=1)
+                    vc = jax.lax.dynamic_update_slice_in_dim(
+                        vc, L.quantize_kv(v, vc.dtype), pos, axis=1)
+                    att = L.decode_attention(q, kc, vc, pos + 1)
+                    xx = xx + L.attn_out(cfg, sp["attn"], att.astype(xx.dtype))
+                else:
+                    st = {"conv": conv_st[mi], "ssm": ssm_st[mi]}
+                    out, st2 = M.mamba_decode_step(cfg, sp["mamba"], h, st)
+                    new_conv.append(st2["conv"])
+                    new_ssm.append(st2["ssm"])
+                    xx = xx + out
+                    mi += 1
+                h = L.apply_norm(cfg, sp["ln2"], xx)
+                if i % cfg.moe_every == cfg.moe_every - 1:
+                    ff, _ = E.apply_moe(cfg, sp["moe"], h)
+                else:
+                    ff = L.apply_mlp(cfg, sp["mlp"], h)
+                xx = shd.act(xx + ff, "hidden")
+            return xx, (kc, vc, jnp.stack(new_conv), jnp.stack(new_ssm))
+
+        x, (ks, vs, convs, ssms) = jax.lax.scan(
+            body, x,
+            (params["superblocks"], cache["k"], cache["v"], cache["conv"],
+             cache["ssm"]),
+        )
+        x = L.apply_norm(cfg, params["ln_f"], x)
+        logits = L.unembed(cfg, params["embed"], x)
+        new_cache = {
+            "k": ks, "v": vs, "conv": convs, "ssm": ssms,
+            "length": pos + 1,
+        }
+        return logits, new_cache
+
+
+# =================================================================== RWKVLM
+
+class RWKVLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def _block_init(self, key):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": L.norm_params(cfg, k1),
+            "ln2": L.norm_params(cfg, k2),
+            "rwkv": R.rwkv_params(cfg, k1),
+        }
+
+    def init(self, rng):
+        cfg = self.cfg
+        ke, kb, kf = jax.random.split(rng, 3)
+        blocks = jax.vmap(self._block_init)(jax.random.split(kb, cfg.n_layers))
+        return {
+            "embed": L.embed_params(cfg, ke),
+            "blocks": blocks,
+            "ln_f": L.norm_params(cfg, kf),
+        }
+
+    def _backbone(self, params, x):
+        cfg = self.cfg
+
+        @jax.checkpoint
+        def body(xx, bp):
+            h = L.apply_norm(cfg, bp["ln1"], xx)
+            tm, _, _ = R.time_mix(cfg, bp["rwkv"], h)
+            xx = xx + tm
+            h = L.apply_norm(cfg, bp["ln2"], xx)
+            cm, _ = R.channel_mix(cfg, bp["rwkv"], h)
+            return shd.act(xx + cm, "hidden"), None
+
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        return L.apply_norm(cfg, params["ln_f"], x)
+
+    def train_loss(self, params, batch):
+        cfg = self.cfg
+        x = _inputs_embed(cfg, params, batch)
+        x = self._backbone(params, x)
+        loss = chunked_ce_loss(cfg, params["embed"], x, batch["labels"])
+        return loss, {"ce": loss}
+
+    def init_cache(self, batch_size, max_len=0, seq_sharded=False, dtype=None):
+        cfg = self.cfg
+        H = R.n_heads(cfg)
+        hd = cfg.rwkv_head_dim
+        dt = dtype or L.dtype_of(cfg)
+        Lc = cfg.n_layers
+        return {
+            "wkv": shd.act(jnp.zeros((Lc, batch_size, H, hd, hd), jnp.float32),
+                           "state"),
+            "tm_x": jnp.zeros((Lc, batch_size, 1, cfg.d_model), dt),
+            "cm_x": jnp.zeros((Lc, batch_size, 1, cfg.d_model), dt),
+            "length": jnp.zeros((), jnp.int32),
+        }
+
+    def prefill(self, params, batch):
+        """Forward over the prompt carrying states (chunked recurrence)."""
+        cfg = self.cfg
+        x = _inputs_embed(cfg, params, batch)
+
+        @jax.checkpoint
+        def body(xx, bp):
+            h = L.apply_norm(cfg, bp["ln1"], xx)
+            tm, s_fin, lx = R.time_mix(cfg, bp["rwkv"], h)
+            xx = xx + tm
+            h2 = L.apply_norm(cfg, bp["ln2"], xx)
+            cm, lcx = R.channel_mix(cfg, bp["rwkv"], h2)
+            return shd.act(xx + cm, "hidden"), (s_fin, lx, lcx)
+
+        x, (wkv, tm_x, cm_x) = jax.lax.scan(body, x, params["blocks"])
+        x = L.apply_norm(cfg, params["ln_f"], x)
+        logits = L.unembed(cfg, params["embed"], x[:, -1:])
+        cache = {
+            "wkv": wkv, "tm_x": tm_x, "cm_x": cm_x,
+            "length": jnp.full((), x.shape[1], jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params, batch, cache):
+        cfg = self.cfg
+        x = _inputs_embed(cfg, params, batch)
+
+        def body(xx, scan_in):
+            bp, wkv, tm_x, cm_x = scan_in
+            h = L.apply_norm(cfg, bp["ln1"], xx)
+            tm, wkv2, lx = R.time_mix_decode(cfg, bp["rwkv"], h, wkv, tm_x)
+            xx = xx + tm
+            h2 = L.apply_norm(cfg, bp["ln2"], xx)
+            cm, lcx = R.channel_mix(cfg, bp["rwkv"], h2, cm_x)
+            return xx + cm, (wkv2, lx, lcx)
+
+        x, (wkv, tm_x, cm_x) = jax.lax.scan(
+            body, x, (params["blocks"], cache["wkv"], cache["tm_x"], cache["cm_x"])
+        )
+        x = L.apply_norm(cfg, params["ln_f"], x)
+        logits = L.unembed(cfg, params["embed"], x)
+        return logits, {
+            "wkv": wkv, "tm_x": tm_x, "cm_x": cm_x,
+            "length": cache["length"] + 1,
+        }
+
+
+# =================================================================== EncDecLM
+
+class EncDecLM:
+    """Whisper-style enc-dec backbone.  Encoder inputs are precomputed
+    frame embeddings (conv frontend stub), sinusoidal positions."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def _enc_block_init(self, key):
+        cfg = self.cfg
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {
+            "ln1": L.norm_params(cfg, k1),
+            "attn": L.qkv_params(cfg, k2),
+            "ln2": L.norm_params(cfg, k3),
+            "mlp": L.mlp_params(cfg, k4),
+        }
+
+    def _dec_block_init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+        return {
+            "ln1": L.norm_params(cfg, ks[0]),
+            "self_attn": L.qkv_params(cfg, ks[1]),
+            "ln_x": L.norm_params(cfg, ks[2]),
+            "cross_attn": L.qkv_params(cfg, ks[3]),
+            "ln2": L.norm_params(cfg, ks[4]),
+            "mlp": L.mlp_params(cfg, ks[5]),
+        }
+
+    def init(self, rng):
+        cfg = self.cfg
+        ke, kb1, kb2, kf1, kf2 = jax.random.split(rng, 5)
+        enc = jax.vmap(self._enc_block_init)(
+            jax.random.split(kb1, cfg.n_enc_layers))
+        dec = jax.vmap(self._dec_block_init)(
+            jax.random.split(kb2, cfg.n_layers))
+        return {
+            "embed": L.embed_params(cfg, ke),
+            "enc_blocks": enc,
+            "dec_blocks": dec,
+            "ln_enc": L.norm_params(cfg, kf1),
+            "ln_f": L.norm_params(cfg, kf2),
+        }
+
+    def encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(L.dtype_of(cfg))
+        x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+        x = shd.act(x, "hidden")
+
+        @jax.checkpoint
+        def body(xx, bp):
+            h = L.apply_norm(cfg, bp["ln1"], xx)
+            q, k, v = L.project_qkv(cfg, bp["attn"], h)
+            att = L.causal_attention(cfg, q, k, v, causal=False)
+            xx = xx + L.attn_out(cfg, bp["attn"], att)
+            h = L.apply_norm(cfg, bp["ln2"], xx)
+            return shd.act(xx + L.apply_mlp(cfg, bp["mlp"], h), "hidden"), None
+
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        return L.apply_norm(cfg, params["ln_enc"], x)
+
+    def _dec_block(self, bp, x, enc_out, self_causal=True):
+        cfg = self.cfg
+        h = L.apply_norm(cfg, bp["ln1"], x)
+        q, k, v = L.project_qkv(cfg, bp["self_attn"], h)
+        att = L.causal_attention(cfg, q, k, v, causal=self_causal)
+        x = x + L.attn_out(cfg, bp["self_attn"], att)
+        h = L.apply_norm(cfg, bp["ln_x"], x)
+        q, _, _ = L.project_qkv(cfg, bp["cross_attn"], h)
+        ek = enc_out @ bp["cross_attn"]["wk"].astype(enc_out.dtype)
+        ev = enc_out @ bp["cross_attn"]["wv"].astype(enc_out.dtype)
+        B, Se, _ = enc_out.shape
+        ek = ek.reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+        ev = ev.reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+        att = L.causal_attention(cfg, q, ek, ev, causal=False)
+        x = x + L.attn_out(cfg, bp["cross_attn"], att)
+        h = L.apply_norm(cfg, bp["ln2"], x)
+        return shd.act(x + L.apply_mlp(cfg, bp["mlp"], h), "hidden")
+
+    def train_loss(self, params, batch):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        x = L.embed(cfg, params["embed"], batch["tokens"])
+        x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+
+        @jax.checkpoint
+        def body(xx, bp):
+            return self._dec_block(bp, xx, enc_out), None
+
+        x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+        x = L.apply_norm(cfg, params["ln_f"], x)
+        loss = chunked_ce_loss(cfg, params["embed"], x, batch["labels"])
+        return loss, {"ce": loss}
+
+    def init_cache(self, batch_size, max_len, enc_len, dtype=None):
+        cfg = self.cfg
+        dt = dtype or L.dtype_of(cfg)
+        Lc = cfg.n_layers
+        mk = lambda s: shd.act(jnp.zeros(s, dt), "cache")
+        return {
+            "k": mk((Lc, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim)),
+            "v": mk((Lc, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim)),
+            "ek": mk((Lc, batch_size, enc_len, cfg.n_kv_heads, cfg.head_dim)),
+            "ev": mk((Lc, batch_size, enc_len, cfg.n_kv_heads, cfg.head_dim)),
+            "length": jnp.zeros((), jnp.int32),
+        }
+
+    def prefill(self, params, batch):
+        """Encode frames, project cross-KV, run decoder prompt."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        x = L.embed(cfg, params["embed"], batch["tokens"])
+        x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+
+        def body(xx, bp):
+            B, Se, _ = enc_out.shape
+            ek = (enc_out @ bp["cross_attn"]["wk"].astype(enc_out.dtype)).reshape(
+                B, Se, cfg.n_kv_heads, cfg.head_dim)
+            ev = (enc_out @ bp["cross_attn"]["wv"].astype(enc_out.dtype)).reshape(
+                B, Se, cfg.n_kv_heads, cfg.head_dim)
+            h = L.apply_norm(cfg, bp["ln1"], xx)
+            q, k, v = L.project_qkv(cfg, bp["self_attn"], h)
+            att = L.causal_attention(cfg, q, k, v, causal=True)
+            xx = xx + L.attn_out(cfg, bp["self_attn"], att)
+            h = L.apply_norm(cfg, bp["ln_x"], xx)
+            q, _, _ = L.project_qkv(cfg, bp["cross_attn"], h)
+            att = L.causal_attention(cfg, q, ek, ev, causal=False)
+            xx = xx + L.attn_out(cfg, bp["cross_attn"], att)
+            h = L.apply_norm(cfg, bp["ln2"], xx)
+            xx = shd.act(xx + L.apply_mlp(cfg, bp["mlp"], h), "hidden")
+            return xx, (k, v, ek, ev)
+
+        x, (ks, vs, eks, evs) = jax.lax.scan(body, x, params["dec_blocks"])
+        x = L.apply_norm(cfg, params["ln_f"], x)
+        logits = L.unembed(cfg, params["embed"], x[:, -1:])
+        cache = {
+            "k": ks, "v": vs, "ek": eks, "ev": evs,
+            "length": jnp.full((), x.shape[1], jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params, batch, cache):
+        cfg = self.cfg
+        x = L.embed(cfg, params["embed"], batch["tokens"])
+        pos = cache["length"]
+        pe_table = L.sinusoidal_positions(cache["k"].shape[2], cfg.d_model,
+                                          x.dtype)
+        x = x + jax.lax.dynamic_slice_in_dim(pe_table, pos, 1, axis=0)[None]
+
+        def body(xx, scan_in):
+            bp, kc, vc, ek, ev = scan_in
+            h = L.apply_norm(cfg, bp["ln1"], xx)
+            q, k, v = L.project_qkv(cfg, bp["self_attn"], h)
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, L.quantize_kv(k, kc.dtype), pos, 1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, L.quantize_kv(v, vc.dtype), pos, 1)
+            att = L.decode_attention(q, kc, vc, pos + 1)
+            xx = xx + L.attn_out(cfg, bp["self_attn"], att.astype(xx.dtype))
+            h = L.apply_norm(cfg, bp["ln_x"], xx)
+            q, _, _ = L.project_qkv(cfg, bp["cross_attn"], h)
+            att = L.decode_attention(q, ek, ev, ek.shape[1])
+            xx = xx + L.attn_out(cfg, bp["cross_attn"], att.astype(xx.dtype))
+            h = L.apply_norm(cfg, bp["ln2"], xx)
+            xx = xx + L.apply_mlp(cfg, bp["mlp"], h)
+            return xx, (kc, vc)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                      cache["ek"], cache["ev"])
+        )
+        x = L.apply_norm(cfg, params["ln_f"], x)
+        logits = L.unembed(cfg, params["embed"], x)
+        new_cache = dict(cache)
+        new_cache.update({"k": ks, "v": vs, "length": pos + 1})
+        return logits, new_cache
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return EncDecLM(cfg)
+    if cfg.family == "ssm":
+        return RWKVLM(cfg)
+    if cfg.attn_every > 0:
+        return HybridLM(cfg)
+    return DecoderLM(cfg)

@@ -1,0 +1,26 @@
+"""Perf-iteration A/B switch.
+
+REPRO_PERF_BASELINE=1 reverts the beyond-baseline optimizations
+(EXPERIMENTS.md #Perf iterations H1/H2/H3/H5) so baseline and optimized
+cells can be lowered from the same tree under identical cost accounting:
+
+  H1  flat-head sharding constraint on q/k/v projections
+  H2  remat of mamba/rwkv chunk-scan bodies
+  H3  bf16 chunk outputs (mamba y)
+  H5  accumulator-typed norm/router statistics (vs f32 materialization)
+
+(H4b, the padded decode KV cache, is toggled per-config via
+``decode_head_pad``; H6, the sequential chunk scan, was refuted and
+removed.)
+"""
+import os
+
+BASELINE = os.environ.get("REPRO_PERF_BASELINE", "") == "1"
+
+
+def checkpoint_if_optimized(fn):
+    if BASELINE:
+        return fn
+    import jax
+
+    return jax.checkpoint(fn)

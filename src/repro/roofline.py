@@ -1,0 +1,161 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Three terms per (arch, shape, mesh), in seconds (TPU v5e targets):
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS        (197 TF/s bf16)
+    memory     = HLO_bytes_per_device / HBM_BW            (819 GB/s)
+    collective = collective_bytes_per_device / LINK_BW    (~50 GB/s/link)
+
+FLOPs/bytes/collective-bytes come from the trip-count-aware HLO walker
+(hlocost.py) over ``compiled.as_text()`` -- the stock
+``compiled.cost_analysis()`` visits every scan body exactly once, which
+undercounts a 64-layer scanned transformer by ~100x (verified; its raw
+numbers are still recorded for reference).  Collective bytes sum the
+*operand* sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, per assignment spec.
+
+MODEL_FLOPS uses 6*N*D (train) or 2*N*D (inference) with N = active
+params, D = global tokens; the ratio MODEL_FLOPS / (per-device HLO_FLOPs
+x chips) flags remat/redundancy waste (remat pushes it below 1; a value
+near 0.75 is the classic "4/3 remat overhead" signature).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+import numpy as np
+
+from . import hlocost
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: Dict[str, int]
+    model_flops: float
+    memory_report: dict
+    raw_cost_analysis: dict = dataclasses.field(default_factory=dict)
+    loop_info: list = dataclasses.field(default_factory=list)
+
+    @property
+    def t_compute(self):
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self):
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.coll_bytes_per_device / LINK_BW
+
+    @property
+    def bottleneck(self):
+        ts = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(ts, key=ts.get)
+
+    @property
+    def useful_flops_ratio(self):
+        total = self.flops_per_device * self.n_chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self):
+        """compute-term / achievable step time (sum-free bound: the
+        bottleneck term is the floor on step time)."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        return self.t_compute / t if t else 0.0
+
+    def row(self):
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.n_chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "hlo_flops_total": self.flops_per_device * self.n_chips,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "coll_breakdown": self.coll_breakdown,
+            "memory": self.memory_report,
+            "raw_cost_analysis": self.raw_cost_analysis,
+        }
+
+
+def memory_report(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    out = {}
+    for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    args = out.get("argument_size_in_bytes", 0)
+    alias = out.get("alias_size_in_bytes", 0)
+    out["resident_bytes"] = (
+        args + out.get("output_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0) - alias
+    )
+    return out
+
+
+def model_flops(cfg, cell) -> float:
+    n_active = cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        if cfg.is_encoder_decoder:
+            tokens = cell.global_batch * (cell.seq_len + cell.dec_len)
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        if cfg.is_encoder_decoder:
+            tokens = cell.global_batch * (cell.seq_len + cell.dec_len)
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence (+ attention over the cache, which is
+    # not in 2ND -- the useful-ratio for decode is expected << 1)
+    return 2.0 * n_active * cell.global_batch
+
+
+def analyze(compiled, arch, shape, mesh_name, n_chips, cfg, cell,
+            hlo_text=None) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    hc = hlocost.analyze_text(text)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, n_chips=n_chips,
+        flops_per_device=hc.flops, bytes_per_device=hc.bytes,
+        coll_bytes_per_device=hc.collective_bytes,
+        coll_breakdown={k: int(v) for k, v in hc.coll_breakdown.items()},
+        model_flops=model_flops(cfg, cell),
+        memory_report=memory_report(compiled),
+        raw_cost_analysis={
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes accessed": float(ca.get("bytes accessed", 0.0)),
+        },
+        loop_info=hc.loop_info[:32],
+    )

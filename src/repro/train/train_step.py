@@ -1,0 +1,103 @@
+"""Composable train step: microbatched grad accumulation + AdamW +
+optional error-bounded gradient compression.
+
+``make_train_step(model, opt_cfg, microbatches, gc_cfg)`` returns a pure
+function
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+suitable for ``jax.jit(..., donate_argnums=(0, 1))``.  Microbatching
+splits the *leading batch axis* and accumulates grads with a ``lax.scan``
+so peak activation memory is that of a single microbatch (this is what
+fits the 32B/398B train cells in 16 GB/chip -- see DESIGN.md #6).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import grad_compress as gc
+from . import optimizer as opt
+
+
+def _split_batch(batch: Dict[str, Any], n: int):
+    """Reshape every leaf (B, ...) -> (n, B//n, ...)."""
+
+    def sp(x):
+        # position_ids are (3, B, S): split axis 1
+        if x.ndim >= 2 and x.shape[0] == 3 and x.shape[1] % n == 0:
+            return x.reshape(x.shape[0], n, x.shape[1] // n, *x.shape[2:]).swapaxes(0, 1)
+        assert x.shape[0] % n == 0, (x.shape, n)
+        return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(
+    model,
+    opt_cfg: opt.AdamWConfig,
+    microbatches: int = 1,
+    gc_cfg: Optional[gc.GradCompressConfig] = None,
+):
+    gc_cfg = gc_cfg or gc.GradCompressConfig()
+
+    def loss_fn(params, batch):
+        loss, metrics = model.train_loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mbs = _split_batch(batch, microbatches)
+
+            def body(acc, mb):
+                # _split_batch already yields (3, b, S) position_ids slices
+                (l, m), g = grad_fn(params, mb)
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(jnp.add, acc_g, g)
+                return (acc_g, acc_l + l), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(
+                body, (zero_g, jnp.zeros((), jnp.float32)), mbs
+            )
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {}
+
+        residuals = opt_state.get("gc_residuals")
+        if gc_cfg.enabled:
+            grads, residuals, gcm = gc.compress_grads(grads, residuals, gc_cfg)
+        else:
+            gcm = {}
+
+        params, new_inner, om = opt.apply_updates(
+            params, grads, opt_state["adam"], opt_cfg
+        )
+        new_state = {"adam": new_inner}
+        if gc_cfg.enabled:
+            new_state["gc_residuals"] = residuals
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics.update(gcm)
+        metrics["loss"] = loss
+        return params, new_state, metrics
+
+    return train_step
+
+
+def init_train_state(model, rng, opt_cfg: opt.AdamWConfig,
+                     gc_cfg: Optional[gc.GradCompressConfig] = None):
+    params = model.init(rng)
+    state = {"adam": opt.init_state(params, opt_cfg)}
+    if gc_cfg and gc_cfg.enabled:
+        state["gc_residuals"] = gc.init_residuals(params)
+    return params, state

@@ -1,0 +1,20 @@
+import numpy as np
+import pytest
+
+# Core compression requires exact int64 predicates; model code is
+# dtype-explicit and unaffected by x64.
+import repro.core  # noqa: F401  (enables jax x64)
+
+
+@pytest.fixture(scope="session")
+def small_field():
+    from repro.data import synthetic
+
+    return synthetic.double_gyre(T=6, H=20, W=28)
+
+
+@pytest.fixture(scope="session")
+def advective_field():
+    from repro.data import synthetic
+
+    return synthetic.vortex_street(T=8, H=32, W=48)

@@ -1,0 +1,101 @@
+"""End-to-end compressor guarantees (paper Sec. IV constraints)."""
+import numpy as np
+import pytest
+
+from repro.core import CompressionConfig, compress, decompress, metrics
+from repro.core import fixedpoint, trajectory
+from repro.data import synthetic
+
+
+@pytest.mark.parametrize("predictor", ["lorenzo", "sl", "mop"])
+def test_roundtrip_guarantees(small_field, predictor):
+    u, v = small_field
+    cfg = CompressionConfig(eb=5e-3, mode="rel", predictor=predictor,
+                            dt=0.1, dx=2.0 / 27, dy=1.0 / 19)
+    blob, stats = compress(u, v, cfg)
+    ur, vr = decompress(blob)
+    assert ur.shape == u.shape and ur.dtype == np.float32
+    # (a) pointwise error constraint
+    assert np.abs(ur.astype(np.float64) - u).max() <= stats["eb_abs"]
+    assert np.abs(vr.astype(np.float64) - v).max() <= stats["eb_abs"]
+    # (b) every face predicate preserved -> FC_t = FC_s = 0
+    fc = trajectory.false_cases(u, v, ur, vr, stats["scale"])
+    assert fc["FC_t"] == 0 and fc["FC_s"] == 0
+    assert fc["CP_t_orig"] == fc["CP_t_rec"]
+    assert fc["CP_slab_orig"] == fc["CP_slab_rec"]
+
+
+@pytest.mark.parametrize("eb", [1e-4, 1e-3, 1e-2, 1e-1])
+def test_eb_sweep_preserves_trajectories(advective_field, eb):
+    u, v = advective_field
+    cfg = CompressionConfig(eb=eb, mode="rel", predictor="mop",
+                            dt=0.05, dx=2.0 / 47, dy=1.0 / 31)
+    blob, stats = compress(u, v, cfg)
+    ur, vr = decompress(blob)
+    assert np.abs(ur.astype(np.float64) - u).max() <= stats["eb_abs"]
+    uo, vo = fixedpoint.refix(u, v, stats["scale"])
+    ud, vd = fixedpoint.refix(ur, vr, stats["scale"])
+    t0 = trajectory.extract_tracks(uo, vo)
+    t1 = trajectory.extract_tracks(ud, vd)
+    assert t0 == t1  # identical track graph statistics
+
+
+def test_deterministic_bytes(small_field):
+    u, v = small_field
+    cfg = CompressionConfig(eb=1e-3, mode="rel")
+    b1, _ = compress(u, v, cfg)
+    b2, _ = compress(u, v, cfg)
+    assert b1 == b2
+
+
+def test_higher_eb_higher_ratio(advective_field):
+    u, v = advective_field
+    ratios = []
+    for eb in [1e-4, 1e-2]:
+        cfg = CompressionConfig(eb=eb, mode="rel")
+        _, stats = compress(u, v, cfg)
+        ratios.append(stats["ratio"])
+    assert ratios[1] > ratios[0]
+
+
+def test_abs_mode(small_field):
+    u, v = small_field
+    cfg = CompressionConfig(eb=1e-4, mode="abs")
+    blob, stats = compress(u, v, cfg)
+    ur, vr = decompress(blob)
+    assert np.abs(ur.astype(np.float64) - u).max() <= 1e-4
+
+
+def test_metrics_suite(small_field):
+    u, v = small_field
+    cfg = CompressionConfig(eb=1e-3, mode="rel")
+    blob, stats = compress(u, v, cfg)
+    ur, vr = decompress(blob)
+    m = metrics.evaluate(u, v, ur, vr, stats["scale"],
+                         stats["orig_bytes"], stats["comp_bytes"])
+    assert m["FC_t"] == 0 and m["FC_s"] == 0
+    assert m["n_traj_orig"] == m["n_traj_rec"]
+    assert m["CR"] > 1.0 and np.isfinite(m["PSNR"])
+
+
+def test_rejects_bad_shapes():
+    with pytest.raises(AssertionError):
+        compress(np.zeros((4, 4)), np.zeros((4, 4)))
+    with pytest.raises(AssertionError):
+        compress(np.zeros((1, 4, 4)), np.zeros((1, 4, 4)))
+
+
+def test_pathological_fields_still_exact():
+    """Fields full of zeros / ties exercise the SoS degeneracy paths."""
+    rng = np.random.default_rng(7)
+    T, H, W = 4, 10, 10
+    u = rng.integers(-2, 3, (T, H, W)).astype(np.float32) * 0.25
+    v = rng.integers(-2, 3, (T, H, W)).astype(np.float32) * 0.25
+    u[1] = 0.0           # a whole zero frame
+    v[:, :, 3] = 0.0
+    cfg = CompressionConfig(eb=0.05, mode="abs")
+    blob, stats = compress(u, v, cfg)
+    ur, vr = decompress(blob)
+    fc = trajectory.false_cases(u, v, ur, vr, stats["scale"])
+    assert fc["FC_t"] == 0 and fc["FC_s"] == 0
+    assert np.abs(ur - u).max() <= stats["eb_abs"]

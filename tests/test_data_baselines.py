@@ -1,0 +1,75 @@
+"""Synthetic datasets + baseline compressors behave as specified."""
+import numpy as np
+import pytest
+
+from repro.baselines import REGISTRY
+from repro.core import fixedpoint, trajectory
+from repro.data import synthetic
+from repro.data.tokens import TokenPipelineConfig, global_batch, host_batch
+
+
+@pytest.mark.parametrize("name", list(synthetic.DATASETS))
+def test_datasets_shape_and_finite(name):
+    u, v = synthetic.load(name, T=6, H=16, W=20)
+    assert u.shape == (6, 16, 20) and v.shape == (6, 16, 20)
+    assert u.dtype == np.float32
+    assert np.isfinite(u).all() and np.isfinite(v).all()
+    assert u.std() > 0
+
+
+def test_advected_turbulence_is_sl_predictable():
+    """Taylor-frozen field: frame t equals frame t-1 shifted by u0 px."""
+    u, v = synthetic.advected_turbulence(T=4, H=24, W=24, u0=3.0)
+    # interior columns shifted exactly by 3 (integer carrier speed)
+    np.testing.assert_allclose(
+        v[1][:, 3:], v[0][:, :-3], rtol=1e-4, atol=1e-5)
+
+
+def test_advected_turbulence_has_moving_cps():
+    u, v = synthetic.advected_turbulence(T=6, H=48, W=48)
+    scale, ufp, vfp = fixedpoint.to_fixed(u, v)
+    tr = trajectory.extract_tracks(ufp, vfp)
+    assert tr["n_tracks"] > 0
+
+
+def test_token_pipeline_deterministic_and_sharded():
+    cfg = TokenPipelineConfig(vocab=1000, batch=8, seq_len=32, seed=3)
+    t1, l1 = global_batch(cfg, 5)
+    t2, l2 = global_batch(cfg, 5)
+    assert (t1 == t2).all()  # pure function of (seed, step)
+    t3, _ = global_batch(cfg, 6)
+    assert not (t1 == t3).all()
+    assert (l1[:, :-1] == t1[:, 1:]).all()  # next-token labels
+    h0, _ = host_batch(cfg, 5, 0, 2)
+    h1, _ = host_batch(cfg, 5, 1, 2)
+    assert (np.concatenate([h0, h1]) == t1).all()
+
+
+@pytest.mark.parametrize("name", ["gzip", "zstd", "fpzip-like"])
+def test_lossless_baselines_roundtrip(name):
+    u, v = synthetic.double_gyre(T=4, H=12, W=16)
+    res = REGISTRY[name](u, v)
+    assert res["lossless"]
+    assert (res["u_rec"] == u).all() and (res["v_rec"] == v).all()
+    assert res["ratio"] >= 1.0
+
+
+@pytest.mark.parametrize("name", ["zfp-like", "sz3-like", "cpsz-like"])
+def test_lossy_baselines_respect_eb(name):
+    u, v = synthetic.double_gyre(T=4, H=12, W=16)
+    res = REGISTRY[name](u, v, eb=1e-2, mode="rel")
+    err = max(np.abs(res["u_rec"] - u).max(), np.abs(res["v_rec"] - v).max())
+    # zfp-like's transform bound is approximate (coefficient-domain);
+    # the SZ-family bounds are strict
+    slack = 4.0 if name == "zfp-like" else 1.0 + 1e-6
+    assert err <= res["eb_abs"] * slack, (name, err, res["eb_abs"])
+    assert res["ratio"] > 1.5
+
+
+def test_cpsz_like_preserves_slices_only():
+    """cpsz-like must have FC_t == 0 (its guarantee) on CP-rich data."""
+    u, v = synthetic.vortex_street(T=6, H=24, W=32)
+    res = REGISTRY["cpsz-like"](u, v, eb=2e-2, mode="rel")
+    fc = trajectory.false_cases(u, v, res["u_rec"], res["v_rec"],
+                                fixedpoint.to_fixed(u, v)[0])
+    assert fc["FC_t"] == 0

@@ -1,0 +1,118 @@
+"""Space-time mesh structure + error-bound derivation properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ebound, grid, sos
+
+
+def test_face_counts():
+    H, W, T = 5, 7, 4
+    c = grid.face_counts(H, W, T)
+    assert c["slice_faces"] == 2 * (H - 1) * (W - 1) * T
+    assert c["slab_faces"] == (
+        2 * (H * (W - 1) + (H - 1) * W + (H - 1) * (W - 1))
+        + 4 * (H - 1) * (W - 1)
+    ) * (T - 1)
+    assert c["tets"] == 6 * (H - 1) * (W - 1) * (T - 1)
+
+
+def test_faces_sorted_and_unique():
+    H, W = 6, 5
+    f = grid.slab_faces(H, W)
+    allf = np.concatenate(list(f.values()), axis=0)
+    assert (allf[:, 0] < allf[:, 1]).all() and (allf[:, 1] < allf[:, 2]).all()
+    keys = set(map(tuple, allf.tolist()))
+    assert len(keys) == len(allf)  # enumeration has no duplicates
+
+
+def test_tet_faces_conform():
+    """Every internal tet face appears in exactly 2 tets; boundary in 1.
+    Side faces shared between adjacent prisms must match (conformity)."""
+    H, W = 4, 4
+    tets = grid.slab_tets(H, W)
+    from collections import Counter
+
+    cnt = Counter()
+    for tet in tets:
+        for fidx in grid.TET_FACES:
+            cnt[tuple(tet[fidx])] += 1
+    assert set(cnt.values()) <= {1, 2}
+    # all enumerated slab faces + slices must be exactly the tet faces
+    f = grid.slab_faces(H, W)
+    enumerated = set(
+        map(tuple, np.concatenate(list(f.values()), axis=0).tolist())
+    )
+    assert enumerated == set(cnt.keys())
+
+
+def test_vertex_incident_face_budget():
+    """Paper: each vertex touches <= 36 faces in its 3x3x3 neighborhood
+    (6 in-plane per slice x interactions with two slabs)."""
+    H, W = 8, 8
+    f = grid.slab_faces(H, W)
+    allf = np.concatenate(list(f.values()), axis=0)
+    counts = np.bincount(allf.reshape(-1), minlength=2 * H * W)
+    # per-slab incidence; a vertex sees two slabs -> twice the plane-0
+    # count plus plane-1 count of the previous slab; bounded by 36.
+    per_vertex_two_slab = counts[: H * W] + counts[H * W :]
+    assert per_vertex_two_slab.max() <= 36 + 6  # +6: slice faces double-listed
+    # (slice0 of slab t duplicates slice1 of slab t-1 in this accounting)
+
+
+def _random_field(T, H, W, seed):
+    rng = np.random.default_rng(seed)
+    u = rng.integers(-(2**16), 2**16, (T, H, W)).astype(np.int64)
+    v = rng.integers(-(2**16), 2**16, (T, H, W)).astype(np.int64)
+    return u, v
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_eb_preserves_predicates_single_vertex(seed):
+    """Property behind Alg. 2: perturbing ONE vertex by <= its derived
+    bound never flips any face predicate."""
+    T, H, W = 3, 5, 5
+    u, v = _random_field(T, H, W, seed)
+    tau = 2**20
+    eb, _, _ = ebound.derive_vertex_eb(u, v, tau)
+    eb = np.asarray(eb)
+    p0_slice, p0_slab = map(np.asarray, ebound.all_face_predicates(u, v))
+
+    rng = np.random.default_rng(seed + 100)
+    for trial in range(20):
+        t, i, j = rng.integers(0, T), rng.integers(0, H), rng.integers(0, W)
+        b = int(eb[t, i, j])
+        if b == 0:
+            continue
+        du = rng.integers(-b, b + 1)
+        dv = rng.integers(-b, b + 1)
+        u2 = u.copy(); v2 = v.copy()
+        u2[t, i, j] += du
+        v2[t, i, j] += dv
+        p1_slice, p1_slab = map(np.asarray, ebound.all_face_predicates(u2, v2))
+        assert (p0_slice == p1_slice).all(), (t, i, j, b, du, dv)
+        assert (p0_slab == p1_slab).all(), (t, i, j, b, du, dv)
+
+
+def test_crossed_faces_force_lossless():
+    """Vertices of crossed faces get eb = 0 (stored losslessly)."""
+    T, H, W = 2, 3, 3
+    u = np.full((T, H, W), 7, dtype=np.int64)
+    v = np.full((T, H, W), 7, dtype=np.int64)
+    # plant a critical point inside the slice triangle {(0,0),(1,0),(1,1)}
+    u[0, 0, 0], v[0, 0, 0] = 10, 1
+    u[0, 1, 0], v[0, 1, 0] = -10, 8
+    u[0, 1, 1], v[0, 1, 1] = 2, -9
+    eb, slice_crossed, _ = ebound.derive_vertex_eb(u, v, 2**20)
+    eb = np.asarray(eb)
+    assert np.asarray(slice_crossed).any()
+    assert eb[0, 0, 0] == 0 and eb[0, 1, 0] == 0 and eb[0, 1, 1] == 0
+
+
+def test_eb_capped_by_tau():
+    T, H, W = 2, 4, 4
+    u = np.full((T, H, W), 1000, dtype=np.int64)
+    v = np.full((T, H, W), 1000, dtype=np.int64)
+    tau = 37
+    eb, _, _ = ebound.derive_vertex_eb(u, v, tau)
+    assert int(np.asarray(eb).max()) <= tau

@@ -1,0 +1,195 @@
+"""Dual-quantization, Lorenzo, SL predictor and coding-layer round trips."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encode, mop, predictors, quantize
+
+
+# ---------------------------------------------------------------- quantize
+
+@given(
+    st.integers(min_value=1, max_value=2**30),
+    st.integers(min_value=-(2**30), max_value=2**30),
+)
+@settings(max_examples=300, deadline=None)
+def test_dual_quantize_error_bound(tau, d):
+    xi_unit, n_levels = quantize.ladder(tau)
+    if n_levels < 1:
+        return
+    eb = jnp.full((1,), tau, dtype=jnp.int64)
+    k, lossless = quantize.quantize_eb(eb, xi_unit, n_levels)
+    x = quantize.dual_quantize(jnp.full((1,), d, dtype=jnp.int64), k, lossless, xi_unit)
+    if bool(lossless[0]):
+        return
+    recon = int(x[0]) * 2 * xi_unit
+    xi_k = xi_unit * (2 ** int(k[0]))
+    assert abs(recon - d) <= xi_k <= tau
+
+
+def test_quantize_eb_ladder_monotone():
+    tau = 10_000
+    xi_unit, n_levels = quantize.ladder(tau)
+    ebs = jnp.asarray(np.arange(0, tau * 2, 97), dtype=jnp.int64)
+    k, lossless = quantize.quantize_eb(ebs, xi_unit, n_levels)
+    k = np.asarray(k); lossless = np.asarray(lossless)
+    ebs = np.asarray(ebs)
+    # quantized bound never exceeds requested bound, and never exceeds tau
+    coded = ~lossless
+    assert (xi_unit * (2.0 ** k[coded]) <= np.maximum(ebs[coded], xi_unit)).all()
+    assert (xi_unit * (2 ** k[coded].max()) <= 2 * tau)
+
+
+# ---------------------------------------------------------------- lorenzo
+
+@pytest.mark.parametrize("shape", [(3, 8, 8), (2, 17, 13), (4, 16, 33), (2, 5, 50)])
+@pytest.mark.parametrize("block", [4, 16])
+def test_lorenzo_roundtrip(shape, block):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-(2**20), 2**20, shape).astype(np.int64))
+    res = predictors.lorenzo_encode(x, block)
+    # decode frame by frame
+    prev = jnp.zeros(shape[1:], dtype=jnp.int64)
+    out = []
+    for t in range(shape[0]):
+        prev = predictors.lorenzo_decode_frame(prev, res[t], block)
+        out.append(prev)
+    got = jnp.stack(out)
+    assert (np.asarray(got) == np.asarray(x)).all()
+
+
+@given(st.integers(min_value=2, max_value=6), st.integers(min_value=0, max_value=2**31))
+@settings(max_examples=30, deadline=None)
+def test_d2_c2_inverse(n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-1000, 1000, (n, n + 3)).astype(np.int64))
+    block = 4
+    assert (np.asarray(predictors.c2_block(predictors.d2_block(x, block), block)) ==
+            np.asarray(x)).all()
+
+
+# ---------------------------------------------------------------- SL
+
+def test_bilinear_matches_manual():
+    f = jnp.asarray(np.arange(12, dtype=np.float64).reshape(3, 4))
+    got = predictors.bilinear(f, jnp.asarray([1.5]), jnp.asarray([2.25]))
+    # manual: rows 1,2 cols 2,3
+    v = (1 - 0.5) * (1 - 0.25) * 6 + (1 - 0.5) * 0.25 * 7 + 0.5 * (1 - 0.25) * 10 + 0.5 * 0.25 * 11
+    assert np.allclose(np.asarray(got)[0], v)
+
+
+def test_bilinear_clamps_at_boundary():
+    f = jnp.asarray(np.ones((4, 4)))
+    got = predictors.bilinear(f, jnp.asarray([-3.0, 9.0]), jnp.asarray([0.0, 3.9]))
+    assert np.allclose(np.asarray(got), 1.0)
+
+
+def test_sl_encode_decode_consistency():
+    """SL residual + same-side prediction reproduces X exactly."""
+    rng = np.random.default_rng(1)
+    T, H, W = 4, 12, 12
+    xu = jnp.asarray(rng.integers(-500, 500, (T, H, W)).astype(np.int64))
+    xv = jnp.asarray(rng.integers(-500, 500, (T, H, W)).astype(np.int64))
+    g2f, cx, cy = 0.01, 0.5, 0.5
+    ru, rv = predictors.sl_encode(xu, xv, g2f, cx, cy)
+    for t in range(1, T):
+        pu, pv = predictors.sl_predict_frame(xu[t - 1], xv[t - 1], g2f, cx, cy)
+        assert (np.asarray(ru[t] + pu) == np.asarray(xu[t])).all()
+        assert (np.asarray(rv[t] + pv) == np.asarray(xv[t])).all()
+
+
+def test_sl_predicts_pure_translation():
+    """A pattern advected by a uniform velocity field is predicted almost
+    exactly by the SL predictor (the property motivating the paper)."""
+    T, H, W = 3, 32, 32
+    speed = 2.0  # pixels per frame along j
+    ii, jj = np.meshgrid(np.arange(H), np.arange(W), indexing="ij")
+    frames_u = []
+    for t in range(T):
+        pattern = np.sin(2 * np.pi * (jj - speed * t) / 8.0) * 100.0
+        frames_u.append(pattern)
+    xu = jnp.asarray(np.stack(frames_u)).astype(jnp.int64)
+    # u field = constant speed (in data units: grid_to_float=1, cfl_x=1)
+    xv = jnp.zeros_like(xu)
+    xu_vel = jnp.full((T, H, W), speed, dtype=jnp.int64)
+    # build velocity-carrying fields: u carries the advecting velocity
+    pu, pv = predictors.sl_predict_frame(xu_vel[0], xv[0], 1.0, 1.0, 1.0)
+    # velocity field is uniform => departure point = (i, j - speed)
+    # prediction of the *velocity* field itself is exact
+    assert (np.asarray(pu) == speed).all()
+
+
+# ---------------------------------------------------------------- coding
+
+@given(st.lists(st.integers(min_value=-(2**40), max_value=2**40), min_size=1,
+                max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_symbols_roundtrip(vals):
+    res = np.asarray(vals, dtype=np.int64)
+    sym, esc = encode.to_symbols(res)
+    back = encode.from_symbols(sym, esc, res.shape)
+    assert (back == res).all()
+
+
+@pytest.mark.parametrize("seed,dist", [(0, "geometric"), (1, "uniform"), (2, "const")])
+def test_huffman_roundtrip(seed, dist):
+    rng = np.random.default_rng(seed)
+    if dist == "geometric":
+        sym = np.minimum(rng.geometric(0.3, 5000) - 1, 255).astype(np.uint8)
+    elif dist == "uniform":
+        sym = rng.integers(0, 256, 5000).astype(np.uint8)
+    else:
+        sym = np.zeros(5000, dtype=np.uint8)
+    lengths, data, n = encode.huffman_encode(sym)
+    got = encode.huffman_decode(lengths, data, n)
+    assert (got == sym).all()
+
+
+def test_container_roundtrip():
+    header = {"a": 1, "s": "x"}
+    secs = {
+        "i64": np.arange(10, dtype=np.int64),
+        "f32": np.linspace(0, 1, 7, dtype=np.float32).reshape(7, 1),
+        "u8": np.frombuffer(b"hello", dtype=np.uint8),
+    }
+    blob = encode.pack(header, secs)
+    h2, s2 = encode.unpack(blob)
+    assert h2["a"] == 1 and h2["s"] == "x"
+    for k in secs:
+        assert (np.asarray(s2[k]) == secs[k]).all()
+
+
+# ---------------------------------------------------------------- MoP
+
+def test_mop_fold_unfold():
+    x = jnp.asarray(np.arange(-20, 20, dtype=np.int64))
+    assert (np.asarray(mop.unfold(mop.fold(x))) == np.asarray(x)).all()
+
+
+def test_mop_selects_sl_for_advected_structure():
+    """Spatially-rough content passively advected by a uniform carrier
+    flow: SL must beat Lorenzo and MoP must select it (the property
+    motivating paper Sec. VI).  u carries the flow (constant 300 data
+    units -> exactly 3 px/frame with cfl_x = 0.01); v is a rough texture
+    riding on it."""
+    rng = np.random.default_rng(5)
+    T, H, W = 4, 32, 64
+    base = rng.integers(-1000, 1000, (H, W + 3 * T)).astype(np.int64)
+    xu = jnp.full((T, H, W), 300, dtype=jnp.int64)
+    xv = jnp.asarray(
+        np.stack([base[:, 3 * (T - t) : 3 * (T - t) + W] for t in range(T)])
+    )  # texture moves +3 px in j per frame, carried by u > 0
+
+    res3_u = predictors.lorenzo_encode(xu, 16)
+    res3_v = predictors.lorenzo_encode(xv, 16)
+    ressl_u, ressl_v = predictors.sl_encode(xu, xv, 1.0, 0.01, 1e-9)
+    # SL residuals on the advected texture beat Lorenzo's by a wide margin
+    a3 = np.abs(np.asarray(res3_v[1:])).mean()
+    asl = np.abs(np.asarray(ressl_v[1:])).mean()
+    assert asl < a3 * 0.2, (asl, a3)
+
+    bm = mop.select(res3_u, res3_v, ressl_u, ressl_v, 16)
+    bm = np.asarray(bm)
+    assert not bm[0].any()           # frame 0 has no previous frame
+    assert bm[1:].mean() > 0.5       # SL selected on most tiles

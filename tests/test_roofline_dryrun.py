@@ -1,0 +1,126 @@
+"""Roofline machinery: trip-count-aware HLO cost walker + dry-run
+plumbing (tiny-mesh subprocess)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import hlocost, roofline
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_walker_counts_scan_trip_counts():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    txt = jax.jit(f).lower(x, w).compile().as_text()
+    c = hlocost.analyze_text(txt)
+    want = 2 * 128**3 * 10
+    assert abs(c.flops - want) / want < 0.01, (c.flops, want)
+    assert any(t == 10 for _, t in c.loop_info)
+
+
+def test_walker_nested_scans():
+    def g(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            c, _ = jax.lax.scan(inner, c, None, length=5)
+            return c, None
+        out, _ = jax.lax.scan(outer, x, None, length=3)
+        return out
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    txt = jax.jit(g).lower(x, w).compile().as_text()
+    c = hlocost.analyze_text(txt)
+    want = 2 * 64**3 * 15
+    assert abs(c.flops - want) / want < 0.02
+
+
+def test_walker_does_not_overcharge_scan_slices():
+    """A scan reading tiny slices of a big stacked xs must not be billed
+    the full buffer per iteration (the H6 accounting bug)."""
+    def f(xs):
+        def body(c, x_t):
+            return c + x_t, None
+        out, _ = jax.lax.scan(body, jnp.zeros((128,), jnp.float32), xs)
+        return out
+
+    xs = jax.ShapeDtypeStruct((1000, 128), jnp.float32)
+    txt = jax.jit(f).lower(xs).compile().as_text()
+    c = hlocost.analyze_text(txt)
+    # true traffic ~ read xs once + carry updates: << 10 x buffer size
+    assert c.bytes < 10 * 1000 * 128 * 4, c.bytes
+
+
+def test_shape_bytes_parsing():
+    assert hlocost.shape_bytes("f32[2,3]{1,0}") == 24
+    assert hlocost.shape_bytes("bf16[8]") == 16
+    assert hlocost.shape_bytes("(f32[2], s8[4,4])") == 24
+    assert hlocost.shape_bytes("pred[10]") == 10
+
+
+def test_collective_parsing():
+    txt = """
+ENTRY %main.1 (x: f32[64]) -> f32[64] {
+  %x = f32[64]{0} parameter(0)
+  ROOT %ar = f32[64]{0} all-reduce(%x), replica_groups={}, to_apply=%add
+}
+"""
+    c = hlocost.analyze_text(txt)
+    assert c.collective_bytes == 256
+    assert c.coll_breakdown.get("all-reduce") == 256
+
+
+def test_roofline_terms_and_bottleneck():
+    r = roofline.Roofline(
+        arch="a", shape="s", mesh="m", n_chips=4,
+        flops_per_device=197e12, bytes_per_device=819e9 * 2,
+        coll_bytes_per_device=50e9 * 0.5, coll_breakdown={},
+        model_flops=197e12 * 4 * 0.5, memory_report={},
+    )
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 2.0) < 1e-9
+    assert abs(r.t_collective - 0.5) < 1e-9
+    assert r.bottleneck == "memory"
+    assert abs(r.roofline_fraction - 0.5) < 1e-9
+    assert abs(r.useful_flops_ratio - 0.5) < 1e-9
+
+
+def test_dryrun_cell_on_tiny_mesh():
+    """Lower+compile one real cell end-to-end in a 512-device subprocess
+    (the actual deliverable path, smallest arch, single shape)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "qwen1_5_0_5b", "--shape", "decode_32k", "--mesh", "single"],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "1 ok, 0 skip, 0 fail" in r.stdout
+
+
+def test_model_flops_formulas():
+    import repro.configs as C
+
+    mod = C.get("yi_6b")
+    cell = mod.CELLS["train_4k"]
+    mf = roofline.model_flops(mod.CONFIG, cell)
+    want = 6.0 * mod.CONFIG.param_count() * 256 * 4096
+    assert abs(mf - want) / want < 1e-6
+    cell = mod.CELLS["decode_32k"]
+    mf = roofline.model_flops(mod.CONFIG, cell)
+    assert mf == 2.0 * mod.CONFIG.param_count() * 128

@@ -1,0 +1,104 @@
+"""SoS predicate properties: determinism, consistency, sign-exactness."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sos
+
+ints = st.integers(min_value=-(2**30) + 1, max_value=2**30 - 1)
+idxs = st.integers(min_value=0, max_value=2**40)
+
+
+@given(ints, ints, ints, ints, idxs, idxs)
+@settings(max_examples=300, deadline=None)
+def test_sign_matches_det_when_nonzero(au, av, bu, bv, ma, mb):
+    if ma == mb:
+        mb += 1
+    d = au * bv - av * bu
+    s = sos.sign_det_sos(
+        np,
+        np.array([au]), np.array([av]), np.array([ma]),
+        np.array([bu]), np.array([bv]), np.array([mb]),
+    )[0]
+    if d != 0:
+        assert s == np.sign(d)
+    assert s in (-1, 1)  # never zero under SoS
+
+
+@given(ints, ints, ints, ints, idxs, idxs)
+@settings(max_examples=200, deadline=None)
+def test_antisymmetry(au, av, bu, bv, ma, mb):
+    if ma == mb:
+        mb += 1
+    args = (np.array([au]), np.array([av]), np.array([ma]),
+            np.array([bu]), np.array([bv]), np.array([mb]))
+    s1 = sos.sign_det_sos(np, *args)[0]
+    s2 = sos.sign_det_sos(
+        np, args[3], args[4], args[5], args[0], args[1], args[2]
+    )[0]
+    assert s1 == -s2
+
+
+def test_degenerate_resolved_consistently():
+    # identical values, different indices: must resolve deterministically
+    a = np.array([5]); b = np.array([5])
+    s1 = sos.sign_det_sos(np, a, a, np.array([1]), b, b, np.array([2]))
+    s2 = sos.sign_det_sos(np, a, a, np.array([1]), b, b, np.array([2]))
+    assert s1 == s2 and s1[0] in (-1, 1)
+
+
+def test_origin_vertex_resolved():
+    # one vertex exactly at the origin -- classic degeneracy (case ii)
+    u = np.array([[0, 5, -3]])
+    v = np.array([[0, -2, 4]])
+    idx = np.array([[10, 11, 12]])
+    p = sos.face_crossed_vals(np, u, v, idx)
+    assert p.dtype == bool  # resolves without error, deterministic
+    p2 = sos.face_crossed_vals(np, u, v, idx)
+    assert (p == p2).all()
+
+
+@given(st.lists(st.tuples(ints, ints), min_size=3, max_size=3),
+       st.permutations([0, 1, 2]))
+@settings(max_examples=200, deadline=None)
+def test_face_predicate_order_invariant(vals, perm):
+    """Crossing decision must not depend on the vertex order given."""
+    u = np.array([[x for x, _ in vals]])
+    v = np.array([[y for _, y in vals]])
+    idx = np.array([[100, 200, 300]])
+    pu = u[:, perm]
+    pv = v[:, perm]
+    pidx = idx[:, perm]
+    p1 = sos.face_crossed_vals(np, u, v, idx)[0]
+    p2 = sos.face_crossed_vals(np, pu, pv, pidx)[0]
+    assert p1 == p2
+
+
+def test_strict_interior_and_exterior():
+    # origin strictly inside conv{(1,0), (-1,1), (-1,-1)}
+    u = np.array([[1, -1, -1]])
+    v = np.array([[0, 1, -1]])
+    idx = np.array([[0, 1, 2]])
+    assert sos.face_crossed_vals(np, u, v, idx)[0]
+    # clearly outside (all in right half-plane)
+    u = np.array([[1, 2, 3]])
+    v = np.array([[1, -1, 2]])
+    assert not sos.face_crossed_vals(np, u, v, idx)[0]
+
+
+def test_jax_numpy_agree():
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    u = rng.integers(-(2**20), 2**20, (500, 3))
+    v = rng.integers(-(2**20), 2**20, (500, 3))
+    # inject degeneracies
+    u[::7, 1] = u[::7, 0]
+    v[::7, 1] = v[::7, 0]
+    u[::11] = 0
+    idx = np.arange(1500).reshape(500, 3)
+    pn = sos.face_crossed_vals(np, u, v, idx)
+    pj = np.asarray(
+        sos.face_crossed_vals(jnp, jnp.asarray(u), jnp.asarray(v), jnp.asarray(idx))
+    )
+    assert (pn == pj).all()
