@@ -65,6 +65,8 @@ def run_lengths(sym, maxlen=20):
 
 
 def main(small=True, eb=1e-2, log=print):
+    import time
+
     out = []
     for name, (u, v, meta) in datasets.load_all(small).items():
         for pred in ("lorenzo", "sl", "mop"):
@@ -72,6 +74,12 @@ def main(small=True, eb=1e-2, log=print):
             pmf, ccdf, h0 = pmf_ccdf(sym)
             rl_ccdf, rl_stats = run_lengths(sym)
             hbits = encode.huffman_stream_size_bits(sym) / max(len(sym), 1)
+            # realized round trip through the vectorized decoder
+            lengths, packed, n = encode.huffman_encode(sym)
+            t0 = time.perf_counter()
+            back = encode.huffman_decode(lengths, packed, n)
+            t_dec = time.perf_counter() - t0
+            assert (back == sym).all()
             out.append({
                 "dataset": name, "predictor": pred, "H0": round(h0, 4),
                 "huffman_bits_per_sym": round(hbits, 4),
@@ -79,11 +87,13 @@ def main(small=True, eb=1e-2, log=print):
                 "tail_gt3": round(ccdf.get(7, 0.0), 6),
                 "run_mean": round(rl_stats.get("mean", 0.0), 2),
                 "run_p90": round(rl_stats.get("p90", 0.0), 2),
+                "huff_dec_Msym_s": round(n / max(t_dec, 1e-9) / 1e6, 2),
                 "pmf": pmf, "rl_ccdf": rl_ccdf,
             })
             log(f"[enc] {name} {pred:8s} H0={h0:.3f} huff={hbits:.3f} "
                 f"P(|q|<=1)={out[-1]['p_center']:.3f} "
-                f"run_mean={out[-1]['run_mean']}")
+                f"run_mean={out[-1]['run_mean']} "
+                f"dec={out[-1]['huff_dec_Msym_s']}Msym/s")
     return out
 
 

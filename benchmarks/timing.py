@@ -1,6 +1,19 @@
-"""Fig. 8 analogue: compression/decompression wall time per method."""
+"""Fig. 8 analogue + perf-trajectory emitter.
+
+``main()`` reproduces the paper-style wall-time table (baselines vs our
+predictors).  ``bench_compress()`` is the BENCH_compress.json emitter
+this repo tracks from PR 1 on: encode/decode MB/s per predictor x
+backend on the synthetic suite, plus a seed-vs-fused A/B on a
+64x256x256 mop encode (cfg.fused=False replays the seed pipeline, so
+the speedup is measured in the same run under identical accounting).
+
+    PYTHONPATH=src python benchmarks/timing.py            # full emit
+    PYTHONPATH=src python benchmarks/timing.py --smoke    # CI-sized
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
@@ -8,7 +21,24 @@ import numpy as np
 from repro.baselines import REGISTRY
 from repro.core import CompressionConfig, compress, decompress
 
-from . import datasets
+try:
+    from . import datasets
+except ImportError:  # invoked as a script: python benchmarks/timing.py
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import datasets
+
+
+def _time_ours(u, v, cfg):
+    t0 = time.perf_counter()
+    blob, stats = compress(u, v, cfg)
+    tc = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    decompress(blob)
+    td = time.perf_counter() - t0
+    return blob, stats, tc, td
 
 
 def main(small=True, eb=1e-2, log=print):
@@ -25,12 +55,7 @@ def main(small=True, eb=1e-2, log=print):
             })
         for pred in ("lorenzo", "sl", "mop"):
             cfg = CompressionConfig(eb=eb, mode="rel", predictor=pred, **meta)
-            t0 = time.perf_counter()
-            blob, stats = compress(u, v, cfg)
-            tc = time.perf_counter() - t0
-            t0 = time.perf_counter()
-            decompress(blob)
-            td = time.perf_counter() - t0
+            _, stats, tc, td = _time_ours(u, v, cfg)
             rows.append({
                 "dataset": name, "method": f"ours-{pred}",
                 "t_c": round(tc, 3), "t_d": round(td, 3),
@@ -42,9 +67,102 @@ def main(small=True, eb=1e-2, log=print):
     return rows
 
 
-if __name__ == "__main__":
-    import json
+def bench_compress(small=True, eb=1e-2, backends=("xla",),
+                   predictors=("lorenzo", "sl", "mop"),
+                   speedup_shape=(64, 256, 256), repeat=2, log=print,
+                   data=None):
+    """Emit the BENCH_compress.json payload.
 
-    rows = main()
-    with open("experiments/timing.json", "w") as f:
-        json.dump(rows, f, indent=1)
+    Each (dataset, predictor, backend) cell reports best-of-``repeat``
+    encode/decode wall time and MB/s (first call pays jit compilation;
+    best-of captures the steady state the roadmap cares about).
+    """
+    from repro.data import synthetic
+
+    rows = []
+    if data is None:
+        data = datasets.load_all(small)
+    for name, (u, v, meta) in data.items():
+        mb = (u.nbytes + v.nbytes) / 2**20
+        for pred in predictors:
+            for be in backends:
+                cfg = CompressionConfig(eb=eb, mode="rel", predictor=pred,
+                                        backend=be, **meta)
+                tcs, tds = [], []
+                for _ in range(repeat):
+                    blob, stats, tc, td = _time_ours(u, v, cfg)
+                    tcs.append(tc)
+                    tds.append(td)
+                rows.append({
+                    "dataset": name, "predictor": pred, "backend": be,
+                    "MB": round(mb, 2),
+                    "t_encode": round(min(tcs), 4),
+                    "t_decode": round(min(tds), 4),
+                    "MBps_encode": round(mb / max(min(tcs), 1e-9), 2),
+                    "MBps_decode": round(mb / max(min(tds), 1e-9), 2),
+                    "ratio": round(stats["ratio"], 3),
+                    "verify_rounds": stats["verify_rounds"],
+                })
+                log(f"[bench] {name} {pred:8s} {be:6s} "
+                    f"enc {rows[-1]['MBps_encode']:8.2f} MB/s  "
+                    f"dec {rows[-1]['MBps_decode']:8.2f} MB/s  "
+                    f"ratio {rows[-1]['ratio']}")
+
+    comparison = None
+    if speedup_shape is not None:
+        T, H, W = speedup_shape
+        u, v = synthetic.advected_turbulence(T=T, H=H, W=W)
+        mb = (u.nbytes + v.nbytes) / 2**20
+        base = CompressionConfig(eb=eb, mode="rel", predictor="mop",
+                                 backend="xla", verify=True, fused=False)
+        opt = CompressionConfig(eb=eb, mode="rel", predictor="mop",
+                                backend="xla", verify=True, fused=True)
+        t_seed = min(_time_ours(u, v, base)[2] for _ in range(repeat))
+        t_fused = min(_time_ours(u, v, opt)[2] for _ in range(repeat))
+        comparison = {
+            "field": f"advected_turbulence {T}x{H}x{W}",
+            "predictor": "mop", "backend": "xla", "verify": True,
+            "MB": round(mb, 2),
+            "t_encode_seed": round(t_seed, 3),
+            "t_encode_fused": round(t_fused, 3),
+            "speedup": round(t_seed / max(t_fused, 1e-9), 3),
+        }
+        log(f"[bench] seed-vs-fused mop {T}x{H}x{W}: "
+            f"{t_seed:.2f}s -> {t_fused:.2f}s "
+            f"({comparison['speedup']:.2f}x)")
+    return {"rows": rows, "seed_vs_fused": comparison,
+            "eb": eb, "small": small}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run (one tiny field, tiny A/B shape)")
+    ap.add_argument("--large", action="store_true",
+                    help="use the large dataset variants")
+    ap.add_argument("--backends", default="xla",
+                    help="comma-separated: xla,pallas,numpy")
+    ap.add_argument("--out", default="BENCH_compress.json")
+    ap.add_argument("--eb", type=float, default=1e-2)
+    ap.add_argument("--legacy-table", action="store_true",
+                    help="also emit the paper-style baseline table")
+    args = ap.parse_args()
+
+    backends = tuple(args.backends.split(","))
+    if args.smoke:
+        from repro.data import synthetic
+
+        tiny = {"DG-tiny": (*synthetic.double_gyre(T=6, H=24, W=32),
+                            dict(dt=0.1, dx=2.0 / 31, dy=1.0 / 23))}
+        payload = bench_compress(
+            eb=args.eb, backends=backends, data=tiny,
+            predictors=("mop",), speedup_shape=(6, 32, 32), repeat=1)
+    else:
+        payload = bench_compress(
+            small=not args.large, eb=args.eb, backends=backends,
+            repeat=2)
+    if args.legacy_table:
+        payload["paper_table"] = main(small=not args.large, eb=args.eb)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {args.out}")

@@ -12,7 +12,8 @@ import time
 import zlib
 
 import numpy as np
-import zstandard
+
+from ..core import encode as _enc
 
 
 def _timed(fn):
@@ -37,14 +38,13 @@ def gzip_compress(u, v, **kw):
 
 def zstd_compress(u, v, level=12, **kw):
     raw = np.ascontiguousarray(u).tobytes() + np.ascontiguousarray(v).tobytes()
-    c = zstandard.ZstdCompressor(level=level)
-    blob, tc = _timed(lambda: c.compress(raw))
-    d = zstandard.ZstdDecompressor()
-    dec, td = _timed(lambda: d.decompress(blob))
+    blob, tc = _timed(lambda: _enc.codec_compress(raw, level))
+    codec = _enc.backend_codec()
+    dec, td = _timed(lambda: _enc.codec_decompress(blob, codec))
     assert dec == raw
     n = len(raw)
     return {
-        "name": "zstd", "lossless": True,
+        "name": codec, "lossless": True,
         "orig_bytes": n, "comp_bytes": len(blob),
         "ratio": n / len(blob), "t_compress": tc, "t_decompress": td,
         "u_rec": u, "v_rec": v,
@@ -70,15 +70,15 @@ def _unbyteplane(raw: bytes, shape, dtype) -> np.ndarray:
 
 
 def fpzip_like(u, v, level=12, **kw):
-    c = zstandard.ZstdCompressor(level=level)
     raw_u = _byteplane(u)
     raw_v = _byteplane(v)
-    blob, tc = _timed(lambda: (c.compress(raw_u), c.compress(raw_v)))
-    d = zstandard.ZstdDecompressor()
+    blob, tc = _timed(lambda: (_enc.codec_compress(raw_u, level),
+                               _enc.codec_compress(raw_v, level)))
+    codec = _enc.backend_codec()
 
     def dec():
-        ur = _unbyteplane(d.decompress(blob[0]), u.shape, u.dtype)
-        vr = _unbyteplane(d.decompress(blob[1]), v.shape, v.dtype)
+        ur = _unbyteplane(_enc.codec_decompress(blob[0], codec), u.shape, u.dtype)
+        vr = _unbyteplane(_enc.codec_decompress(blob[1], codec), v.shape, v.dtype)
         return ur, vr
 
     (ur, vr), td = _timed(dec)

@@ -18,7 +18,6 @@ import time
 
 import jax.numpy as jnp
 import numpy as np
-import zstandard
 
 from ..core import ebound, encode, fixedpoint, predictors, quantize
 from ..core.compressor import (
@@ -69,8 +68,7 @@ def zfp_like(u, v, eb=1e-2, mode="rel", level=12, **kw):
     qu, qv = fwd(u), fwd(v)
     payload = qu.astype(np.int16).tobytes() + qv.astype(np.int16).tobytes()
     over = np.concatenate([qu[np.abs(qu) > 32000], qv[np.abs(qv) > 32000]])
-    c = zstandard.ZstdCompressor(level=level)
-    blob = c.compress(payload)
+    blob = encode.codec_compress(payload, level)
     tc = time.perf_counter() - t0
     t0 = time.perf_counter()
     ur, vr = inv(np.clip(qu, -32000, 32000)), inv(np.clip(qv, -32000, 32000))
@@ -199,17 +197,19 @@ def cpsz_like(u, v, eb=1e-2, mode="rel", level=12, block=16, **kw):
 def _slice_only_eb(ufp, vfp, tau):
     """Per-vertex bound from time-slice faces only (cpSZ semantics)."""
     from ..core import grid, sos
-    from ..core.ebound import _faces_eb_update
+    from ..core.ebound import _faces_eb_update, _incidence_table
 
     T, H, W = ufp.shape
     HW = H * W
     slice_tab = jnp.asarray(grid.slab_faces(H, W)["slice0"])
+    slice_inc = jnp.asarray(_incidence_table(H, W, "slice"))
     u2 = ufp.reshape(T, HW)
     v2 = vfp.reshape(T, HW)
 
     def body(carry, x):
         t, u_t, v_t = x
-        eb, _ = _faces_eb_update(u_t, v_t, t * HW, slice_tab, tau, HW)
+        eb, _ = _faces_eb_update(u_t, v_t, t * HW, slice_tab, tau, HW,
+                                 slice_inc)
         return carry, eb
 
     _, ebs = jax.lax.scan(

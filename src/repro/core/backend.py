@@ -1,0 +1,257 @@
+"""Kernel-dispatch backend for the compression hot path (DESIGN.md #4).
+
+The three hot ops of the pipeline -- fused dual-quantize + block-Lorenzo
+residual, semi-Lagrangian prediction, and the SoS face predicate -- are
+routed through one of three interchangeable backends:
+
+  ``pallas``  the Pallas TPU kernels under ``repro.kernels`` (compiled
+              on TPU, ``interpret=True`` elsewhere) -- the production
+              device path;
+  ``xla``     the pure-jnp implementations in core (default off-TPU);
+  ``numpy``   host reference implementations.
+
+Determinism contract (DESIGN.md #4):
+
+* The two INTEGER ops (Lorenzo residual, SoS predicate) are exact and
+  bit-identical across all three backends; tests/test_backend_parity.py
+  enforces this on residual streams, lossless masks and blockmaps.
+* The SL predictor is float and float arithmetic is not bit-stable
+  across different XLA compilation contexts, so encoder, verify loop
+  and decoder all call the SAME per-frame executable returned by
+  ``sl_stepper`` -- consistency is structural, not numerical.  The
+  blob header records which backend produced the SL predictions
+  (``sl_backend``) and decompress replays that stepper.  xla/numpy
+  steppers share f64 math; the pallas stepper is the f32 TPU kernel.
+
+Backend selection: explicit argument > ``REPRO_BACKEND`` env var
+(perfflags) > auto (``pallas`` on TPU, ``xla`` elsewhere).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import perfflags
+from ..kernels.cptest import ops as _cp_ops
+from ..kernels.lorenzo import ops as _lz_ops
+from ..kernels.semilagrange import kernel as _sl_kernel
+from . import predictors, quantize, sos
+
+BACKENDS = ("pallas", "xla", "numpy")
+
+
+def resolve(name: str | None = None) -> str:
+    """Resolve a backend name (None -> env override -> hardware auto)."""
+    name = name or perfflags.backend_override()
+    if name is None:
+        name = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; expected one of {BACKENDS}")
+    return name
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ----------------------------------------------------------------------
+# op 1: fused dual-quantization + block-local 3D Lorenzo residual
+# ----------------------------------------------------------------------
+
+def _lorenzo_residual_np(dfp, k, lossless, xi_unit, block):
+    dfp = np.asarray(dfp, np.int64)
+    k = np.asarray(k)
+    ll = np.asarray(lossless)
+    g = np.int64(2 * int(xi_unit))
+    kk = np.maximum(k, 0).astype(np.int64)
+    q = g << kk
+    x = (np.sign(dfp) * ((np.abs(dfp) + (q >> 1)) // q)) << kk
+    x0 = np.sign(dfp) * ((np.abs(dfp) + (g >> 1)) // g)
+    x = np.where(ll, x0, x)
+    T, H, W = x.shape
+    mi = ((np.arange(H) % block) != 0).astype(np.int64)[:, None]
+    mj = ((np.arange(W) % block) != 0).astype(np.int64)[None, :]
+    xi = np.zeros_like(x)
+    xi[:, 1:, :] = x[:, :-1, :]
+    xj = np.zeros_like(x)
+    xj[:, :, 1:] = x[:, :, :-1]
+    xij = np.zeros_like(x)
+    xij[:, 1:, 1:] = x[:, :-1, :-1]
+    d2 = x - xi * mi - xj * mj + xij * (mi * mj)
+    res = d2.copy()
+    res[1:] -= d2[:-1]
+    return res
+
+
+def lorenzo_residual(dfp, k, lossless, xi_unit,
+                     block=predictors.DEFAULT_BLOCK, backend="xla", x=None):
+    """Fused eb-quantize + dual-quantize + 3D-Lorenzo residual.
+
+    dfp (T, H, W) int64 fixed-point; k int32 eb levels (-1 lossless);
+    lossless bool.  Returns int64 residuals, identical across backends.
+    ``x`` optionally passes the already-materialized dual-quantized
+    field (the mop path computes it anyway for SL): the xla backend
+    then skips the in-op re-quantization -- XLA cannot CSE across jit
+    boundaries -- while the pallas kernel re-fuses it from dfp by
+    design (one HBM pass) and the numpy reference stays self-contained.
+    """
+    if backend == "pallas" and block == _lz_ops.kernel.LBLOCK:
+        out = _lz_ops.dualquant_lorenzo_residual(
+            dfp, k, lossless, xi_unit, block, force_pallas=True
+        )
+        return out.astype(jnp.int64)
+    if backend == "numpy":
+        return _lorenzo_residual_np(dfp, k, lossless, xi_unit, block)
+    if x is None:
+        x = quantize.dual_quantize(dfp, k, lossless, xi_unit)
+    return predictors.lorenzo_encode(x, block)
+
+
+# ----------------------------------------------------------------------
+# op 2: semi-Lagrangian prediction (canonical f32, predictors.py)
+# ----------------------------------------------------------------------
+
+def _bilinear_np(f, fi, fj):
+    H, W = f.shape[-2], f.shape[-1]
+    i0 = np.clip(np.floor(fi), 0, H - 1)
+    j0 = np.clip(np.floor(fj), 0, W - 1)
+    a = fi - i0
+    b = fj - j0
+    i0 = i0.astype(np.int32)
+    j0 = j0.astype(np.int32)
+    i1 = np.minimum(i0 + 1, H - 1)
+    j1 = np.minimum(j0 + 1, W - 1)
+    f00 = f[..., i0, j0]
+    f01 = f[..., i0, j1]
+    f10 = f[..., i1, j0]
+    f11 = f[..., i1, j1]
+    return (
+        (1 - a) * (1 - b) * f00
+        + (1 - a) * b * f01
+        + a * (1 - b) * f10
+        + a * b * f11
+    )
+
+
+def _sl_predict_frame_np(xu_prev, xv_prev, g2f, cfl_x, cfl_y, d_max, n_max):
+    """numpy transcription of predictors.sl_predict_frame (f64 math)."""
+    f64 = np.float64
+    g2 = f64(g2f)
+    u = np.asarray(xu_prev).astype(f64) * g2
+    v = np.asarray(xv_prev).astype(f64) * g2
+    H, W = u.shape
+    cx = f64(cfl_x)
+    cy = f64(cfl_y)
+    ii, jj = np.meshgrid(np.arange(H, dtype=f64), np.arange(W, dtype=f64),
+                         indexing="ij")
+    d_inf = np.maximum(np.abs(u) * cx, np.abs(v) * cy)
+
+    i_h = np.clip(ii - 0.5 * v * cy, 0.0, H - 1.0)
+    j_h = np.clip(jj - 0.5 * u * cx, 0.0, W - 1.0)
+    u_h = _bilinear_np(u, i_h, j_h)
+    v_h = _bilinear_np(v, i_h, j_h)
+    i_rk = ii - v_h * cy
+    j_rk = jj - u_h * cx
+
+    n_sub = np.clip(np.ceil(d_inf / d_max), 1.0, float(n_max))
+    n_hi = float(n_sub.max())
+    pi, pj = ii.copy(), jj.copy()
+    s = 0
+    while s < n_hi:
+        us = _bilinear_np(u, pi, pj)
+        vs = _bilinear_np(v, pi, pj)
+        active = s < n_sub
+        pi = np.where(active, np.clip(pi - vs * cy / n_sub, 0.0, H - 1.0), pi)
+        pj = np.where(active, np.clip(pj - us * cx / n_sub, 0.0, W - 1.0), pj)
+        s += 1
+
+    use_rk = d_inf <= d_max
+    i_s = np.clip(np.where(use_rk, i_rk, pi), 0.0, H - 1.0)
+    j_s = np.clip(np.where(use_rk, j_rk, pj), 0.0, W - 1.0)
+    pu = _bilinear_np(u, i_s, j_s) / g2
+    pv = _bilinear_np(v, i_s, j_s) / g2
+    return (np.rint(pu).astype(np.int64), np.rint(pv).astype(np.int64))
+
+
+@functools.lru_cache(maxsize=64)
+def sl_stepper(backend, cfl_x, cfl_y, d_max, n_max):
+    """The per-frame SL prediction executable F(xu_prev, xv_prev, g2f).
+
+    F maps frame t-1's base-grid integer planes to frame t's integer
+    predictions.  The SAME returned callable (one jitted executable per
+    (backend, CFL, d_max, n_max)) is used by the encoder's residual
+    pass, the verify loop's decode simulation, and decompress -- which
+    is what makes the float prediction consistent end-to-end (module
+    doc).  g2f stays a traced argument so eb sweeps don't recompile.
+    """
+    if backend == "numpy":
+        def step_np(xu_prev, xv_prev, g2f):
+            return _sl_predict_frame_np(
+                np.asarray(xu_prev), np.asarray(xv_prev), float(g2f),
+                cfl_x, cfl_y, d_max, n_max)
+        return step_np
+
+    if backend == "pallas":
+        @jax.jit
+        def step_pallas(xu_prev, xv_prev, g2f):
+            H, W = xu_prev.shape
+            if H % _sl_kernel.TILE_H:  # kernel needs row-tile alignment
+                return predictors.sl_predict_frame(
+                    xu_prev, xv_prev, g2f, cfl_x, cfl_y, d_max, n_max,
+                    early_exit=True)
+            g2 = jnp.asarray(g2f, jnp.float32)
+            u = xu_prev.astype(jnp.float32) * g2
+            v = xv_prev.astype(jnp.float32) * g2
+            pu, pv = _sl_kernel.sl_predict_pallas(
+                u, v, float(cfl_x), float(cfl_y), float(d_max), int(n_max),
+                interpret=_interpret(),
+            )
+            return (jnp.rint(pu / g2).astype(jnp.int64),
+                    jnp.rint(pv / g2).astype(jnp.int64))
+        return step_pallas
+
+    @jax.jit
+    def step_xla(xu_prev, xv_prev, g2f):
+        return predictors.sl_predict_frame(
+            xu_prev, xv_prev, g2f, cfl_x, cfl_y, d_max, n_max,
+            early_exit=True)
+    return step_xla
+
+
+def sl_predictions(xu, xv, g2f, stepper):
+    """Encoder-side predictions for frames 1..T-1 via T-1 calls of the
+    shared stepper (dispatches pipeline asynchronously on device; the
+    loop is over frames of ONE executable, not a fresh trace)."""
+    pus, pvs = [], []
+    for t in range(1, xu.shape[0]):
+        pu, pv = stepper(xu[t - 1], xv[t - 1], g2f)
+        pus.append(pu)
+        pvs.append(pv)
+    return jnp.stack(pus), jnp.stack(pvs)
+
+
+# ----------------------------------------------------------------------
+# op 3: SoS face-crossing predicate
+# ----------------------------------------------------------------------
+
+def face_crossed(fu, fv, fidx, backend="xla", n_verts=None):
+    """Exact SoS predicate on batched faces; fu/fv/fidx (..., 3).
+
+    ``n_verts`` (static total space-time vertex count) guards the pallas
+    int32-limb kernel's id-width precondition.
+    """
+    if backend == "pallas" and (n_verts is None or n_verts < 2**31):
+        shape = fu.shape[:-1]
+        n = int(np.prod(shape)) if shape else 1
+        out = _cp_ops.face_crossed_batch(
+            jnp.reshape(fu, (n, 3)), jnp.reshape(fv, (n, 3)),
+            jnp.reshape(fidx, (n, 3)),
+        )
+        return jnp.reshape(out, shape)
+    if backend == "numpy":
+        return sos.face_crossed_vals(np, np.asarray(fu), np.asarray(fv),
+                                     np.asarray(fidx))
+    return sos.face_crossed_vals(jnp, fu, fv, fidx)

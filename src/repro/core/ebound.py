@@ -18,7 +18,7 @@ keeps every returned bound strictly below the exact real-valued bound.
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +31,13 @@ _MARGIN = 1.0 - 2.0 ** -40
 
 def _alg2_eb(xp, u0, u1, u2, v0, v1, v2):
     """Alg. 2: max perturbation of (u2, v2) that cannot flip the face
-    predicate, with (u0,v0), (u1,v1) held fixed.  int64 in, int64 out."""
+    predicate, with (u0,v0), (u1,v1) held fixed.  int64 in, int64 out.
+
+    Reference formulation; the production path is face_rotation_ebs /
+    _rotation_ebs_from_dets, which shares the pairwise determinants
+    across the three rotations (bit-equal, see
+    tests/test_grid_ebound.py::test_rotation_ebs_match_per_rotation_reference).
+    """
     m0 = u2 * v0 - u0 * v2
     m1 = u1 * v2 - u2 * v1
     m2 = u0 * v1 - u1 * v0
@@ -71,30 +77,112 @@ def face_rotation_ebs(xp, fu, fv, crossed):
 
     fu, fv: (..., 3) int64 values;  crossed: (...,) bool.
     Returns (..., 3) int64 bounds aligned with the face's vertex slots.
+    Every rotation permutes the SAME three pairwise determinants, so
+    they are computed once and shared (bit-identical to the per-rotation
+    evaluation: integer dets, identical float division operands).
     """
     a_u, b_u, c_u = fu[..., 0], fu[..., 1], fu[..., 2]
     a_v, b_v, c_v = fv[..., 0], fv[..., 1], fv[..., 2]
-    eb_c = _alg2_eb(xp, a_u, b_u, c_u, a_v, b_v, c_v)
-    eb_a = _alg2_eb(xp, b_u, c_u, a_u, b_v, c_v, a_v)
-    eb_b = _alg2_eb(xp, c_u, a_u, b_u, c_v, a_v, b_v)
+    d_ab = a_u * b_v - a_v * b_u
+    d_bc = b_u * c_v - b_v * c_u
+    d_ca = c_u * a_v - c_v * a_u
+    return _rotation_ebs_from_dets(
+        xp, fu, fv, crossed, d_ab, d_bc, d_ca)
+
+
+def _rotation_ebs_from_dets(xp, fu, fv, crossed, d_ab, d_bc, d_ca):
+    a_u, b_u, c_u = fu[..., 0], fu[..., 1], fu[..., 2]
+    a_v, b_v, c_v = fv[..., 0], fv[..., 1], fv[..., 2]
+    f = jnp.float64 if xp is jnp else np.float64
+    m = d_ca + d_bc + d_ab
+    absm = xp.abs(m).astype(f)
+    big = xp.asarray(2.0**62, dtype=f)
+
+    # same-sign relaxation is a property of the whole face
+    su0, su1, su2 = xp.sign(a_u), xp.sign(b_u), xp.sign(c_u)
+    sv0, sv1, sv2 = xp.sign(a_v), xp.sign(b_v), xp.sign(c_v)
+    same_u = (su0 == su1) & (su1 == su2) & (su2 != 0)
+    same_v = (sv0 == sv1) & (sv1 == sv2) & (sv2 != 0)
+
+    def rot_eb(m0, m1, pu, pv, qu, qv, su, sv):
+        """Perturb vertex s with (p, q) fixed; m0 = det(s,p), m1 = det(q,s)."""
+        den0 = (xp.abs(qu - pu) + xp.abs(pv - qv)).astype(f)
+        den1 = (xp.abs(qu) + xp.abs(qv)).astype(f)
+        den2 = (xp.abs(pu) + xp.abs(pv)).astype(f)
+        eb = xp.where(den0 > 0, absm / xp.maximum(den0, 1.0), big)
+        eb = xp.minimum(eb, xp.abs(m1).astype(f) / xp.maximum(den1, 1.0))
+        eb = xp.minimum(eb, xp.abs(m0).astype(f) / xp.maximum(den2, 1.0))
+        eb = xp.where(same_u, xp.maximum(eb, (xp.abs(su) - 1).astype(f)), eb)
+        eb = xp.where(same_v, xp.maximum(eb, (xp.abs(sv) - 1).astype(f)), eb)
+        eb_int = xp.floor(eb * _MARGIN).astype(xp.int64) - 1
+        zero = (m == 0) | (den1 == 0) | (den2 == 0)
+        eb_int = xp.where(zero, xp.zeros_like(eb_int), eb_int)
+        return xp.maximum(eb_int, 0)
+
+    eb_c = rot_eb(d_ca, d_bc, a_u, a_v, b_u, b_v, c_u, c_v)
+    eb_a = rot_eb(d_ab, d_ca, b_u, b_v, c_u, c_v, a_u, a_v)
+    eb_b = rot_eb(d_bc, d_ab, c_u, c_v, a_u, a_v, b_u, b_v)
     ebs = xp.stack([eb_a, eb_b, eb_c], axis=-1)
     return xp.where(crossed[..., None], xp.zeros_like(ebs), ebs)
 
 
-def _faces_eb_update(u_flat, v_flat, idx_base, faces, tau, n_verts):
-    """Per-face ebs scatter-min'd into a fresh (n_verts,) array.
+@lru_cache(maxsize=32)
+def _incidence_table(H: int, W: int, kind: str) -> np.ndarray:
+    """Static vertex -> incident (face, slot) flat-index table.
+
+    Entry [v, k] indexes into ``ebs.reshape(-1)`` (layout f*3 + slot);
+    rows are padded with the out-of-range sentinel F*3.  Lets the eb
+    reduction run as a vectorized gather-min instead of a scatter-min
+    (XLA scatters serialize on CPU and dominate derivation time).
+    """
+    if kind == "slice":
+        tab = grid.slab_faces(H, W)["slice0"]
+        n_verts = H * W
+    else:
+        tab = slab_face_table(H, W)
+        n_verts = 2 * H * W
+    F = len(tab)
+    vert = tab.reshape(-1).astype(np.int64)
+    order = np.argsort(vert, kind="stable")
+    sv = vert[order]
+    si = order.astype(np.int64)          # flat index f*3 + slot
+    counts = np.bincount(sv, minlength=n_verts)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    pos = np.arange(len(sv)) - starts[sv]
+    out = np.full((n_verts, int(counts.max())), F * 3, dtype=np.int64)
+    out[sv, pos] = si
+    return out
+
+
+def _faces_eb_update(u_flat, v_flat, idx_base, faces, tau, n_verts, inc):
+    """Per-face ebs gather-min'd into a fresh (n_verts,) array.
 
     u_flat/v_flat: (n_verts,) int64 values of the vertex planes involved;
     idx_base: scalar global id of local vertex 0 (for SoS indices);
-    faces: (F, 3) int32 static table.
+    faces: (F, 3) int32 static table; inc: (n_verts, K) incidence table
+    (_incidence_table).  The three pairwise determinants are shared
+    between the crossed test and all Alg. 2 rotations.
     """
     fu = u_flat[faces]
     fv = v_flat[faces]
     fidx = faces.astype(jnp.int64) + idx_base
-    crossed = sos.face_crossed_vals(jnp, fu, fv, fidx)
-    ebs = face_rotation_ebs(jnp, fu, fv, crossed)
-    out = jnp.full((n_verts,), tau, dtype=jnp.int64)
-    out = out.at[faces.reshape(-1)].min(ebs.reshape(-1))
+    a_u, b_u, c_u = fu[..., 0], fu[..., 1], fu[..., 2]
+    a_v, b_v, c_v = fv[..., 0], fv[..., 1], fv[..., 2]
+    d_ab = a_u * b_v - a_v * b_u
+    d_bc = b_u * c_v - b_v * c_u
+    d_ca = c_u * a_v - c_v * a_u
+    crossed = sos.face_crossed(
+        jnp,
+        fu[..., 0], fv[..., 0], fidx[..., 0],
+        fu[..., 1], fv[..., 1], fidx[..., 1],
+        fu[..., 2], fv[..., 2], fidx[..., 2],
+        d_ab=d_ab, d_bc=d_bc, d_ca=d_ca,
+    )
+    ebs = _rotation_ebs_from_dets(jnp, fu, fv, crossed, d_ab, d_bc, d_ca)
+    big = jnp.asarray([2**62], dtype=jnp.int64)
+    ebs_flat = jnp.concatenate([ebs.reshape(-1), big])
+    out = jnp.minimum(jnp.min(ebs_flat[inc], axis=1),
+                      jnp.asarray(tau, jnp.int64))
     return out, crossed
 
 
@@ -109,13 +197,16 @@ def derive_vertex_eb(ufp, vfp, tau: int):
     slice_tab = jnp.asarray(grid.slab_faces(H, W)["slice0"])
     sf = grid.slab_faces(H, W)
     slab_tab = jnp.asarray(np.concatenate([sf["side"], sf["internal"]], axis=0))
+    slice_inc = jnp.asarray(_incidence_table(H, W, "slice"))
+    slab_inc = jnp.asarray(_incidence_table(H, W, "slab"))
 
     u2 = ufp.reshape(T, HW)
     v2 = vfp.reshape(T, HW)
 
     def slice_body(t, uv):
         u_t, v_t = uv
-        eb, crossed = _faces_eb_update(u_t, v_t, t * HW, slice_tab, tau, HW)
+        eb, crossed = _faces_eb_update(
+            u_t, v_t, t * HW, slice_tab, tau, HW, slice_inc)
         return eb, crossed
 
     def slice_scan(carry, x):
@@ -130,7 +221,8 @@ def derive_vertex_eb(ufp, vfp, tau: int):
     def slab_scan(carry, x):
         t, u_pair, v_pair = x
         eb, crossed = _faces_eb_update(
-            u_pair.reshape(-1), v_pair.reshape(-1), t * HW, slab_tab, tau, 2 * HW
+            u_pair.reshape(-1), v_pair.reshape(-1), t * HW, slab_tab, tau,
+            2 * HW, slab_inc
         )
         return carry, (eb.reshape(2, HW), crossed)
 
@@ -148,13 +240,34 @@ def derive_vertex_eb(ufp, vfp, tau: int):
     return eb.reshape(T, H, W), slice_crossed, slab_crossed
 
 
-def all_face_predicates(ufp, vfp):
-    """SoS predicates for every face.  Returns (slice (T, Fs), slab (T-1, Fb))."""
+def all_face_predicates(ufp, vfp, be: str = "xla"):
+    """SoS predicates for every face, via the dispatched predicate op
+    (core/backend.py).  Returns (slice (T, Fs), slab (T-1, Fb))."""
+    from . import backend as _backend
+
     T, H, W = ufp.shape
     HW = H * W
-    slice_tab = jnp.asarray(grid.slab_faces(H, W)["slice0"])
+    n_verts = T * HW
     sf = grid.slab_faces(H, W)
-    slab_tab = jnp.asarray(np.concatenate([sf["side"], sf["internal"]], axis=0))
+    slab_tab_np = np.concatenate([sf["side"], sf["internal"]], axis=0)
+
+    if be == "numpy":
+        u2 = np.asarray(ufp).reshape(T, HW)
+        v2 = np.asarray(vfp).reshape(T, HW)
+        st = sf["slice0"].astype(np.int64)
+        idx = st[None] + (np.arange(T, dtype=np.int64) * HW)[:, None, None]
+        slice_pred = _backend.face_crossed(
+            u2[:, st], v2[:, st], idx, backend=be, n_verts=n_verts)
+        bt = slab_tab_np.astype(np.int64)
+        pair_u = np.concatenate([u2[:-1], u2[1:]], axis=1)
+        pair_v = np.concatenate([v2[:-1], v2[1:]], axis=1)
+        idx = bt[None] + (np.arange(T - 1, dtype=np.int64) * HW)[:, None, None]
+        slab_pred = _backend.face_crossed(
+            pair_u[:, bt], pair_v[:, bt], idx, backend=be, n_verts=n_verts)
+        return slice_pred, slab_pred
+
+    slice_tab = jnp.asarray(sf["slice0"])
+    slab_tab = jnp.asarray(slab_tab_np)
     u2 = ufp.reshape(T, HW)
     v2 = vfp.reshape(T, HW)
 
@@ -162,7 +275,8 @@ def all_face_predicates(ufp, vfp):
         t, u_t, v_t = x
         fu, fv = u_t[slice_tab], v_t[slice_tab]
         fidx = slice_tab.astype(jnp.int64) + t * HW
-        return carry, sos.face_crossed_vals(jnp, fu, fv, fidx)
+        return carry, _backend.face_crossed(fu, fv, fidx, backend=be,
+                                            n_verts=n_verts)
 
     _, slice_pred = jax.lax.scan(
         slice_scan, 0, (jnp.arange(T, dtype=jnp.int64), u2, v2)
@@ -173,7 +287,8 @@ def all_face_predicates(ufp, vfp):
         uf = u_pair.reshape(-1)[slab_tab]
         vf = v_pair.reshape(-1)[slab_tab]
         fidx = slab_tab.astype(jnp.int64) + t * HW
-        return carry, sos.face_crossed_vals(jnp, uf, vf, fidx)
+        return carry, _backend.face_crossed(uf, vf, fidx, backend=be,
+                                            n_verts=n_verts)
 
     pairs_u = jnp.stack([u2[:-1], u2[1:]], axis=1)
     pairs_v = jnp.stack([v2[:-1], v2[1:]], axis=1)

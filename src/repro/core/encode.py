@@ -9,20 +9,59 @@ tested and used by the encoding-efficiency benchmark to report the same
 quantities as the paper's Fig. 6/7 analysis.
 
 Container layout: msgpack header + raw sections, the whole thing inside
-one zstd frame.
+one zstd frame.  When the optional ``zstandard`` module is absent the
+container degrades to a zlib frame (magic ``CPTL1``, ``codec`` flagged in
+the header) so importing and using the core never hard-fails.
 """
 from __future__ import annotations
 
 import heapq
 import io
 import struct
+import zlib
 
 import msgpack
 import numpy as np
-import zstandard
 
-MAGIC = b"CPTZ1"
+try:
+    import zstandard
+except ImportError:  # pragma: no cover - exercised by the CI minimal-env job
+    zstandard = None
+
+MAGIC = b"CPTZ1"          # zstd-backed container
+MAGIC_ZLIB = b"CPTL1"     # zlib fallback container (same layout inside)
 ESC = 255
+
+
+def have_zstd() -> bool:
+    return zstandard is not None
+
+
+def backend_codec() -> str:
+    """Name of the container codec pack() will use."""
+    return "zstd" if zstandard is not None else "zlib"
+
+
+def codec_compress(raw: bytes, level: int = 12) -> bytes:
+    """Compress raw bytes with the available container codec.
+
+    The zlib fallback caps at level 6: level 9 is ~11x slower for <1%
+    size on residual symbol streams, which would dominate encode time.
+    """
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=level).compress(raw)
+    return zlib.compress(raw, min(int(level), 6))
+
+
+def codec_decompress(blob: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError(
+                "blob was packed with zstd but the 'zstandard' module is "
+                "not installed; pip install zstandard to decode it"
+            )
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 # ----------------------------------------------------------------------
@@ -135,33 +174,103 @@ def huffman_encode(sym):
     return lengths, buf[:nbytes].tobytes(), len(sym)
 
 
-def huffman_decode(lengths, data, n):
-    """Table-driven canonical Huffman decode (peek-table, python loop in
-    chunks -- reference implementation, used on test/bench sized inputs)."""
-    codes, _ = canonical_codes(lengths)
-    maxlen = int(lengths.max()) if lengths.max() > 0 else 1
+def _peek_tables(lengths, codes, maxlen):
     peek = np.zeros(1 << maxlen, dtype=np.uint16)
     plen = np.zeros(1 << maxlen, dtype=np.uint8)
-    for s in range(256):
+    for s in np.nonzero(np.asarray(lengths) > 0)[0]:
         ln = int(lengths[s])
-        if ln == 0:
-            continue
         prefix = int(codes[s]) << (maxlen - ln)
         span = 1 << (maxlen - ln)
         peek[prefix : prefix + span] = s
         plen[prefix : prefix + span] = ln
+    return peek, plen
+
+
+def _huffman_decode_scalar(peek, plen, maxlen, data, n):
+    """Reference per-symbol loop; only used for pathological maxlen."""
     bits = np.unpackbits(np.frombuffer(data, dtype=np.uint8))
     out = np.empty(n, dtype=np.uint8)
     pos = 0
-    # pad so window reads never run off the end
     bits = np.concatenate([bits, np.zeros(maxlen, dtype=np.uint8)])
-    pw = (1 << np.arange(maxlen - 1, -1, -1)).astype(np.uint32)
+    pw = (1 << np.arange(maxlen - 1, -1, -1)).astype(np.uint64)
     for i in range(n):
         window = int(bits[pos : pos + maxlen] @ pw)
-        s = peek[window]
-        out[i] = s
+        out[i] = peek[window]
         pos += int(plen[window])
     return out
+
+
+# primary peek table is capped at 2^24 entries (48 MB of tables); deeper
+# trees (possible up to the encoder's 56-bit clamp, but requiring
+# astronomically skewed inputs) take the scalar path.
+_VEC_MAXLEN = 24
+_STRIDE_LOG2 = 6
+
+
+def huffman_decode(lengths, data, n, _chunk=1 << 22):
+    """Table-driven canonical Huffman decode, vectorized.
+
+    Chunked peek-table decode (DESIGN.md #3.6): stage 1 speculatively
+    decodes (symbol, code length) at EVERY bit offset of the stream with
+    the canonical peek table -- pure vectorized gathers, processed in
+    ``_chunk``-sized position blocks to bound transient memory.  Stage 2
+    resolves the true symbol-boundary chain pos_{i+1} = pos_i +
+    len(pos_i) with jump tables: 2^k-symbol jumps for k <= 6 (six
+    vectorized passes), a Python walk over every 64th boundary only
+    (n/64 steps), then vectorized interleave-expansion back to all n
+    positions -- no per-symbol Python loop.
+    """
+    if n == 0:
+        return np.empty(0, dtype=np.uint8)
+    codes, _ = canonical_codes(lengths)
+    maxlen = int(lengths.max()) if lengths.max() > 0 else 1
+    peek, plen = _peek_tables(lengths, codes, maxlen)
+    if maxlen > _VEC_MAXLEN or n < 2048:
+        return _huffman_decode_scalar(peek, plen, maxlen, data, n)
+
+    raw = np.frombuffer(data, dtype=np.uint8)
+    nbits = 8 * len(raw)
+    # 64-bit big-endian rolling windows, one per byte offset (8 ORs)
+    raw = np.concatenate([raw, np.zeros(16, dtype=np.uint8)])
+    nwin = len(raw) - 8
+    w64 = np.zeros(nwin, dtype=np.uint64)
+    for k in range(8):
+        w64 |= raw[k : k + nwin].astype(np.uint64) << np.uint64(56 - 8 * k)
+
+    # stage 1: next-position + symbol for every bit offset
+    dom = nbits + maxlen + 1          # padded position domain
+    pos_dtype = np.int32 if dom < 2**31 else np.int64
+    nxt = np.empty(dom, dtype=pos_dtype)
+    sym_at = np.empty(dom, dtype=np.uint8)
+    top = np.uint64(64 - maxlen)
+    for lo in range(0, dom, _chunk):
+        hi = min(lo + _chunk, dom)
+        p = np.arange(lo, hi, dtype=np.int64)
+        win = (w64[p >> 3] << (p & 7).astype(np.uint64)) >> top
+        sym_at[lo:hi] = peek[win]
+        nxt[lo:hi] = np.minimum(p + plen[win], dom - 1).astype(pos_dtype)
+
+    # stage 2: jump tables J[k] (2^k symbols per jump)
+    L = _STRIDE_LOG2
+    J = [nxt]
+    for _ in range(L):
+        J.append(J[-1][J[-1]])
+    # walk only every 2^L-th boundary sequentially
+    n_anchor = -(-n // (1 << L))
+    anchors = np.empty(n_anchor, dtype=np.int64)
+    jl = J[L]
+    pos = 0
+    for i in range(n_anchor):
+        anchors[i] = pos
+        pos = int(jl[pos])
+    # expand anchors back to every boundary (interleave per level)
+    P = anchors
+    for k in range(L - 1, -1, -1):
+        Q = np.empty(2 * len(P), dtype=np.int64)
+        Q[0::2] = P
+        Q[1::2] = J[k][P]
+        P = Q
+    return sym_at[P[:n]]
 
 
 def huffman_stream_size_bits(sym):
@@ -188,15 +297,18 @@ def pack(header: dict, sections: dict, level: int = 12) -> bytes:
         body.write(raw)
     header = dict(header)
     header["sections"] = sec_index
+    header["codec"] = backend_codec()
     hdr = msgpack.packb(header, use_bin_type=True)
     payload = struct.pack("<I", len(hdr)) + hdr + body.getvalue()
-    comp = zstandard.ZstdCompressor(level=level).compress(payload)
-    return MAGIC + comp
+    magic = MAGIC if zstandard is not None else MAGIC_ZLIB
+    return magic + codec_compress(payload, level)
 
 
 def unpack(blob: bytes):
-    assert blob[: len(MAGIC)] == MAGIC, "not a CPTZ container"
-    payload = zstandard.ZstdDecompressor().decompress(blob[len(MAGIC):])
+    magic = blob[: len(MAGIC)]
+    assert magic in (MAGIC, MAGIC_ZLIB), "not a CPTZ container"
+    codec = "zstd" if magic == MAGIC else "zlib"
+    payload = codec_decompress(blob[len(MAGIC):], codec)
     (hlen,) = struct.unpack("<I", payload[:4])
     header = msgpack.unpackb(payload[4 : 4 + hlen], raw=False)
     base = 4 + hlen

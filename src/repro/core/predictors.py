@@ -26,6 +26,16 @@ bilinear-sample frame t-1 at the departure point.  Depends only on frame
 t-1, so the encoder evaluates all frames in parallel; the decoder runs it
 inside the frame scan.  Both sides call the *same* function on the same
 integers, so predictions match bit-for-bit.
+
+Determinism note (DESIGN.md #4): float arithmetic is NOT bit-stable
+across different XLA compilation contexts (fusion decisions change
+roundings), so encoder/verify/decoder consistency is achieved
+structurally -- all three call the SAME per-frame jitted executable
+(core/backend.py sl_stepper) -- rather than by re-deriving the
+prediction in differently-compiled graphs.  The substep loop
+early-exits at the field-wide maximum substep count (a pure win:
+iterations beyond a pixel's own n_sub are masked identities, so
+results are unchanged bit-for-bit).
 """
 from __future__ import annotations
 
@@ -125,12 +135,23 @@ def bilinear(f, fi, fj):
     )
 
 
-def sl_departure(u_prev, v_prev, cfl_x, cfl_y, d_max=2.0, n_max=32):
-    """Departure points (i*, j*) for every grid node (paper Eqs. 4, 7-9)."""
+def sl_departure(u_prev, v_prev, cfl_x, cfl_y, d_max=2.0, n_max=32,
+                 early_exit=False):
+    """Departure points (i*, j*) for every grid node (paper Eqs. 4, 7-9).
+
+    ``early_exit=True`` stops the substep loop at the field-wide maximum
+    substep count instead of always running n_max iterations; iterations
+    past a pixel's own n_sub are masked identities, so the result is
+    bit-identical either way (the flag exists so the legacy A/B pipeline
+    keeps the seed's cost profile -- perfflags / DESIGN.md #5).
+    """
     H, W = u_prev.shape
+    dt = u_prev.dtype
+    cfl_x = jnp.asarray(cfl_x, dt)
+    cfl_y = jnp.asarray(cfl_y, dt)
     ii, jj = jnp.meshgrid(
-        jnp.arange(H, dtype=u_prev.dtype),
-        jnp.arange(W, dtype=u_prev.dtype),
+        jnp.arange(H, dtype=dt),
+        jnp.arange(W, dtype=dt),
         indexing="ij",
     )
     u0 = u_prev
@@ -148,16 +169,31 @@ def sl_departure(u_prev, v_prev, cfl_x, cfl_y, d_max=2.0, n_max=32):
     # adaptive substepping
     n_sub = jnp.clip(jnp.ceil(d_inf / d_max), 1.0, float(n_max))
 
-    def body(s, pos):
-        pi, pj = pos
+    def step(s, pi, pj):
         us = bilinear(u_prev, pi, pj)
         vs = bilinear(v_prev, pi, pj)
         active = s < n_sub
         pi = jnp.where(active, jnp.clip(pi - vs * cfl_y / n_sub, 0.0, H - 1.0), pi)
         pj = jnp.where(active, jnp.clip(pj - us * cfl_x / n_sub, 0.0, W - 1.0), pj)
-        return (pi, pj)
+        return pi, pj
 
-    pi, pj = jax.lax.fori_loop(0, n_max, body, (ii, jj))
+    if early_exit:
+        n_hi = jnp.max(n_sub)
+
+        def cond(carry):
+            s, _, _ = carry
+            return s < n_hi
+
+        def body(carry):
+            s, pi, pj = carry
+            pi, pj = step(s, pi, pj)
+            return (s + 1, pi, pj)
+
+        _, pi, pj = jax.lax.while_loop(cond, body, (jnp.int32(0), ii, jj))
+    else:
+        pi, pj = jax.lax.fori_loop(
+            0, n_max, lambda s, pos: step(s, *pos), (ii, jj)
+        )
 
     use_rk = d_inf <= d_max
     i_star = jnp.clip(jnp.where(use_rk, i_rk, pi), 0.0, H - 1.0)
@@ -166,18 +202,20 @@ def sl_departure(u_prev, v_prev, cfl_x, cfl_y, d_max=2.0, n_max=32):
 
 
 def sl_predict_frame(xu_prev, xv_prev, grid_to_float, cfl_x, cfl_y,
-                     d_max=2.0, n_max=32):
+                     d_max=2.0, n_max=32, early_exit=False):
     """Predict frame t's integer grid values from frame t-1's X fields.
 
     xu_prev, xv_prev: int64 (H, W) base-grid integers of frame t-1.
     grid_to_float: g / S -- converts base-grid ints to data units.
     Returns (pu, pv) int64 predictions on the base grid.
     """
-    u_prev = xu_prev.astype(jnp.float64) * grid_to_float
-    v_prev = xv_prev.astype(jnp.float64) * grid_to_float
-    i_s, j_s = sl_departure(u_prev, v_prev, cfl_x, cfl_y, d_max, n_max)
-    pu = bilinear(u_prev, i_s, j_s) / grid_to_float
-    pv = bilinear(v_prev, i_s, j_s) / grid_to_float
+    g2f = jnp.asarray(grid_to_float, jnp.float64)
+    u_prev = xu_prev.astype(jnp.float64) * g2f
+    v_prev = xv_prev.astype(jnp.float64) * g2f
+    i_s, j_s = sl_departure(u_prev, v_prev, cfl_x, cfl_y, d_max, n_max,
+                            early_exit)
+    pu = bilinear(u_prev, i_s, j_s) / g2f
+    pv = bilinear(v_prev, i_s, j_s) / g2f
     return jnp.rint(pu).astype(jnp.int64), jnp.rint(pv).astype(jnp.int64)
 
 

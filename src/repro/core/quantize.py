@@ -46,14 +46,18 @@ def ladder(tau: int, n_levels: int = DEFAULT_LEVELS):
     return xi_unit, kmax + 1
 
 
-def quantize_eb(eb, xi_unit: int, n_levels: int):
+def quantize_eb(eb, xi_unit, n_levels: int):
     """Map per-vertex integer bounds onto the ladder.
 
-    Returns (k (int32, -1 where lossless), lossless mask).
+    Returns (k (int32, -1 where lossless), lossless mask).  xi_unit may
+    be a python int or a traced scalar (the fused pipeline passes it as
+    a jit argument so eb sweeps reuse one compiled round).
     """
     eb = jnp.asarray(eb)
-    lossless = eb < xi_unit
-    ratio = jnp.maximum(eb, xi_unit).astype(jnp.float64) / float(xi_unit)
+    xi = jnp.asarray(xi_unit, jnp.int64)
+    lossless = eb < xi
+    ratio = (jnp.maximum(eb, xi).astype(jnp.float64)
+             / xi.astype(jnp.float64))
     k = jnp.floor(jnp.log2(ratio)).astype(jnp.int32)
     k = jnp.clip(k, 0, max(n_levels - 1, 0))
     k = jnp.where(lossless, -1, k)
@@ -66,13 +70,13 @@ def round_half_away_div(d, q):
     return jnp.sign(d) * mag
 
 
-def dual_quantize(dfp, k, lossless, xi_unit: int):
+def dual_quantize(dfp, k, lossless, xi_unit):
     """Round fixed-point values to the base grid with per-vertex granularity.
 
     dfp: int64; k: int32 (>=0 where coded); lossless: bool.
     Returns X int64 with recon = X * g, g = 2 * xi_unit.
     """
-    g = jnp.int64(2 * xi_unit)
+    g = 2 * jnp.asarray(xi_unit, jnp.int64)
     kk = jnp.maximum(k, 0).astype(jnp.int64)
     q = g << kk
     x = round_half_away_div(dfp, q) << kk
@@ -80,5 +84,5 @@ def dual_quantize(dfp, k, lossless, xi_unit: int):
     return jnp.where(lossless, x0, x)
 
 
-def recon_fixed(x, xi_unit: int):
-    return x * jnp.int64(2 * xi_unit)
+def recon_fixed(x, xi_unit):
+    return x * (2 * jnp.asarray(xi_unit, jnp.int64))

@@ -39,14 +39,13 @@ def _sign(xp, x):
     return xp.sign(x)
 
 
-def _cascade(xp, au, av, bu, bv):
-    """SoS sign of det(A, B) assuming index(A) < index(B).
+def _tiebreak(xp, au, av, bu, bv):
+    """SoS tie-break for det(A, B) == 0, index(A) < index(B).
 
-    Cascade: det, +Bv, -Bu, -Av, +Au, then constant -1.
+    Cascade: +Bv, -Bu, -Av, +Au, then constant -1 (no determinant --
+    the caller already knows it vanished).
     """
-    d = au * bv - av * bu
-    s = _sign(xp, d)
-    s = xp.where(s != 0, s, _sign(xp, bv))
+    s = _sign(xp, bv)
     s = xp.where(s != 0, s, _sign(xp, -bu))
     s = xp.where(s != 0, s, _sign(xp, -av))
     s = xp.where(s != 0, s, _sign(xp, au))
@@ -54,18 +53,51 @@ def _cascade(xp, au, av, bu, bv):
     return s
 
 
+def _cascade(xp, au, av, bu, bv):
+    """SoS sign of det(A, B) assuming index(A) < index(B)."""
+    d = au * bv - av * bu
+    s = _sign(xp, d)
+    return xp.where(s != 0, s, _tiebreak(xp, au, av, bu, bv))
+
+
 def sign_det_sos(xp, au, av, ma, bu, bv, mb):
-    """SoS-robust sign of det(A, B) = Au*Bv - Av*Bu for arrays of pairs."""
-    fwd = _cascade(xp, au, av, bu, bv)
-    rev = _cascade(xp, bu, bv, au, av)
-    return xp.where(ma < mb, fwd, -rev)
+    """SoS-robust sign of det(A, B) = Au*Bv - Av*Bu for arrays of pairs.
+
+    The determinant is computed ONCE: when it is nonzero both index
+    orders agree on sign(d) (rev = sign(-d), negated back), so the
+    double tie-break cascade only decides the d == 0 case.
+    """
+    d = au * bv - av * bu
+    s = _sign(xp, d)
+    tie = xp.where(ma < mb,
+                   _tiebreak(xp, au, av, bu, bv),
+                   -_tiebreak(xp, bu, bv, au, av))
+    return xp.where(s != 0, s, tie)
 
 
-def face_crossed(xp, au, av, ma, bu, bv, mb, cu, cv, mc):
-    """True where origin in conv{a,b,c} under SoS (paper Eq. 1 + Alg. 1)."""
-    s1 = sign_det_sos(xp, au, av, ma, bu, bv, mb)
-    s2 = sign_det_sos(xp, bu, bv, mb, cu, cv, mc)
-    s3 = sign_det_sos(xp, cu, cv, mc, au, av, ma)
+def _sign_det_sos_d(xp, d, au, av, ma, bu, bv, mb):
+    """sign_det_sos with the determinant d = det(A, B) precomputed."""
+    s = _sign(xp, d)
+    tie = xp.where(ma < mb,
+                   _tiebreak(xp, au, av, bu, bv),
+                   -_tiebreak(xp, bu, bv, au, av))
+    return xp.where(s != 0, s, tie)
+
+
+def face_crossed(xp, au, av, ma, bu, bv, mb, cu, cv, mc,
+                 d_ab=None, d_bc=None, d_ca=None):
+    """True where origin in conv{a,b,c} under SoS (paper Eq. 1 + Alg. 1).
+
+    The pairwise determinants may be passed in when the caller already
+    computed them (ebound shares them with the Alg. 2 rotations).
+    """
+    if d_ab is None:
+        d_ab = au * bv - av * bu
+        d_bc = bu * cv - bv * cu
+        d_ca = cu * av - cv * au
+    s1 = _sign_det_sos_d(xp, d_ab, au, av, ma, bu, bv, mb)
+    s2 = _sign_det_sos_d(xp, d_bc, bu, bv, mb, cu, cv, mc)
+    s3 = _sign_det_sos_d(xp, d_ca, cu, cv, mc, au, av, ma)
     return (s1 == s2) & (s2 == s3)
 
 

@@ -91,7 +91,7 @@ def dualquant_lorenzo_residual_pallas(dfp, k, lossless, xi_unit,
         pl.BlockSpec(tile, idx_p),                     # lossless_{t-1}
         pl.BlockSpec(memory_space=pl.ANY),             # meta (scalars)
     ]
-    meta = jnp.asarray([2 * xi_unit], dtype=jnp.int32)
+    meta = (2 * jnp.asarray(xi_unit, dtype=jnp.int32)).reshape(1)
     return pl.pallas_call(
         _kernel,
         grid=grid,

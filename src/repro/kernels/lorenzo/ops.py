@@ -17,15 +17,17 @@ def _pad_to(x, mh, mw, value=0):
 
 
 def dualquant_lorenzo_residual(dfp, k, lossless, xi_unit, block=16,
-                               force_ref=False):
+                               force_ref=False, force_pallas=False):
     """Fused dual-quantization + block-local Lorenzo residual.
 
     dfp int32/int64 (T, H, W); k int32 (-1 where lossless); lossless
-    bool.  Returns int32 residual (T, H, W).
+    bool.  Returns int32 residual (T, H, W).  ``force_pallas`` (used by
+    the core backend dispatcher) skips the large-field CPU heuristic so
+    the kernel always runs (interpret mode off-TPU).
     """
     T, H, W = dfp.shape
     on_tpu = jax.default_backend() == "tpu"
-    if force_ref or (not on_tpu and (H * W > 512 * 512)):
+    if force_ref or (not force_pallas and not on_tpu and (H * W > 512 * 512)):
         # pure-jnp path (identical math, vectorized)
         x_prev = jnp.zeros((H, W), jnp.int32)
         outs = []
@@ -42,6 +44,6 @@ def dualquant_lorenzo_residual(dfp, k, lossless, xi_unit, block=16,
     k32 = _pad_to(k.astype(jnp.int32), kernel.TILE_H, kernel.TILE_W)
     ll = _pad_to(lossless, kernel.TILE_H, kernel.TILE_W)
     out = kernel.dualquant_lorenzo_residual_pallas(
-        dfp32, k32, ll, int(xi_unit), interpret=not on_tpu
+        dfp32, k32, ll, xi_unit, interpret=not on_tpu
     )
     return out[:, :H, :W]

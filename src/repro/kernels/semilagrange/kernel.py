@@ -39,47 +39,63 @@ def _bilinear(f, fi, fj, H, W):
             + a * (1 - b) * f10 + a * b * f11)
 
 
+def _sl_tile(u, v, r, H, W, cfl_x, cfl_y, d_max, n_max):
+    """Backtrace + sample one (TILE_H, W) output row tile of one frame."""
+    ii = (r * TILE_H
+          + jax.lax.broadcasted_iota(jnp.int32, (TILE_H, W), 0)
+          ).astype(jnp.float32)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (TILE_H, W), 1).astype(
+        jnp.float32)
+    zero = jnp.zeros((), jnp.int32)
+    start = (r * TILE_H).astype(jnp.int32)
+    u0 = jax.lax.dynamic_slice(u, (start, zero), (TILE_H, W))
+    v0 = jax.lax.dynamic_slice(v, (start, zero), (TILE_H, W))
+    d_inf = jnp.maximum(jnp.abs(u0) * cfl_x, jnp.abs(v0) * cfl_y)
+
+    # RK2 midpoint
+    i_h = jnp.clip(ii - 0.5 * v0 * cfl_y, 0.0, H - 1.0)
+    j_h = jnp.clip(jj - 0.5 * u0 * cfl_x, 0.0, W - 1.0)
+    u_h = _bilinear(u, i_h, j_h, H, W)
+    v_h = _bilinear(v, i_h, j_h, H, W)
+    i_rk = ii - v_h * cfl_y
+    j_rk = jj - u_h * cfl_x
+
+    # clamped Euler substeps
+    n_sub = jnp.clip(jnp.ceil(d_inf / d_max), 1.0, float(n_max))
+    pi, pj = ii, jj
+    for s in range(n_max):
+        us = _bilinear(u, pi, pj, H, W)
+        vs = _bilinear(v, pi, pj, H, W)
+        active = s < n_sub
+        pi = jnp.where(active,
+                       jnp.clip(pi - vs * cfl_y / n_sub, 0.0, H - 1.0), pi)
+        pj = jnp.where(active,
+                       jnp.clip(pj - us * cfl_x / n_sub, 0.0, W - 1.0), pj)
+
+    use_rk = d_inf <= d_max
+    i_s = jnp.clip(jnp.where(use_rk, i_rk, pi), 0.0, H - 1.0)
+    j_s = jnp.clip(jnp.where(use_rk, j_rk, pj), 0.0, W - 1.0)
+    return _bilinear(u, i_s, j_s, H, W), _bilinear(v, i_s, j_s, H, W)
+
+
 def _make_kernel(H, W, cfl_x, cfl_y, d_max, n_max):
     def kernel(u_ref, v_ref, pu_ref, pv_ref):
         r = pl.program_id(0)
-        u = u_ref[...]                          # full frame in VMEM
-        v = v_ref[...]
-        ii = (r * TILE_H
-              + jax.lax.broadcasted_iota(jnp.int32, (TILE_H, W), 0)
-              ).astype(jnp.float32)
-        jj = jax.lax.broadcasted_iota(jnp.int32, (TILE_H, W), 1).astype(
-            jnp.float32)
-        zero = jnp.zeros((), jnp.int32)
-        start = (r * TILE_H).astype(jnp.int32)
-        u0 = jax.lax.dynamic_slice(u, (start, zero), (TILE_H, W))
-        v0 = jax.lax.dynamic_slice(v, (start, zero), (TILE_H, W))
-        d_inf = jnp.maximum(jnp.abs(u0) * cfl_x, jnp.abs(v0) * cfl_y)
+        pu, pv = _sl_tile(u_ref[...], v_ref[...], r, H, W,
+                          cfl_x, cfl_y, d_max, n_max)
+        pu_ref[...] = pu
+        pv_ref[...] = pv
 
-        # RK2 midpoint
-        i_h = jnp.clip(ii - 0.5 * v0 * cfl_y, 0.0, H - 1.0)
-        j_h = jnp.clip(jj - 0.5 * u0 * cfl_x, 0.0, W - 1.0)
-        u_h = _bilinear(u, i_h, j_h, H, W)
-        v_h = _bilinear(v, i_h, j_h, H, W)
-        i_rk = ii - v_h * cfl_y
-        j_rk = jj - u_h * cfl_x
+    return kernel
 
-        # clamped Euler substeps
-        n_sub = jnp.clip(jnp.ceil(d_inf / d_max), 1.0, float(n_max))
-        pi, pj = ii, jj
-        for s in range(n_max):
-            us = _bilinear(u, pi, pj, H, W)
-            vs = _bilinear(v, pi, pj, H, W)
-            active = s < n_sub
-            pi = jnp.where(active,
-                           jnp.clip(pi - vs * cfl_y / n_sub, 0.0, H - 1.0), pi)
-            pj = jnp.where(active,
-                           jnp.clip(pj - us * cfl_x / n_sub, 0.0, W - 1.0), pj)
 
-        use_rk = d_inf <= d_max
-        i_s = jnp.clip(jnp.where(use_rk, i_rk, pi), 0.0, H - 1.0)
-        j_s = jnp.clip(jnp.where(use_rk, j_rk, pj), 0.0, W - 1.0)
-        pu_ref[...] = _bilinear(u, i_s, j_s, H, W)
-        pv_ref[...] = _bilinear(v, i_s, j_s, H, W)
+def _make_batched_kernel(H, W, cfl_x, cfl_y, d_max, n_max):
+    def kernel(u_ref, v_ref, pu_ref, pv_ref):
+        r = pl.program_id(1)
+        pu, pv = _sl_tile(u_ref[0], v_ref[0], r, H, W,
+                          cfl_x, cfl_y, d_max, n_max)
+        pu_ref[0] = pu
+        pv_ref[0] = pv
 
     return kernel
 
@@ -101,6 +117,38 @@ def sl_predict_pallas(u_prev, v_prev, cfl_x, cfl_y, d_max=2.0, n_max=8,
         in_specs=[full, full],
         out_specs=[tile, tile],
         out_shape=[jax.ShapeDtypeStruct((H, W), jnp.float32)] * 2,
+        interpret=interpret,
+    )(u_prev.astype(jnp.float32), v_prev.astype(jnp.float32))
+    return pu, pv
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfl_x", "cfl_y", "d_max", "n_max", "interpret")
+)
+def sl_predict_batched_pallas(u_prev, v_prev, cfl_x, cfl_y, d_max=2.0,
+                              n_max=8, interpret=True):
+    """Frame-batched variant: u_prev, v_prev f32 (B, H, W) stacks of
+    previous frames, H % TILE_H == 0.  One pallas_call over a (B, rows)
+    grid; each program holds its frame's two planes whole in VMEM and
+    writes one output row tile (same math as sl_predict_pallas).
+
+    NOT in the production hot path yet: the pipeline replays SL through
+    one per-frame stepper executable for encoder/decoder bit-consistency
+    (core/backend.py sl_stepper, DESIGN.md #4).  This kernel is the
+    TPU-compiled encoder upgrade once batched-vs-per-frame bitwise
+    equality is validated on hardware; tests pin it against the
+    per-frame kernel at f32 tolerance meanwhile."""
+    B, H, W = u_prev.shape
+    kern = _make_batched_kernel(H, W, float(cfl_x), float(cfl_y),
+                                float(d_max), int(n_max))
+    full = pl.BlockSpec((1, H, W), lambda b, r: (b, 0, 0))
+    tile = pl.BlockSpec((1, TILE_H, W), lambda b, r: (b, r, 0))
+    pu, pv = pl.pallas_call(
+        kern,
+        grid=(B, H // TILE_H),
+        in_specs=[full, full],
+        out_specs=[tile, tile],
+        out_shape=[jax.ShapeDtypeStruct((B, H, W), jnp.float32)] * 2,
         interpret=interpret,
     )(u_prev.astype(jnp.float32), v_prev.astype(jnp.float32))
     return pu, pv

@@ -18,6 +18,21 @@ import os
 BASELINE = os.environ.get("REPRO_PERF_BASELINE", "") == "1"
 
 
+def backend_override():
+    """REPRO_BACKEND=pallas|xla|numpy forces the kernel-dispatch backend
+    for the compression hot path (core/backend.py); empty -> auto
+    (pallas on TPU, xla elsewhere).  Read at call time so tests can
+    monkeypatch the environment."""
+    return os.environ.get("REPRO_BACKEND", "") or None
+
+
+def fused_default():
+    """REPRO_FUSED=0 reverts compressor.compress to the legacy
+    (seed, per-round host-transfer) pipeline for A/B timing under
+    identical accounting; default is the fused device-resident path."""
+    return os.environ.get("REPRO_FUSED", "1") != "0"
+
+
 def checkpoint_if_optimized(fn):
     if BASELINE:
         return fn

@@ -144,6 +144,8 @@ def model_flops(cfg, cell) -> float:
 def analyze(compiled, arch, shape, mesh_name, n_chips, cfg, cell,
             hlo_text=None) -> Roofline:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jaxlibs wrap in a list
+        ca = ca[0] if ca else {}
     text = hlo_text if hlo_text is not None else compiled.as_text()
     hc = hlocost.analyze_text(text)
     return Roofline(

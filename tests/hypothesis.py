@@ -1,0 +1,100 @@
+"""Shim: prefer the real `hypothesis` package, else a tiny deterministic
+fallback so the tier-1 suite runs on minimal environments (the container
+image has no hypothesis wheel).  Because pytest prepends tests/ to
+sys.path, this module shadows the real package; it therefore re-exports
+the real one when it can be found elsewhere on the path.
+"""
+from __future__ import annotations
+
+import importlib.machinery
+import importlib.util
+import itertools
+import os
+import random
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_real = None
+_search = [p for p in sys.path
+           if os.path.abspath(p or os.getcwd()) != _HERE]
+_spec = importlib.machinery.PathFinder.find_spec("hypothesis", _search)
+if _spec is not None and _spec.origin and _HERE not in _spec.origin:
+    _self = sys.modules.pop("hypothesis", None)
+    try:
+        _real = importlib.util.module_from_spec(_spec)
+        sys.modules["hypothesis"] = _real
+        _spec.loader.exec_module(_real)
+    except Exception:  # pragma: no cover - fall back to the stub
+        _real = None
+        if _self is not None:
+            sys.modules["hypothesis"] = _self
+
+if _real is not None:
+    given = _real.given
+    settings = _real.settings
+    strategies = _real.strategies
+else:
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value=-(2**63), max_value=2**63 - 1):
+            def draw(rng):
+                # bias towards the boundary values degenerate cases live at
+                r = rng.random()
+                if r < 0.1:
+                    return min_value
+                if r < 0.2:
+                    return max_value
+                if r < 0.35 and min_value <= 0 <= max_value:
+                    return rng.randint(-1, 1) if min_value < 0 else 0
+                return rng.randint(min_value, max_value)
+            return _Strategy(draw)
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elem.example(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*elems):
+            def draw(rng):
+                return tuple(e.example(rng) for e in elems)
+            return _Strategy(draw)
+
+        @staticmethod
+        def permutations(values):
+            def draw(rng):
+                vals = list(values)
+                rng.shuffle(vals)
+                return vals
+            return _Strategy(draw)
+
+    strategies = _St()
+
+    def settings(max_examples=50, deadline=None, **kw):
+        def deco(fn):
+            fn._stub_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            n = getattr(fn, "_stub_max_examples", 50)
+
+            def wrapper(*args, **kwargs):
+                rng = random.Random(1234)
+                for _ in range(min(n, 60)):
+                    vals = [s.example(rng) for s in strats]
+                    fn(*args, *vals, **kwargs)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

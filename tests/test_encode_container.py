@@ -1,0 +1,81 @@
+"""Container codec fallback + vectorized Huffman decode."""
+import numpy as np
+import pytest
+
+from repro.core import encode
+
+
+def test_backend_codec_reported():
+    assert encode.backend_codec() in ("zstd", "zlib")
+
+
+def test_container_roundtrip_current_codec():
+    header = {"x": 42}
+    secs = {"a": np.arange(100, dtype=np.int64)}
+    blob = encode.pack(header, secs)
+    magic = blob[:5]
+    assert magic in (encode.MAGIC, encode.MAGIC_ZLIB)
+    h, s = encode.unpack(blob)
+    assert h["x"] == 42 and h["codec"] == encode.backend_codec()
+    assert (s["a"] == secs["a"]).all()
+
+
+def test_zlib_frame_always_decodable():
+    """A zlib container decodes regardless of zstandard availability."""
+    import io
+    import struct
+    import zlib
+
+    import msgpack
+
+    secs = {"a": np.arange(7, dtype=np.int32)}
+    body = io.BytesIO()
+    idx = {}
+    for name, arr in secs.items():
+        raw = arr.tobytes()
+        idx[name] = {"off": body.tell(), "len": len(raw),
+                     "dtype": str(arr.dtype), "shape": list(arr.shape)}
+        body.write(raw)
+    hdr = msgpack.packb({"sections": idx, "codec": "zlib"}, use_bin_type=True)
+    payload = struct.pack("<I", len(hdr)) + hdr + body.getvalue()
+    blob = encode.MAGIC_ZLIB + zlib.compress(payload, 6)
+    h, s = encode.unpack(blob)
+    assert (s["a"] == secs["a"]).all()
+
+
+@pytest.mark.parametrize("n", [1, 2, 1000, 50_000])
+@pytest.mark.parametrize("dist", ["geometric", "uniform", "const", "binary"])
+def test_huffman_vectorized_decode(n, dist):
+    rng = np.random.default_rng(n)
+    if dist == "geometric":
+        sym = np.minimum(rng.geometric(0.25, n) - 1, 255).astype(np.uint8)
+    elif dist == "uniform":
+        sym = rng.integers(0, 256, n).astype(np.uint8)
+    elif dist == "binary":
+        sym = (rng.random(n) < 0.03).astype(np.uint8)
+    else:
+        sym = np.zeros(n, dtype=np.uint8)
+    lengths, data, count = encode.huffman_encode(sym)
+    got = encode.huffman_decode(lengths, data, count)
+    assert (got == sym).all()
+
+
+def test_huffman_vectorized_matches_scalar():
+    rng = np.random.default_rng(9)
+    sym = np.minimum(rng.geometric(0.4, 4000) - 1, 255).astype(np.uint8)
+    lengths, data, n = encode.huffman_encode(sym)
+    codes, _ = encode.canonical_codes(lengths)
+    maxlen = int(lengths.max())
+    peek, plen = encode._peek_tables(lengths, codes, maxlen)
+    want = encode._huffman_decode_scalar(peek, plen, maxlen, data, n)
+    got = encode.huffman_decode(lengths, data, n)
+    assert (got == want).all() and (got == sym).all()
+
+
+def test_huffman_chunked_paths():
+    """Small _chunk forces the multi-block stage-1 path."""
+    rng = np.random.default_rng(13)
+    sym = rng.integers(0, 17, 5000).astype(np.uint8)
+    lengths, data, n = encode.huffman_encode(sym)
+    got = encode.huffman_decode(lengths, data, n, _chunk=257)
+    assert (got == sym).all()

@@ -116,3 +116,44 @@ def test_eb_capped_by_tau():
     tau = 37
     eb, _, _ = ebound.derive_vertex_eb(u, v, tau)
     assert int(np.asarray(eb).max()) <= tau
+
+
+def test_rotation_ebs_match_per_rotation_reference():
+    """The det-sharing refactor of face_rotation_ebs must be bit-equal
+    to the original per-rotation Alg. 2 evaluation (_alg2_eb)."""
+    rng = np.random.default_rng(0)
+    n = 4096
+    fu = rng.integers(-(2**29), 2**29, (n, 3)).astype(np.int64)
+    fv = rng.integers(-(2**29), 2**29, (n, 3)).astype(np.int64)
+    # degeneracies: zeros, shared signs, duplicate vertices
+    fu[::7] = np.abs(fu[::7])
+    fv[::11] = 0
+    fu[5, 1] = fu[5, 0]
+    fv[5, 1] = fv[5, 0]
+    crossed = rng.random(n) < 0.2
+    got = np.asarray(ebound.face_rotation_ebs(np, fu, fv, crossed))
+    a_u, b_u, c_u = fu[:, 0], fu[:, 1], fu[:, 2]
+    a_v, b_v, c_v = fv[:, 0], fv[:, 1], fv[:, 2]
+    eb_c = ebound._alg2_eb(np, a_u, b_u, c_u, a_v, b_v, c_v)
+    eb_a = ebound._alg2_eb(np, b_u, c_u, a_u, b_v, c_v, a_v)
+    eb_b = ebound._alg2_eb(np, c_u, a_u, b_u, c_v, a_v, b_v)
+    want = np.stack([eb_a, eb_b, eb_c], axis=-1)
+    want = np.where(crossed[:, None], 0, want)
+    assert (got == want).all()
+
+
+def test_incidence_table_covers_all_faces():
+    H, W = 6, 7
+    for kind, tab, n_verts in (
+        ("slice", grid.slab_faces(H, W)["slice0"], H * W),
+        ("slab", ebound.slab_face_table(H, W), 2 * H * W),
+    ):
+        inc = ebound._incidence_table(H, W, kind)
+        F = len(tab)
+        got = sorted(int(i) for row in inc for i in row if i < F * 3)
+        assert got == list(range(F * 3))  # every (face, slot) exactly once
+        # every listed entry belongs to the right vertex
+        for vtx in range(n_verts):
+            for i in inc[vtx]:
+                if i < F * 3:
+                    assert tab[i // 3, i % 3] == vtx
