@@ -67,10 +67,76 @@ def main(small=True, eb=1e-2, log=print):
     return rows
 
 
+def _bench_tiled(eb, shape, repeat, log):
+    """Tiled-vs-monolithic encode/decode MB/s on one field, asserting
+    the tiled container decodes bit-identically to the monolithic fused
+    pipeline (the tiled subsystem's core guarantee)."""
+    from repro.core import (TileGrid, compress_tiled, decompress_region,
+                            decompress_tiled)
+    from repro.core import tiling as tiling_mod
+    from repro.data import synthetic
+
+    T, H, W = shape
+    u, v = synthetic.advected_turbulence(T=T, H=H, W=W)
+    mb = (u.nbytes + v.nbytes) / 2**20
+    grid = TileGrid(tile_h=max(H // 2, 1), tile_w=max(W // 2, 1),
+                    window_t=max(T // 2, 1))
+    cfg = CompressionConfig(eb=eb, mode="rel", predictor="mop",
+                            backend="xla", verify=True, fused=True)
+    tc_m, td_m, tc_t, td_t = [], [], [], []
+    blob_m = blob_t = None
+    stats_t = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        blob_m, _ = compress(u, v, cfg)
+        tc_m.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        um, vm = decompress(blob_m)
+        td_m.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        blob_t, stats_t = compress_tiled(u, v, cfg, grid)
+        tc_t.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        ut, vt = decompress_tiled(blob_t)
+        td_t.append(time.perf_counter() - t0)
+    identical = bool(np.array_equal(um, ut) and np.array_equal(vm, vt))
+    assert identical, "tiled decode diverged from monolithic"
+    # random-access: decode one tile-interior region, count units read
+    region = (0, min(2, T), 0, min(8, H), 0, min(8, W))
+    n_read = len(tiling_mod.read_plan(blob_t, region))
+    t0 = time.perf_counter()
+    decompress_region(blob_t, region)
+    t_region = time.perf_counter() - t0
+    out = {
+        "field": f"advected_turbulence {T}x{H}x{W}",
+        "predictor": "mop", "backend": "xla",
+        "MB": round(mb, 2),
+        "n_units": stats_t["n_units"],
+        "tiling": stats_t["tiling"],
+        "t_encode_monolithic": round(min(tc_m), 3),
+        "t_encode_tiled": round(min(tc_t), 3),
+        "t_decode_monolithic": round(min(td_m), 3),
+        "t_decode_tiled": round(min(td_t), 3),
+        "MBps_encode_monolithic": round(mb / max(min(tc_m), 1e-9), 2),
+        "MBps_encode_tiled": round(mb / max(min(tc_t), 1e-9), 2),
+        "MBps_decode_monolithic": round(mb / max(min(td_m), 1e-9), 2),
+        "MBps_decode_tiled": round(mb / max(min(td_t), 1e-9), 2),
+        "bit_identical": identical,
+        "region_decode_units_read": n_read,
+        "t_region_decode": round(t_region, 4),
+    }
+    log(f"[bench] tiled-vs-monolithic {T}x{H}x{W} "
+        f"({stats_t['n_units']} units): enc "
+        f"{out['MBps_encode_monolithic']} -> {out['MBps_encode_tiled']} "
+        f"MB/s, dec {out['MBps_decode_monolithic']} -> "
+        f"{out['MBps_decode_tiled']} MB/s, bit_identical={identical}")
+    return out
+
+
 def bench_compress(small=True, eb=1e-2, backends=("xla",),
                    predictors=("lorenzo", "sl", "mop"),
                    speedup_shape=(64, 256, 256), repeat=2, log=print,
-                   data=None):
+                   data=None, tiled_shape=(64, 256, 256)):
     """Emit the BENCH_compress.json payload.
 
     Each (dataset, predictor, backend) cell reports best-of-``repeat``
@@ -130,8 +196,12 @@ def bench_compress(small=True, eb=1e-2, backends=("xla",),
         log(f"[bench] seed-vs-fused mop {T}x{H}x{W}: "
             f"{t_seed:.2f}s -> {t_fused:.2f}s "
             f"({comparison['speedup']:.2f}x)")
+
+    tiled = None
+    if tiled_shape is not None:
+        tiled = _bench_tiled(eb, tiled_shape, repeat, log)
     return {"rows": rows, "seed_vs_fused": comparison,
-            "eb": eb, "small": small}
+            "tiled_vs_monolithic": tiled, "eb": eb, "small": small}
 
 
 if __name__ == "__main__":
@@ -156,7 +226,8 @@ if __name__ == "__main__":
                             dict(dt=0.1, dx=2.0 / 31, dy=1.0 / 23))}
         payload = bench_compress(
             eb=args.eb, backends=backends, data=tiny,
-            predictors=("mop",), speedup_shape=(6, 32, 32), repeat=1)
+            predictors=("mop",), speedup_shape=(6, 32, 32), repeat=1,
+            tiled_shape=(6, 32, 32))
     else:
         payload = bench_compress(
             small=not args.large, eb=args.eb, backends=backends,

@@ -8,3 +8,10 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 from .compressor import CompressionConfig, compress, decompress  # noqa: E402,F401
+from .tiling import (  # noqa: E402,F401
+    TileGrid,
+    compress_stream,
+    compress_tiled,
+    decompress_region,
+    decompress_tiled,
+)

@@ -83,6 +83,7 @@ class CompressionConfig:
     max_rounds: int = 12
     backend: Optional[str] = None     # 'pallas' | 'xla' | 'numpy' | None=auto
     fused: Optional[bool] = None      # None -> perfflags.fused_default()
+    tiling: Optional[object] = None   # tiling.TileGrid -> tiled pipeline
 
 
 def _as_fields(u, v):
@@ -113,7 +114,7 @@ def _predicates(ufp, vfp):
     return ebound.all_face_predicates(ufp, vfp)
 
 
-_derive_eb_jit = jax.jit(ebound.derive_vertex_eb, static_argnums=2)
+_derive_eb_jit = ebound.derive_vertex_eb_jit  # one executable per (shape, tau)
 
 
 def _encode_stage(ufp, vfp, eb, xi_unit, n_levels, lossless_extra,
@@ -420,7 +421,11 @@ class _FusedFns:
             n_verts=T * H * W)
 
 
-@functools.lru_cache(maxsize=16)
+# 64 entries: the tiled pipeline (core/tiling.py) requests one per
+# distinct tile extension AND owned shape (edge/corner/interior tiles x
+# first/middle/tail windows) on top of the monolithic shapes; a smaller
+# cache would evict live entries and silently recompile every round
+@functools.lru_cache(maxsize=64)
 def _fused_fns(shape, block, n_levels, predictor, be, be_lorenzo=None):
     return _FusedFns(shape, block, n_levels, predictor, be, be_lorenzo)
 
@@ -741,6 +746,9 @@ def _compress_legacy(u, v, cfg: CompressionConfig):
 # ----------------------------------------------------------------------
 
 def compress(u, v, cfg: CompressionConfig = CompressionConfig()):
+    if cfg.tiling is not None:
+        from . import tiling
+        return tiling.compress_tiled(u, v, cfg, cfg.tiling)
     fused = perfflags.fused_default() if cfg.fused is None else cfg.fused
     if not fused:
         return _compress_legacy(u, v, cfg)
@@ -749,7 +757,15 @@ def compress(u, v, cfg: CompressionConfig = CompressionConfig()):
 
 
 def decompress(blob: bytes, backend: Optional[str] = None):
+    if encode.is_tiled(blob):
+        from . import tiling
+        return tiling.decompress_tiled(blob, backend=backend)
     header, sections = encode.unpack(blob)
+    version = header.get("version", 1)
+    if version > FORMAT_VERSION:
+        raise ValueError(
+            f"container format version {version} is newer than this "
+            f"decoder (supports <= {FORMAT_VERSION})")
     T, H, W = header["shape"]
     res_u = encode.from_symbols(sections["sym_u"], sections["esc_u"], (T, H, W))
     res_v = encode.from_symbols(sections["sym_v"], sections["esc_v"], (T, H, W))

@@ -12,6 +12,16 @@ Alg. 2's sufficiency is for a single moving vertex; the compressor's
 verify-and-correct loop (compressor.py) upgrades this to an unconditional
 guarantee under simultaneous perturbation -- see DESIGN.md #3.5.
 
+Tile locality: everything here depends on vertex VALUES plus the
+relative ORDER of vertex ids (the SoS tie-break compares ids, it never
+uses their magnitude).  A halo-extended sub-box of the grid preserves
+the global id order under its own row-major local ids
+(grid.box_vertex_ids), so ``derive_vertex_eb`` evaluated on a tile is
+bit-identical to the global evaluation restricted to that tile; min-
+reducing per-tile bounds across every tile that sees a vertex
+reconstructs the global per-vertex bound exactly (core/tiling.py,
+DESIGN.md #6).
+
 All bounds are integers in fixed-point units.  Divisions run in float64
 with a conservative down-rounding (relative margin 2^-40, then -1), which
 keeps every returned bound strictly below the exact real-valued bound.
@@ -238,6 +248,11 @@ def derive_vertex_eb(ufp, vfp, tau: int):
     # ... and its plane-1 bounds to time t+1.
     eb = eb.at[1:].min(eb_slab2[:, 1])
     return eb.reshape(T, H, W), slice_crossed, slab_crossed
+
+
+# jitted entry point shared by the monolithic compressor and the tiled
+# pipeline (one compiled executable per (shape, tau) class)
+derive_vertex_eb_jit = jax.jit(derive_vertex_eb, static_argnums=2)
 
 
 def all_face_predicates(ufp, vfp, be: str = "xla"):

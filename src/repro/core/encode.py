@@ -30,6 +30,7 @@ except ImportError:  # pragma: no cover - exercised by the CI minimal-env job
 
 MAGIC = b"CPTZ1"          # zstd-backed container
 MAGIC_ZLIB = b"CPTL1"     # zlib fallback container (same layout inside)
+MAGIC_TILED = b"CPTT1"    # tiled container (unit frames + directory footer)
 ESC = 255
 
 
@@ -318,3 +319,97 @@ def unpack(blob: bytes):
         arr = np.frombuffer(raw, dtype=np.dtype(meta["dtype"]))
         sections[name] = arr.reshape(meta["shape"])
     return header, sections
+
+
+# ----------------------------------------------------------------------
+# tiled container: random-access unit frames + directory footer
+# ----------------------------------------------------------------------
+#
+# Layout (streaming-writable: units are emitted before the directory is
+# known, so the directory lives in a FOOTER, not a preamble):
+#
+#     MAGIC_TILED | unit frame | unit frame | ... | zlib(msgpack header)
+#     | u32 header_len | MAGIC_TILED
+#
+# Each unit frame is a fully self-describing pack() container (magic +
+# codec payload), so random access to one (tile, window) unit is a byte
+# slice at the directory's (off, len) followed by one unpack() -- no
+# other unit is touched.  The footer header carries the global stream
+# parameters plus a ``units`` directory: one entry per unit with its
+# grid key, owned space-time box, byte offset and length.
+
+
+def is_tiled(blob: bytes) -> bool:
+    return blob[: len(MAGIC_TILED)] == MAGIC_TILED
+
+
+class TiledWriter:
+    """Append-only tiled-container writer.
+
+    Works against any binary ``sink`` with ``write`` (a file, a socket
+    wrapper); when ``sink`` is None an in-memory buffer is used and
+    ``finish`` returns the full blob bytes.  Unit payloads are written
+    as they arrive -- nothing is buffered -- which is what makes
+    compress_stream's memory footprint independent of the field length.
+    """
+
+    def __init__(self, sink=None, level: int = 12):
+        self._own = sink is None
+        self._sink = io.BytesIO() if sink is None else sink
+        self._level = level
+        self._sink.write(MAGIC_TILED)
+        self._pos = len(MAGIC_TILED)
+        self.units = []
+
+    def add_unit(self, key, box, header: dict, sections: dict) -> None:
+        """Append one (window, tile) unit; records its directory entry.
+
+        key: (wi, ti, tj) grid coordinates; box: (t0, t1, i0, i1, j0, j1)
+        half-open owned ranges (duplicated into the directory so read
+        planning never needs to decode a unit).
+        """
+        frame = pack(header, sections, self._level)
+        self.units.append({
+            "key": [int(k) for k in key],
+            "box": [int(b) for b in box],
+            "off": self._pos,
+            "len": len(frame),
+        })
+        self._sink.write(frame)
+        self._pos += len(frame)
+
+    def finish(self, header: dict):
+        """Write the directory footer.  Returns the blob when buffering."""
+        header = dict(header)
+        header["units"] = self.units
+        hdr = zlib.compress(msgpack.packb(header, use_bin_type=True), 6)
+        self._sink.write(hdr)
+        self._sink.write(struct.pack("<I", len(hdr)))
+        self._sink.write(MAGIC_TILED)
+        self._pos += len(hdr) + 4 + len(MAGIC_TILED)
+        if self._own:
+            return self._sink.getvalue()
+        return None
+
+    @property
+    def bytes_written(self) -> int:
+        return self._pos
+
+
+def tiled_header(blob: bytes) -> dict:
+    """Directory footer of a tiled container (header dict incl. units)."""
+    m = len(MAGIC_TILED)
+    assert is_tiled(blob), "not a CPTT tiled container"
+    assert blob[-m:] == MAGIC_TILED, "truncated tiled container (no footer)"
+    (hlen,) = struct.unpack("<I", blob[-m - 4 : -m])
+    raw = blob[-m - 4 - hlen : -m - 4]
+    return msgpack.unpackb(zlib.decompress(raw), raw=False)
+
+
+def read_tiled_unit(blob: bytes, entry: dict):
+    """Decode ONE unit frame by directory entry -- touches only its bytes."""
+    frame = blob[entry["off"] : entry["off"] + entry["len"]]
+    assert len(frame) == entry["len"], "unit frame out of range"
+    return unpack(frame)
+
+

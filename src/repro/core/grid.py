@@ -138,6 +138,28 @@ def slab_tets(H: int, W: int) -> np.ndarray:
 TET_FACES = np.array([[0, 1, 2], [0, 1, 3], [0, 2, 3], [1, 2, 3]], dtype=np.int32)
 
 
+def box_vertex_ids(shape, box) -> np.ndarray:
+    """Global flat vertex ids of a space-time sub-box.
+
+    shape: (T, H, W) of the full grid; box: (t0, t1, i0, i1, j0, j1)
+    half-open ranges.  Returns int64 of shape (t1-t0, i1-i0, j1-j0).
+
+    The returned ids are strictly increasing in the box's own row-major
+    (t, i, j) order -- i.e. the sub-box's LOCAL flat ids are
+    order-isomorphic to the global ids.  This is the invariant the tiled
+    pipeline (core/tiling.py) rests on: the SoS tie-break (sos.py) reads
+    vertex ids only through ``<`` comparisons, so evaluating predicates
+    and Alg.-2 bounds with tile-local ids is bit-identical to the global
+    evaluation restricted to the tile.
+    """
+    T, H, W = shape
+    t0, t1, i0, i1, j0, j1 = box
+    tt = np.arange(t0, t1, dtype=np.int64)[:, None, None]
+    ii = np.arange(i0, i1, dtype=np.int64)[None, :, None]
+    jj = np.arange(j0, j1, dtype=np.int64)[None, None, :]
+    return tt * (H * W) + ii * W + jj
+
+
 def face_counts(H: int, W: int, T: int) -> dict:
     """Total face counts for reporting."""
     f = slab_faces(H, W)

@@ -1,0 +1,835 @@
+"""Tiled streaming compression with halo-exact trajectory preservation.
+
+The monolithic pipeline (compressor.py) holds the full (T, H, W) field
+device-resident.  This module splits the field into spatial tiles x
+temporal windows, compresses every (tile, window) as an independent unit
+through the same fused stages, and packs the units into a random-access
+container (encode.TiledWriter) -- while keeping the decoded output
+BIT-IDENTICAL to the monolithic fused pipeline.  Why that is possible:
+
+1.  *Order isomorphism.*  The SoS predicate (sos.py) reads vertex ids
+    only through ``<`` comparisons, and a sub-box's row-major local ids
+    preserve the global id order (grid.box_vertex_ids).  So predicates
+    and Alg.-2 bounds evaluated on a halo-extended tile are bit-equal to
+    the global evaluation restricted to that tile.
+
+2.  *Halo-exact eb reduction.*  Each tile derives per-vertex error
+    bounds over its one-cell/one-frame halo extension; the global bound
+    is the MIN across every tile that sees a vertex.  Every face lies
+    inside at least one extension, and a tile missing some of a vertex's
+    incident faces only ever reports a LARGER bound, so the reduction
+    reconstructs the global per-vertex eb exactly -- seam vertices get
+    the same bound on both sides.
+
+3.  *Pointwise X.*  Dual-quantization is pointwise in (value, eb,
+    forced-mask), and integer residual decode is an exact inverse of
+    residual encode, so the reconstructed integer field X -- and hence
+    the float32 output -- is fully determined by (eb, forced mask,
+    xi_unit) regardless of how residuals are blocked into units.  Units
+    may therefore reset the temporal predictor at window starts and run
+    the semi-Lagrangian predictor tile-locally (full random access)
+    without changing a single output bit.
+
+4.  *Seam-agreed verify.*  The verify-and-correct loop runs per tile on
+    the halo extension; every face is checked by every tile that sees
+    it, with identical values and order-isomorphic ids, so all tiles
+    reach the same forced/not decision and the per-round union of
+    forced vertices equals the monolithic round's forced set.  By
+    induction the fixpoint -- and the output -- is bit-identical.
+
+Entry points:
+
+    blob, stats = compress_tiled(u, v, cfg, TileGrid(...))
+    blob, stats = compress_stream(frame_pairs, cfg, grid,
+                                  value_range=(lo, hi))   # bounded memory
+    u, v = decompress_tiled(blob)                         # full field
+    u, v = decompress_region(blob, (t0, t1, i0, i1, j0, j1))
+    plan = read_plan(blob, region)    # directory entries a decode touches
+
+``compress_stream`` consumes an iterable of per-frame ``(u_t, v_t)``
+planes and holds only ~2 windows of frames in memory; units are written
+to the sink as soon as their window's verify fixpoint can no longer be
+affected by future frames.  A verify cascade that would force a vertex
+in an already-emitted window raises StreamingCascadeError (enlarge
+``window_t`` or use compress_tiled); forcing cascades that long have not
+been observed on any test field.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import backend as backend_mod
+from . import compressor, ebound, encode, fixedpoint, quantize
+
+TILED_FORMAT_VERSION = 3
+_EB_BIG = np.int64(2**62)
+
+
+class StreamingCascadeError(RuntimeError):
+    """A verify-and-correct cascade crossed the emitted-window frontier."""
+
+
+# ----------------------------------------------------------------------
+# tile planning
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TileGrid:
+    """Tiling geometry: spatial tiles x temporal windows + halo widths."""
+
+    tile_h: int = 128
+    tile_w: int = 128
+    window_t: int = 32
+    halo: int = 1       # spatial halo (cells); >= 1 for halo-exact eb
+    thalo: int = 1      # temporal halo (frames); >= 1
+
+    def validate(self):
+        assert self.tile_h >= 1 and self.tile_w >= 1 and self.window_t >= 1
+        assert self.halo >= 1, "spatial halo must cover incident faces"
+        assert self.thalo >= 1, "temporal halo must cover incident slabs"
+
+
+@dataclasses.dataclass(frozen=True)
+class TileSpec:
+    """One (window, tile) unit: owned + halo-extended half-open boxes."""
+
+    wi: int
+    ti: int
+    tj: int
+    t0: int; t1: int; i0: int; i1: int; j0: int; j1: int
+    et0: int; et1: int; ei0: int; ei1: int; ej0: int; ej1: int
+
+    @property
+    def key(self):
+        return (self.wi, self.ti, self.tj)
+
+    @property
+    def owned_box(self):
+        return (self.t0, self.t1, self.i0, self.i1, self.j0, self.j1)
+
+    @property
+    def ext_box(self):
+        return (self.et0, self.et1, self.ei0, self.ei1, self.ej0, self.ej1)
+
+    @property
+    def owned_shape(self):
+        return (self.t1 - self.t0, self.i1 - self.i0, self.j1 - self.j0)
+
+    @property
+    def ext_shape(self):
+        return (self.et1 - self.et0, self.ei1 - self.ei0,
+                self.ej1 - self.ej0)
+
+    @property
+    def owned_in_ext(self):
+        return (slice(self.t0 - self.et0, self.t1 - self.et0),
+                slice(self.i0 - self.ei0, self.i1 - self.ei0),
+                slice(self.j0 - self.ej0, self.j1 - self.ej0))
+
+
+def window_specs(wi: int, t0: int, t1: int, H: int, W: int, et1: int,
+                 grid: TileGrid):
+    """Tile specs of one temporal window (et1 = clamped extended end)."""
+    et0 = max(t0 - grid.thalo, 0)
+    nti = -(-H // grid.tile_h)
+    ntj = -(-W // grid.tile_w)
+    specs = []
+    for ti in range(nti):
+        i0 = ti * grid.tile_h
+        i1 = min(i0 + grid.tile_h, H)
+        ei0 = max(i0 - grid.halo, 0)
+        ei1 = min(i1 + grid.halo, H)
+        for tj in range(ntj):
+            j0 = tj * grid.tile_w
+            j1 = min(j0 + grid.tile_w, W)
+            ej0 = max(j0 - grid.halo, 0)
+            ej1 = min(j1 + grid.halo, W)
+            specs.append(TileSpec(wi, ti, tj, t0, t1, i0, i1, j0, j1,
+                                  et0, et1, ei0, ei1, ej0, ej1))
+    return specs
+
+
+def plan(shape, grid: TileGrid):
+    """All TileSpecs for a full (T, H, W) field."""
+    grid.validate()
+    T, H, W = shape
+    specs = []
+    for wi in range(-(-T // grid.window_t)):
+        t0 = wi * grid.window_t
+        t1 = min(t0 + grid.window_t, T)
+        et1 = min(t1 + grid.thalo, T)
+        specs.extend(window_specs(wi, t0, t1, H, W, et1, grid))
+    return specs
+
+
+# ----------------------------------------------------------------------
+# sliding per-frame plane storage (bounded memory for streaming)
+# ----------------------------------------------------------------------
+
+class _Planes:
+    """Dict-of-frames (H, W) numpy storage with box accessors."""
+
+    def __init__(self, H, W, dtype, fill):
+        self.H, self.W = H, W
+        self.dtype = dtype
+        self.fill = fill
+        self.p = {}
+
+    def ensure(self, t):
+        if t not in self.p:
+            self.p[t] = np.full((self.H, self.W), self.fill, self.dtype)
+        return self.p[t]
+
+    def put(self, t, arr):
+        self.p[t] = np.asarray(arr, self.dtype)
+
+    def box(self, b):
+        t0, t1, i0, i1, j0, j1 = b
+        return np.stack([self.ensure(t)[i0:i1, j0:j1]
+                         for t in range(t0, t1)])
+
+    def min_box(self, b, vals):
+        t0, t1, i0, i1, j0, j1 = b
+        for k, t in enumerate(range(t0, t1)):
+            sl = self.ensure(t)[i0:i1, j0:j1]
+            np.minimum(sl, vals[k], out=sl)
+
+    def or_box(self, b, vals):
+        t0, t1, i0, i1, j0, j1 = b
+        for k, t in enumerate(range(t0, t1)):
+            self.ensure(t)[i0:i1, j0:j1] |= vals[k]
+
+    def drop_below(self, t):
+        for k in [k for k in self.p if k < t]:
+            del self.p[k]
+
+
+# ----------------------------------------------------------------------
+# shared state + jitted batch deriver
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _State:
+    cfg: object
+    grid: TileGrid
+    be: str
+    H: int
+    W: int
+    scale: float
+    eb_abs: float
+    tau: int
+    xi_unit: int
+    n_usable: int
+    g2f: float
+    stepper: object
+    u: _Planes
+    v: _Planes
+    ufp: _Planes
+    vfp: _Planes
+    eb: _Planes
+    forced: _Planes
+    preds: dict = dataclasses.field(default_factory=dict)
+    seen: dict = dataclasses.field(default_factory=dict)
+    writer: object = None
+    bad_counts: list = dataclasses.field(default_factory=list)
+    rounds: int = 0
+    n_ll: int = 0
+    n_sl_blocks: int = 0
+    n_blocks: int = 0
+    n_verts: int = 0
+    n_units: int = 0
+
+
+def _init_state(cfg, grid: TileGrid, H, W, vrange, sink):
+    """Global stream parameters from the (exact) global value range.
+
+    Mirrors the monolithic derivation bit-for-bit: same eb_abs, fixed-
+    point scale, tau and xi_unit, so every downstream integer matches.
+    """
+    grid.validate()
+    be = backend_mod.resolve(cfg.backend)
+    lo, hi = float(vrange[0]), float(vrange[1])
+    if cfg.mode == "abs":
+        eb_abs = float(cfg.eb)
+    else:
+        # the value range is reduced in float32 exactly like the
+        # monolithic _abs_eb (fields are float32, so lo/hi are exactly
+        # representable and only the SUBTRACTION rounding matters --
+        # a f64 subtract here once cost a off-by-one tau at 64x256x256)
+        rng = float(np.float32(hi) - np.float32(lo))
+        eb_abs = float(cfg.eb) * max(rng, 1e-30)
+    max_abs = max(abs(lo), abs(hi), 1e-300)
+    scale = fixedpoint.compute_scale(max_abs, cfg.fixed_bits)
+    tau = max(int(np.floor(eb_abs * scale)), 0)
+    xi_unit, n_usable = quantize.ladder(tau, cfg.n_levels)
+    cfl_x = cfg.dt / cfg.dx
+    cfl_y = cfg.dt / cfg.dy
+    stepper = backend_mod.sl_stepper(be, cfl_x, cfl_y, cfg.d_max, cfg.n_max)
+    all_ll = tau < 1 or n_usable < 1
+    return _State(
+        cfg=cfg, grid=grid, be=be, H=H, W=W,
+        scale=scale, eb_abs=eb_abs, tau=tau, xi_unit=xi_unit,
+        n_usable=n_usable, g2f=(2.0 * xi_unit) / scale, stepper=stepper,
+        u=_Planes(H, W, np.float32, 0.0),
+        v=_Planes(H, W, np.float32, 0.0),
+        ufp=_Planes(H, W, np.int64, 0),
+        vfp=_Planes(H, W, np.int64, 0),
+        eb=_Planes(H, W, np.int64, _EB_BIG),
+        forced=_Planes(H, W, bool, all_ll),
+        writer=encode.TiledWriter(sink, cfg.zstd_level),
+    )
+
+
+def _add_frame(st: _State, t, u_t, v_t):
+    u_t = np.asarray(u_t, np.float32)
+    v_t = np.asarray(v_t, np.float32)
+    assert u_t.shape == (st.H, st.W) and v_t.shape == (st.H, st.W)
+    st.u.put(t, u_t)
+    st.v.put(t, v_t)
+    st.ufp.put(t, np.round(u_t.astype(np.float64) * st.scale))
+    st.vfp.put(t, np.round(v_t.astype(np.float64) * st.scale))
+
+
+def _pick_fns(st: _State, shape):
+    # same pallas int32-headroom demotion rule as the monolithic path
+    be_lz = "xla" if (st.be == "pallas" and st.xi_unit < 4) else st.be
+    return compressor._fused_fns(shape, st.cfg.block, st.cfg.n_levels,
+                                 st.cfg.predictor, st.be, be_lz)
+
+
+@functools.lru_cache(maxsize=8)
+def _batch_deriver(tau: int):
+    """Jitted, device-parallel per-vertex eb derivation over a stacked
+    batch of same-shape tile extensions (parallel/sharding.py mesh)."""
+    from ..parallel import sharding
+
+    def one(uu, vv):
+        return ebound.derive_vertex_eb(uu, vv, tau)
+
+    return jax.jit(lambda us, vs: sharding.map_tiles(one, us, vs))
+
+
+def _derive_window(st: _State, w):
+    """Phase 1 for one window: per-tile eb + original face predicates,
+    min-reduced into the global per-vertex bound planes."""
+    run = _batch_deriver(int(max(st.tau, 1)))
+    groups = {}
+    for spec in w.specs:
+        groups.setdefault(spec.ext_shape, []).append(spec)
+    for specs in groups.values():
+        us = np.stack([st.ufp.box(s.ext_box) for s in specs])
+        vs = np.stack([st.vfp.box(s.ext_box) for s in specs])
+        ebs, slice_c, slab_c = run(us, vs)
+        ebs = np.asarray(ebs)
+        slice_c = np.asarray(slice_c)
+        slab_c = np.asarray(slab_c)
+        for k, spec in enumerate(specs):
+            st.eb.min_box(spec.ext_box, ebs[k])
+            st.preds[spec.key] = (slice_c[k], slab_c[k])
+    w.derived = True
+
+
+# ----------------------------------------------------------------------
+# per-tile encode + verify round
+# ----------------------------------------------------------------------
+
+def _unit_streams(st: _State, fns_o, ufp_o, vfp_o, k_o, ll_o, xu_o, xv_o):
+    """Residual streams of one unit (the bytes that get stored).
+
+    The temporal predictor restarts at the unit's first frame and the SL
+    backtrace runs on the unit's own planes (tile-local), so decode of a
+    unit touches nothing outside it.  Residual blocking cannot change
+    the decoded X (exact integer inverses), so this stays bit-compatible
+    with the monolithic output.
+    """
+    cfg = st.cfg
+    To, ho, wo = xu_o.shape
+    nbi, nbj = fns_o.nb
+    if cfg.predictor == "lorenzo":
+        res_u = backend_mod.lorenzo_residual(
+            ufp_o, k_o, ll_o, st.xi_unit, cfg.block, fns_o.be_lorenzo,
+            x=xu_o)
+        res_v = backend_mod.lorenzo_residual(
+            vfp_o, k_o, ll_o, st.xi_unit, cfg.block, fns_o.be_lorenzo,
+            x=xv_o)
+        return res_u, res_v, np.zeros((To, nbi, nbj), dtype=bool)
+    if To > 1:
+        pu, pv = backend_mod.sl_predictions(xu_o, xv_o, st.g2f, st.stepper)
+    else:
+        pu = pv = jnp.zeros((0, ho, wo), jnp.int64)
+    if cfg.predictor == "sl":
+        res_u, res_v = fns_o.sl_stage(xu_o, xv_o, pu, pv)
+        bm = np.ones((To, nbi, nbj), dtype=bool)
+        bm[0] = False
+        return res_u, res_v, bm
+    res_u, res_v, bm_dev = fns_o.mop_stage(
+        ufp_o, vfp_o, k_o, ll_o, xu_o, xv_o, pu, pv, st.xi_unit)
+    return res_u, res_v, np.asarray(bm_dev)
+
+
+def _quant_and_streams(st: _State, spec: TileSpec):
+    """Quantize the halo extension + build the unit's residual streams."""
+    fns_e = _pick_fns(st, spec.ext_shape)
+    ufp_e = jnp.asarray(st.ufp.box(spec.ext_box))
+    vfp_e = jnp.asarray(st.vfp.box(spec.ext_box))
+    eb_e = jnp.asarray(st.eb.box(spec.ext_box))
+    extra_e = jnp.asarray(st.forced.box(spec.ext_box))
+    xu_e, xv_e, k_e, ll_e = fns_e.quant_stage(
+        ufp_e, vfp_e, eb_e, extra_e, st.xi_unit)
+    o = spec.owned_in_ext
+    fns_o = _pick_fns(st, spec.owned_shape)
+    res_u, res_v, bm = _unit_streams(
+        st, fns_o, ufp_e[o], vfp_e[o], k_e[o], ll_e[o], xu_e[o], xv_e[o])
+    return fns_e, ufp_e, vfp_e, extra_e, xu_e, xv_e, ll_e, res_u, res_v, bm
+
+
+def _tile_round(st: _State, spec: TileSpec, delta):
+    """One verify round on one tile's halo extension.
+
+    ``delta`` is None for the initial (sign-stability-screened) full
+    check, else the ext-shaped bool mask of vertices forced since this
+    tile last checked (only incident faces are re-evaluated).  Returns
+    (forced_ext bool, n_bad) with decisions bit-equal to the monolithic
+    round restricted to this extension.
+    """
+    (fns_e, ufp_e, vfp_e, extra_e, xu_e, xv_e, ll_e,
+     res_u, res_v, bm) = _quant_and_streams(st, spec)
+    o = spec.owned_in_ext
+    # simulate the unit's exact decode, paste into the extension
+    xu_d, xv_d = compressor._decode_fields_parallel(
+        res_u, res_v, bm, st.scale, st.xi_unit, st.cfg.block, st.stepper)
+    xu_sim = jnp.asarray(xu_e).at[o].set(xu_d)
+    xv_sim = jnp.asarray(xv_e).at[o].set(xv_d)
+    u_e = jnp.asarray(st.u.box(spec.ext_box))
+    v_e = jnp.asarray(st.v.box(spec.ext_box))
+    forced, n_pt, ur_fp, vr_fp = fns_e.check_pt(
+        xu_sim, xv_sim, ll_e, extra_e, u_e, v_e,
+        st.scale, st.xi_unit, st.eb_abs)
+    n_bad = int(n_pt)
+    forced_np = np.asarray(forced)
+
+    Te, he, we = spec.ext_shape
+    if delta is None:
+        unsafe_sl, unsafe_sb = fns_e.screen_unsafe(ufp_e, vfp_e, ur_fp, vr_fp)
+        ts, fs = np.nonzero(np.asarray(unsafe_sl))
+        tb, fb = np.nonzero(np.asarray(unsafe_sb))
+        verts = compressor._face_verts(ts, fs, tb, fb, he, we)
+    else:
+        verts, (ts, fs), (tb, fb) = compressor._touched_faces(
+            delta, Te, he, we)
+    if len(verts):
+        slice0, slab0 = st.preds[spec.key]
+        orig = np.concatenate([slice0[ts, fs], slab0[tb, fb]])
+        B = max(8, 1 << (len(verts) - 1).bit_length())
+        verts_p = np.concatenate([
+            verts,
+            np.tile(np.array([[0, 1, 2]], np.int64), (B - len(verts), 1)),
+        ], axis=0)
+        crossed = np.asarray(fns_e.face_subset(
+            ur_fp.reshape(-1), vr_fp.reshape(-1),
+            jnp.asarray(verts_p)))[: len(verts)]
+        bad = crossed != orig
+        n_bad += int(bad.sum())
+        if bad.any():
+            flat = forced_np.reshape(-1).copy()
+            flat[verts[bad].reshape(-1)] = True
+            forced_np = flat.reshape(spec.ext_shape)
+    return forced_np, n_bad
+
+
+# ----------------------------------------------------------------------
+# verify-and-correct fixpoint over a set of windows
+# ----------------------------------------------------------------------
+
+def _fixpoint(st: _State, windows, frontier: int = 0):
+    """Run the seam-agreed verify loop over ``windows``' tiles.
+
+    Per round every participating tile evaluates its extension exactly
+    as the monolithic round would (screen on first contact, incident
+    faces of newly-forced vertices afterwards); the per-round union of
+    forced vertices is applied globally so both sides of every seam
+    agree before the next round.  Raises StreamingCascadeError if an
+    addition lands below ``frontier`` (an already-emitted frame).
+    """
+    cfg = st.cfg
+    specs = [s for w in windows for s in w.specs]
+    work = []
+    for spec in specs:
+        if spec.key not in st.seen:
+            work.append((spec, None))
+        else:
+            delta = st.forced.box(spec.ext_box) & ~st.seen[spec.key]
+            if delta.any():
+                work.append((spec, delta))
+    rounds = 0
+    while work:
+        additions = {}
+        n_bad = 0
+        for spec, delta in work:
+            forced_ext, nb = _tile_round(st, spec, delta)
+            n_bad += nb
+            new = forced_ext & ~st.forced.box(spec.ext_box)
+            if new.any():
+                t0 = spec.et0
+                for k in range(new.shape[0]):
+                    if new[k].any():
+                        acc = additions.setdefault(
+                            t0 + k, np.zeros((st.H, st.W), bool))
+                        acc[spec.ei0:spec.ei1, spec.ej0:spec.ej1] |= new[k]
+        st.bad_counts.append(n_bad)
+        if not additions or rounds >= cfg.max_rounds:
+            break
+        if min(additions) < frontier:
+            raise StreamingCascadeError(
+                f"verify cascade reached emitted frame {min(additions)} "
+                f"(< frontier {frontier}); increase window_t or use "
+                f"compress_tiled")
+        for t, mask in additions.items():
+            st.forced.ensure(t)
+            st.forced.p[t] |= mask
+        rounds += 1
+        st.rounds = max(st.rounds, rounds)
+        work = []
+        for spec in specs:
+            t0, t1, i0, i1, j0, j1 = spec.ext_box
+            delta = np.stack([
+                additions[t][i0:i1, j0:j1] if t in additions
+                else np.zeros((i1 - i0, j1 - j0), bool)
+                for t in range(t0, t1)
+            ])
+            if delta.any():
+                work.append((spec, delta))
+    for spec in specs:
+        st.seen[spec.key] = st.forced.box(spec.ext_box)
+    for w in windows:
+        w.screened = True
+
+
+# ----------------------------------------------------------------------
+# unit emission
+# ----------------------------------------------------------------------
+
+def _emit_window(st: _State, w):
+    # re-quantizes at the final mask rather than caching the last verify
+    # round's streams: a cache would hold every pending tile's residual
+    # field (2x the raw f32 footprint) alive until emission, defeating
+    # the bounded-memory point of tiling for one redundant encode pass
+    for spec in w.specs:
+        (_, _, _, _, xu_e, xv_e, ll_e, res_u, res_v, bm) = \
+            _quant_and_streams(st, spec)
+        o = spec.owned_in_ext
+        ll_o = np.asarray(ll_e[o])
+        u_o = st.u.box(spec.owned_box)
+        v_o = st.v.box(spec.owned_box)
+        sym_u, esc_u = encode.to_symbols(np.asarray(res_u))
+        sym_v, esc_v = encode.to_symbols(np.asarray(res_v))
+        header = {
+            "box": [int(x) for x in spec.owned_box],
+        }
+        sections = {
+            "sym_u": sym_u, "sym_v": sym_v,
+            "esc_u": esc_u, "esc_v": esc_v,
+            "lossless": np.packbits(ll_o),
+            "u_ll": u_o[ll_o], "v_ll": v_o[ll_o],
+            "blockmap": np.packbits(bm),
+            "bm_shape": np.asarray(bm.shape, dtype=np.int32),
+        }
+        st.writer.add_unit(spec.key, spec.owned_box, header, sections)
+        st.n_units += 1
+        st.n_ll += int(ll_o.sum())
+        st.n_verts += ll_o.size
+        st.n_sl_blocks += int(bm.sum())
+        st.n_blocks += bm.size
+        # original-predicate tables and seam snapshots are dead now
+        st.preds.pop(spec.key, None)
+        st.seen.pop(spec.key, None)
+    w.emitted = True
+
+
+def _container_header(st: _State, T: int):
+    cfg = st.cfg
+    return {
+        "version": TILED_FORMAT_VERSION,
+        "pipeline": "tiled",
+        "predictor": cfg.predictor,
+        "sl_backend": st.be,
+        "shape": [int(T), int(st.H), int(st.W)],
+        "scale": float(st.scale),
+        "xi_unit": int(st.xi_unit),
+        "block": int(cfg.block),
+        "cfl_x": float(cfg.dt / cfg.dx),
+        "cfl_y": float(cfg.dt / cfg.dy),
+        "d_max": float(cfg.d_max),
+        "n_max": int(cfg.n_max),
+        "eb_abs": float(st.eb_abs),
+        "tiling": dataclasses.asdict(st.grid),
+    }
+
+
+def _stats(st: _State, T, blob, t0):
+    """Stream stats (monolithic keys + tiled extras).  Note
+    verify_bad_counts sums PER-TILE counts: a bad seam face or halo
+    vertex is counted once per tile that sees it, so the numbers are
+    inflated relative to the monolithic pipeline's same-named stat
+    (the forced-vertex SETS are identical; only the counting differs)."""
+    orig_bytes = T * st.H * st.W * 4 * 2
+    comp_bytes = len(blob) if blob is not None else st.writer.bytes_written
+    return {
+        "orig_bytes": orig_bytes,
+        "comp_bytes": comp_bytes,
+        "ratio": orig_bytes / max(comp_bytes, 1),
+        "lossless_frac": st.n_ll / max(st.n_verts, 1),
+        "sl_block_frac": st.n_sl_blocks / max(st.n_blocks, 1),
+        "verify_rounds": st.rounds,
+        "verify_bad_counts": st.bad_counts,
+        "eb_abs": st.eb_abs,
+        "scale": st.scale,
+        "tau": st.tau,
+        "xi_unit": st.xi_unit,
+        "seconds": time.perf_counter() - t0,
+        "backend": st.be,
+        "pipeline": "tiled",
+        "n_units": st.n_units,
+        "tiling": dataclasses.asdict(st.grid),
+    }
+
+
+class _Window:
+    def __init__(self, wi, t0, t1, specs):
+        self.wi, self.t0, self.t1 = wi, t0, t1
+        self.specs = specs
+        self.et1 = max(s.et1 for s in specs)
+        self.derived = False
+        self.screened = False
+        self.emitted = False
+
+
+# ----------------------------------------------------------------------
+# public entry points: in-memory tiled + streaming
+# ----------------------------------------------------------------------
+
+def _prepare(u, v, cfg, grid: TileGrid, sink=None):
+    """Load an in-memory field into stream state + derive every window
+    (phase 1).  Split out so tests can drive the fixpoint directly."""
+    u, v = compressor._as_fields(u, v)
+    T, H, W = u.shape
+    vrange = (float(min(u.min(), v.min())), float(max(u.max(), v.max())))
+    st = _init_state(cfg, grid, H, W, vrange, sink)
+    for t in range(T):
+        _add_frame(st, t, u[t], v[t])
+    windows = []
+    for wi in range(-(-T // grid.window_t)):
+        t0 = wi * grid.window_t
+        t1 = min(t0 + grid.window_t, T)
+        et1 = min(t1 + grid.thalo, T)
+        windows.append(_Window(wi, t0, t1,
+                               window_specs(wi, t0, t1, H, W, et1, grid)))
+    for w in windows:
+        _derive_window(st, w)
+    return st, windows, T
+
+
+def compress_tiled(u, v, cfg=None, grid: Optional[TileGrid] = None,
+                   sink=None):
+    """Tiled compression of an in-memory field; bit-identical output to
+    the monolithic fused pipeline (global verify fixpoint across all
+    units).  Returns (blob, stats) -- blob is None when ``sink`` given.
+    """
+    cfg = cfg or compressor.CompressionConfig()
+    grid = grid or getattr(cfg, "tiling", None) or TileGrid()
+    grid.validate()
+    t_start = time.perf_counter()
+    st, windows, T = _prepare(u, v, cfg, grid, sink)
+    if cfg.verify:
+        _fixpoint(st, windows, frontier=0)
+    for w in windows:
+        _emit_window(st, w)
+    blob = st.writer.finish(_container_header(st, T))
+    return blob, _stats(st, T, blob, t_start)
+
+
+def compress_stream(pairs, cfg=None, grid: Optional[TileGrid] = None,
+                    value_range=None, sink=None):
+    """Streaming tiled compression of an iterable of (u_t, v_t) frames.
+
+    ``value_range=(lo, hi)`` must be the exact global min/max over both
+    components (it fixes the fixed-point scale and the relative error
+    bound before the stream starts); without it the stream is
+    materialized and delegated to compress_tiled.  Holds ~2 windows of
+    frames; emits each unit as soon as later frames can no longer
+    change its verify outcome.  Returns (blob, stats); blob is None
+    when writing to ``sink``.
+    """
+    cfg = cfg or compressor.CompressionConfig()
+    grid = grid or getattr(cfg, "tiling", None) or TileGrid()
+    grid.validate()
+    if value_range is None:
+        frames = [(np.asarray(uf, np.float32), np.asarray(vf, np.float32))
+                  for uf, vf in pairs]
+        u = np.stack([f[0] for f in frames])
+        v = np.stack([f[1] for f in frames])
+        return compress_tiled(u, v, cfg, grid, sink=sink)
+
+    t_start = time.perf_counter()
+    st = None
+    windows = []
+    pending = []            # derived, not yet emitted (ordered)
+    frontier = 0            # frames below this are sealed
+    next_w = 0              # next window index to derive
+    T = 0
+    it = iter(pairs)
+    eof = False
+
+    def _derive_ready():
+        """Derive every window whose extension is fully buffered."""
+        nonlocal next_w
+        out = []
+        while True:
+            t0 = next_w * grid.window_t
+            if t0 >= T:
+                break
+            t1 = min(t0 + grid.window_t, T)
+            full = t1 == t0 + grid.window_t and T >= t1 + grid.thalo
+            if not (full or eof):
+                break
+            et1 = min(t1 + grid.thalo, T)
+            w = _Window(next_w, t0, t1,
+                        window_specs(next_w, t0, t1, st.H, st.W, et1, grid))
+            _derive_window(st, w)
+            windows.append(w)
+            pending.append(w)
+            next_w += 1
+            out.append(w)
+        return out
+
+    def _advance():
+        """Fixpoint + emit everything the derive frontier allows."""
+        nonlocal frontier
+        if not pending:
+            return
+        eb_final_hi = T if eof else windows[-1].t1
+        fix = [w for w in pending if w.et1 <= eb_final_hi]
+        if not fix:
+            return
+        if cfg.verify:
+            _fixpoint(st, fix, frontier=frontier)
+        emit_hi = len(fix) if eof else len(fix) - 1
+        for w in fix[:emit_hi]:
+            _emit_window(st, w)
+            pending.remove(w)
+            frontier = w.t1
+        if pending:
+            keep = pending[0].t0 - grid.thalo
+            for planes in (st.u, st.v, st.ufp, st.vfp, st.eb, st.forced):
+                planes.drop_below(keep)
+
+    for uf, vf in it:
+        uf = np.asarray(uf, np.float32)
+        if st is None:
+            H, W = uf.shape
+            st = _init_state(cfg, grid, H, W, value_range, sink)
+        _add_frame(st, T, uf, vf)
+        T += 1
+        if _derive_ready():
+            _advance()
+    eof = True
+    assert st is not None and T >= 2, "need at least 2 frames"
+    _derive_ready()
+    _advance()
+    assert not pending, "scheduler left unemitted windows"
+    blob = st.writer.finish(_container_header(st, T))
+    return blob, _stats(st, T, blob, t_start)
+
+
+# ----------------------------------------------------------------------
+# decode: full, region, read planning
+# ----------------------------------------------------------------------
+
+def _overlaps(box, region):
+    t0, t1, i0, i1, j0, j1 = box
+    rt0, rt1, ri0, ri1, rj0, rj1 = region
+    return t0 < rt1 and rt0 < t1 and i0 < ri1 and ri0 < i1 \
+        and j0 < rj1 and rj0 < j1
+
+
+def read_plan(blob: bytes, region=None):
+    """Directory entries a region decode touches -- and nothing else."""
+    hdr = encode.tiled_header(blob)
+    if region is None:
+        return list(hdr["units"])
+    return [e for e in hdr["units"] if _overlaps(e["box"], region)]
+
+
+def _decode_unit(uh, secs, hdr, stepper):
+    t0, t1, i0, i1, j0, j1 = uh["box"]
+    shape = (t1 - t0, i1 - i0, j1 - j0)
+    res_u = encode.from_symbols(secs["sym_u"], secs["esc_u"], shape)
+    res_v = encode.from_symbols(secs["sym_v"], secs["esc_v"], shape)
+    bm_shape = tuple(int(x) for x in secs["bm_shape"])
+    bm = np.unpackbits(secs["blockmap"], count=int(np.prod(bm_shape)))
+    bm = bm.astype(bool).reshape(bm_shape)
+    ll = np.unpackbits(secs["lossless"], count=int(np.prod(shape)))
+    ll = ll.astype(bool).reshape(shape)
+    xu, xv = compressor._decode_fields_parallel(
+        jnp.asarray(res_u), jnp.asarray(res_v), bm,
+        hdr["scale"], hdr["xi_unit"], hdr["block"], stepper)
+    u_raw = np.zeros(shape, dtype=np.float32)
+    v_raw = np.zeros(shape, dtype=np.float32)
+    u_raw[ll] = secs["u_ll"]
+    v_raw[ll] = secs["v_ll"]
+    u_rec, v_rec = compressor._reconstruct(
+        xu, xv, hdr["scale"], hdr["xi_unit"],
+        jnp.asarray(ll), jnp.asarray(u_raw), jnp.asarray(v_raw))
+    return np.asarray(u_rec), np.asarray(v_rec)
+
+
+def decompress_tiled(blob: bytes, region=None, backend=None):
+    """Decode a tiled container (whole field, or just ``region``).
+
+    Only the units whose owned boxes overlap the region are read from
+    the blob (byte slices at directory offsets) and decoded.
+    """
+    hdr = encode.tiled_header(blob)
+    version = hdr.get("version", 1)
+    if version > TILED_FORMAT_VERSION:
+        raise ValueError(
+            f"container format version {version} is newer than this "
+            f"decoder (supports <= {TILED_FORMAT_VERSION})")
+    T, H, W = hdr["shape"]
+    if region is None:
+        region = (0, T, 0, H, 0, W)
+    rt0, rt1, ri0, ri1, rj0, rj1 = region
+    assert 0 <= rt0 < rt1 <= T and 0 <= ri0 < ri1 <= H \
+        and 0 <= rj0 < rj1 <= W, f"region {region} outside field"
+    be = backend_mod.resolve(backend or hdr.get("sl_backend"))
+    stepper = backend_mod.sl_stepper(
+        be, hdr["cfl_x"], hdr["cfl_y"], hdr["d_max"], hdr["n_max"])
+    u_out = np.zeros((rt1 - rt0, ri1 - ri0, rj1 - rj0), dtype=np.float32)
+    v_out = np.zeros_like(u_out)
+    for entry in read_plan(blob, region):
+        uh, secs = encode.read_tiled_unit(blob, entry)
+        u_rec, v_rec = _decode_unit(uh, secs, hdr, stepper)
+        t0, t1, i0, i1, j0, j1 = uh["box"]
+        ct0, ct1 = max(t0, rt0), min(t1, rt1)
+        ci0, ci1 = max(i0, ri0), min(i1, ri1)
+        cj0, cj1 = max(j0, rj0), min(j1, rj1)
+        src = (slice(ct0 - t0, ct1 - t0), slice(ci0 - i0, ci1 - i0),
+               slice(cj0 - j0, cj1 - j0))
+        dst = (slice(ct0 - rt0, ct1 - rt0), slice(ci0 - ri0, ci1 - ri0),
+               slice(cj0 - rj0, cj1 - rj0))
+        u_out[dst] = u_rec[src]
+        v_out[dst] = v_rec[src]
+    return u_out, v_out
+
+
+def decompress_region(blob: bytes, region, backend=None):
+    """Random-access decode of (t0, t1, i0, i1, j0, j1) -- reads only
+    the units covering the region."""
+    return decompress_tiled(blob, region=region, backend=backend)

@@ -14,12 +14,20 @@ import numpy as np
 from . import fixedpoint, grid, sos
 
 
+def _frame_chunk(n_faces: int, budget: int = 1 << 22) -> int:
+    """Frames per batch so transient gathers stay ~tens of MB."""
+    return max(1, budget // max(n_faces, 1))
+
+
 def face_predicate_tables(ufp, vfp):
     """All face predicates, numpy, organized per slab.
 
     Returns dict with 'slice' (T, Fs) and 'slab' (T-1, Fb) bool arrays.
     (Same face enumeration as ebound.all_face_predicates, but computed
-    with numpy so host tooling does not need jax.)
+    with numpy so host tooling does not need jax.)  Faces are gathered
+    for a batch of frames at once -- the per-frame Python loop the seed
+    used dominated e2e test time -- chunked so the transient (C, F, 3)
+    gathers stay bounded on large fields.
     """
     T, H, W = ufp.shape
     HW = H * W
@@ -28,22 +36,27 @@ def face_predicate_tables(ufp, vfp):
     slice_tab = grid.slab_faces(H, W)["slice0"].astype(np.int64)
     sf = grid.slab_faces(H, W)
     slab_tab = np.concatenate([sf["side"], sf["internal"]], 0).astype(np.int64)
+    toff = np.arange(T, dtype=np.int64)[:, None, None] * HW
 
     slice_pred = np.zeros((T, len(slice_tab)), dtype=bool)
-    for t in range(T):
-        fu = u2[t][slice_tab]
-        fv = v2[t][slice_tab]
-        idx = slice_tab + t * HW
-        slice_pred[t] = sos.face_crossed_vals(np, fu, fv, idx)
+    step = _frame_chunk(len(slice_tab))
+    for lo in range(0, T, step):
+        hi = min(lo + step, T)
+        fu = u2[lo:hi, :][:, slice_tab]              # (C, Fs, 3)
+        fv = v2[lo:hi, :][:, slice_tab]
+        idx = slice_tab[None] + toff[lo:hi]
+        slice_pred[lo:hi] = sos.face_crossed_vals(np, fu, fv, idx)
 
     slab_pred = np.zeros((T - 1, len(slab_tab)), dtype=bool)
-    for t in range(T - 1):
-        vals_u = np.concatenate([u2[t], u2[t + 1]])
-        vals_v = np.concatenate([v2[t], v2[t + 1]])
-        fu = vals_u[slab_tab]
-        fv = vals_v[slab_tab]
-        idx = slab_tab + t * HW
-        slab_pred[t] = sos.face_crossed_vals(np, fu, fv, idx)
+    step = _frame_chunk(len(slab_tab))
+    for lo in range(0, T - 1, step):
+        hi = min(lo + step, T - 1)
+        pair_u = np.concatenate([u2[lo:hi], u2[lo + 1 : hi + 1]], axis=1)
+        pair_v = np.concatenate([v2[lo:hi], v2[lo + 1 : hi + 1]], axis=1)
+        fu = pair_u[:, slab_tab]                     # (C, Fb, 3)
+        fv = pair_v[:, slab_tab]
+        idx = slab_tab[None] + toff[lo:hi]
+        slab_pred[lo:hi] = sos.face_crossed_vals(np, fu, fv, idx)
     return {"slice": slice_pred, "slab": slab_pred}
 
 
@@ -85,21 +98,25 @@ def extract_tracks(ufp, vfp):
     uf = _UnionFind()
     crossed_total = 0
 
-    for t in range(T - 1):
-        vals_u = np.concatenate([u2[t], u2[t + 1]])
-        vals_v = np.concatenate([v2[t], v2[t + 1]])
-        fu = vals_u[tet_faces]                    # (Ntet, 4, 3)
-        fv = vals_v[tet_faces]
-        idx = tet_faces + t * HW
-        crossed = sos.face_crossed_vals(np, fu, fv, idx)  # (Ntet, 4)
-        n_crossed = crossed.sum(axis=1)
-        # Under SoS each tet has 0 or 2 crossed faces (Lemma 1).
-        active = np.nonzero(n_crossed == 2)[0]
+    # predicates for a batch of slabs at once (vectorized); the python
+    # union-find below only walks the sparse active tets
+    step = _frame_chunk(4 * len(tet_faces))
+    for lo in range(0, T - 1, step):
+        hi = min(lo + step, T - 1)
+        pair_u = np.concatenate([u2[lo:hi], u2[lo + 1 : hi + 1]], axis=1)
+        pair_v = np.concatenate([v2[lo:hi], v2[lo + 1 : hi + 1]], axis=1)
+        fu = pair_u[:, tet_faces]                 # (C, Ntet, 4, 3)
+        fv = pair_v[:, tet_faces]
+        idx = tet_faces[None] \
+            + (np.arange(lo, hi, dtype=np.int64) * HW)[:, None, None, None]
+        crossed = sos.face_crossed_vals(np, fu, fv, idx)  # (C, Ntet, 4)
         crossed_total += int(crossed.sum())
-        for ti in active:
-            fa, fb = np.nonzero(crossed[ti])[0]
-            ka = _face_key(idx[ti, fa])
-            kb = _face_key(idx[ti, fb])
+        n_crossed = crossed.sum(axis=2)
+        # Under SoS each tet has 0 or 2 crossed faces (Lemma 1).
+        for ci, ti in zip(*np.nonzero(n_crossed == 2)):
+            fa, fb = np.nonzero(crossed[ci, ti])[0]
+            ka = _face_key(idx[ci, ti, fa])
+            kb = _face_key(idx[ci, ti, fb])
             uf.union(ka, kb)
 
     roots = {uf.find(k) for k in uf.parent}

@@ -1,0 +1,69 @@
+"""Container backward compatibility against a checked-in PR-1 blob.
+
+``tests/data/golden_v2_mop.cptz`` was produced by the PR-1 (version-2,
+monolithic fused) encoder; today's decoder must keep reading it bitwise
+and the new tiled (version-3) directory format must not disturb legacy
+detection.  The version byte is honored in both directions: containers
+claiming a future version are refused instead of mis-parsed.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import compress, decompress, encode
+from repro.core.compressor import FORMAT_VERSION
+
+_DATA = os.path.join(os.path.dirname(__file__), "data")
+
+
+def _golden():
+    with open(os.path.join(_DATA, "golden_v2_mop.cptz"), "rb") as f:
+        blob = f.read()
+    exp = np.load(os.path.join(_DATA, "golden_v2_expected.npz"))
+    return blob, exp
+
+
+def test_golden_v2_blob_decodes_bitwise():
+    blob, exp = _golden()
+    assert not encode.is_tiled(blob)          # legacy magic, legacy path
+    header, _ = encode.unpack(blob)
+    assert header["version"] == 2
+    ur, vr = decompress(blob)
+    assert np.array_equal(ur, exp["ur"])
+    assert np.array_equal(vr, exp["vr"])
+    assert np.abs(ur.astype(np.float64) - exp["u"]).max() <= exp["eb_abs"]
+    assert np.abs(vr.astype(np.float64) - exp["v"]).max() <= exp["eb_abs"]
+
+
+def test_current_encoder_still_writes_v2_monolithic():
+    _, exp = _golden()
+    blob, stats = compress(exp["u"], exp["v"])
+    header, _ = encode.unpack(blob)
+    assert header["version"] == FORMAT_VERSION == 2
+
+
+def test_future_version_refused_legacy():
+    blob, _ = _golden()
+    header, sections = encode.unpack(blob)
+    header = dict(header)
+    header["version"] = 99
+    doctored = encode.pack(header, {k: np.asarray(v)
+                                    for k, v in sections.items()})
+    with pytest.raises(ValueError, match="version 99"):
+        decompress(doctored)
+
+
+def test_future_version_refused_tiled():
+    w = encode.TiledWriter()
+    w.add_unit((0, 0, 0), (0, 1, 0, 1, 0, 1), {"box": [0, 1, 0, 1, 0, 1]},
+               {"sym_u": np.zeros(1, np.uint8)})
+    blob = w.finish({"version": 99, "shape": [2, 2, 2]})
+    with pytest.raises(ValueError, match="version 99"):
+        decompress(blob)
+
+
+def test_magics_disjoint():
+    assert len({encode.MAGIC, encode.MAGIC_ZLIB, encode.MAGIC_TILED}) == 3
+    blob, _ = _golden()
+    assert blob[:5] in (encode.MAGIC, encode.MAGIC_ZLIB)
