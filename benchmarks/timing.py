@@ -81,9 +81,12 @@ def _bench_tiled(eb, shape, repeat, log):
     mb = (u.nbytes + v.nbytes) / 2**20
     grid = TileGrid(tile_h=max(H // 2, 1), tile_w=max(W // 2, 1),
                     window_t=max(T // 2, 1))
+    import dataclasses as _dc
     cfg = CompressionConfig(eb=eb, mode="rel", predictor="mop",
-                            backend="xla", verify=True, fused=True)
-    tc_m, td_m, tc_t, td_t = [], [], [], []
+                            backend="xla", verify=True, fused=True,
+                            track_index=False)
+    cfg_idx = _dc.replace(cfg, track_index=True)
+    tc_m, td_m, tc_t, td_t, tc_i = [], [], [], [], []
     blob_m = blob_t = None
     stats_t = None
     for _ in range(repeat):
@@ -99,6 +102,10 @@ def _bench_tiled(eb, shape, repeat, log):
         t0 = time.perf_counter()
         ut, vt = decompress_tiled(blob_t)
         td_t.append(time.perf_counter() - t0)
+        # indexing overhead: same encode with the sidecar track index
+        t0 = time.perf_counter()
+        compress_tiled(u, v, cfg_idx, grid)
+        tc_i.append(time.perf_counter() - t0)
     identical = bool(np.array_equal(um, ut) and np.array_equal(vm, vt))
     assert identical, "tiled decode diverged from monolithic"
     # random-access: decode one tile-interior region, count units read
@@ -115,10 +122,12 @@ def _bench_tiled(eb, shape, repeat, log):
         "tiling": stats_t["tiling"],
         "t_encode_monolithic": round(min(tc_m), 3),
         "t_encode_tiled": round(min(tc_t), 3),
+        "t_encode_tiled_indexed": round(min(tc_i), 3),
         "t_decode_monolithic": round(min(td_m), 3),
         "t_decode_tiled": round(min(td_t), 3),
         "MBps_encode_monolithic": round(mb / max(min(tc_m), 1e-9), 2),
         "MBps_encode_tiled": round(mb / max(min(tc_t), 1e-9), 2),
+        "MBps_encode_tiled_indexed": round(mb / max(min(tc_i), 1e-9), 2),
         "MBps_decode_monolithic": round(mb / max(min(td_m), 1e-9), 2),
         "MBps_decode_tiled": round(mb / max(min(td_t), 1e-9), 2),
         "bit_identical": identical,
@@ -133,10 +142,69 @@ def _bench_tiled(eb, shape, repeat, log):
     return out
 
 
+def _bench_trajectory_analysis(eb, shape, log, field="turbulence"):
+    """Track-level metric rows: ours vs the non-trajectory-preserving
+    baselines (broken vs preserved tracks), with per-type CP counts,
+    false-case counts, and the analysis-phase throughput (extraction
+    MB/s on the decoded field).  The turbulence ensemble is the field
+    where generic compressors actually break tracks (many
+    near-degenerate crossings); cpsz-like preserves slices only, so
+    FC_s > 0 and tracks merge/split across slabs."""
+    from repro import analysis
+    from repro.baselines import REGISTRY
+    from repro.core import fixedpoint, trajectory
+    from repro.data import synthetic
+
+    T, H, W = shape
+    u, v = synthetic.DATASETS[field](T=T, H=H, W=W)
+    mb = (u.nbytes + v.nbytes) / 2**20
+    scale, uo, vo = fixedpoint.to_fixed(u, v)
+    # one predicate pass per field, threaded through FC and extraction
+    p0 = trajectory.face_predicate_tables(uo, vo)
+    ref = analysis.extract(uo, vo, tables=p0)
+
+    def row(name, ur, vr):
+        ufp, vfp = fixedpoint.refix(ur, vr, scale)
+        t0 = time.perf_counter()
+        p1 = trajectory.face_predicate_tables(ufp, vfp)
+        ts = analysis.extract(ufp, vfp, tables=p1)
+        dt = time.perf_counter() - t0
+        fc = trajectory.false_cases_from_tables(p0, p1)
+        out = {
+            "method": name,
+            "n_tracks": ts.n_tracks,
+            "n_tracks_orig": ref.n_tracks,
+            "tracks_preserved": ts.n_tracks == ref.n_tracks
+            and fc["FC_t"] == 0 and fc["FC_s"] == 0,
+            "FC_t": fc["FC_t"],
+            "FC_s": fc["FC_s"],
+            "type_counts": ts.type_counts(),
+            "t_analysis": round(dt, 4),
+            "MBps_analysis": round(mb / max(dt, 1e-9), 2),
+        }
+        log(f"[bench] trajectory_analysis {name:10s} "
+            f"tracks {ts.n_tracks}/{ref.n_tracks} "
+            f"FC_t {fc['FC_t']} FC_s {fc['FC_s']} "
+            f"({out['MBps_analysis']} MB/s analysis)")
+        return out
+
+    rows = []
+    cfg = CompressionConfig(eb=eb, mode="rel", predictor="mop",
+                            backend="xla")
+    blob, _ = compress(u, v, cfg)
+    ur, vr = decompress(blob)
+    rows.append(row("ours-mop", ur, vr))
+    for bname in ("sz3-like", "cpsz-like"):
+        res = REGISTRY[bname](u, v, eb=eb, mode="rel")
+        rows.append(row(bname, res["u_rec"], res["v_rec"]))
+    return {"field": f"{field} {T}x{H}x{W}", "eb": eb, "rows": rows}
+
+
 def bench_compress(small=True, eb=1e-2, backends=("xla",),
                    predictors=("lorenzo", "sl", "mop"),
                    speedup_shape=(64, 256, 256), repeat=2, log=print,
-                   data=None, tiled_shape=(64, 256, 256)):
+                   data=None, tiled_shape=(64, 256, 256),
+                   analysis_shape=(16, 48, 48)):
     """Emit the BENCH_compress.json payload.
 
     Each (dataset, predictor, backend) cell reports best-of-``repeat``
@@ -200,8 +268,12 @@ def bench_compress(small=True, eb=1e-2, backends=("xla",),
     tiled = None
     if tiled_shape is not None:
         tiled = _bench_tiled(eb, tiled_shape, repeat, log)
+    traj = None
+    if analysis_shape is not None:
+        traj = _bench_trajectory_analysis(eb, analysis_shape, log)
     return {"rows": rows, "seed_vs_fused": comparison,
-            "tiled_vs_monolithic": tiled, "eb": eb, "small": small}
+            "tiled_vs_monolithic": tiled, "trajectory_analysis": traj,
+            "eb": eb, "small": small}
 
 
 if __name__ == "__main__":
@@ -227,7 +299,7 @@ if __name__ == "__main__":
         payload = bench_compress(
             eb=args.eb, backends=backends, data=tiny,
             predictors=("mop",), speedup_shape=(6, 32, 32), repeat=1,
-            tiled_shape=(6, 32, 32))
+            tiled_shape=(6, 32, 32), analysis_shape=(6, 24, 24))
     else:
         payload = bench_compress(
             small=not args.large, eb=args.eb, backends=backends,

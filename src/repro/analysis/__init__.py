@@ -1,0 +1,35 @@
+"""Trajectory analytics & feature-query subsystem.
+
+Turns the compressor's preserved critical-point trajectories into
+queryable objects:
+
+* ``extract``             -- full geometric extraction: space-time
+                             polylines + CP types (TrajectorySet)
+* ``classify_nodes``      -- Jacobian-eigenvalue CP classification
+* ``query_tracks``        -- filter the CPTT1 sidecar track index
+                             (bbox / time range / CP type); footer-only
+* ``track_read_plan``     -- directory entries one track needs
+* ``decode_for_track``    -- decode ONLY the covering units and rebuild
+                             the exact polyline
+* ``track_summaries``     -- all per-track index summaries
+
+See DESIGN.md #9 for the sidecar index format and the seam-stitching
+argument.
+"""
+from .classify import classify_nodes  # noqa: F401
+from .extraction import extract  # noqa: F401
+from .index import (  # noqa: F401
+    TRACK_INDEX_VERSION,
+    TrackIndex,
+    TrackIndexBuilder,
+    parse_track_index,
+)
+from .model import CP_CODE, CP_TYPES, Track, TrajectorySet  # noqa: F401
+from .query import (  # noqa: F401
+    TrackDecode,
+    decode_for_track,
+    load_track_index,
+    query_tracks,
+    track_read_plan,
+    track_summaries,
+)

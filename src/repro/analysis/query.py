@@ -1,0 +1,218 @@
+"""Feature-directed queries against a CPTT1 container's track index.
+
+``query_tracks`` filters the sidecar track summaries (no unit decode at
+all -- only the footer is parsed); ``track_read_plan`` turns one track
+into the exact set of directory entries its reconstruction needs; and
+``decode_for_track`` byte-slices and decodes ONLY those covering units,
+re-deriving the track's polyline from the decoded values.
+
+All entry points accept either raw container bytes or a filesystem
+path.  Path sources are accessed with seek-based RANGE READS (footer +
+covering unit frames only), so the "touches only the covering units"
+property holds for the actual file I/O, not just the decode work.
+
+Why the partial decode is exact: the sidecar stores the track's
+*topology* (global face ids of its crossing nodes, segment edges, tet
+anchor cells) but not its geometry.  Geometry is recomputed at query
+time from the decoded field, gathering only grid points inside the
+covering units (index.py's inflation argument guarantees every gather
+-- barycentric node solve and classification Jacobian cell -- lands
+there).  Units decode bit-identically whether decoded alone or as part
+of the full field, so the polyline equals what full-decode extraction
+would produce, node for node, bit for bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+from ..core import backend as backend_mod
+from ..core import encode, fixedpoint
+from . import classify as classify_mod
+from . import extraction, model
+from .index import TrackIndex, parse_track_index
+
+
+class _Source:
+    """(offset, length) range reads over bytes or a file path."""
+
+    def __init__(self, src):
+        if isinstance(src, (bytes, bytearray, memoryview)):
+            self._blob = bytes(src)
+            self._path = None
+            self.size = len(self._blob)
+        else:
+            self._blob = None
+            self._path = os.fspath(src)
+            self.size = os.path.getsize(self._path)
+
+    def read(self, off: int, ln: int) -> bytes:
+        if self._blob is not None:
+            return self._blob[off : off + ln]
+        with open(self._path, "rb") as f:
+            f.seek(off)
+            return f.read(ln)
+
+    def header(self) -> dict:
+        return encode.tiled_header_ranged(self.read, self.size)
+
+    def unit(self, entry: dict):
+        return encode.read_tiled_unit_ranged(self.read, entry)
+
+
+def load_track_index(src):
+    """(source, footer header, TrackIndex) of a tiled container.
+
+    ``src`` is raw bytes or a path; only the footer is read here.
+    """
+    source = _Source(src)
+    hdr = source.header()
+    return source, hdr, parse_track_index(hdr)
+
+
+def _summary(idx: TrackIndex, k: int) -> dict:
+    hist = idx.track_type_hist[k]
+    return {
+        "track_id": int(k),
+        "t_min": float(idx.track_t_min[k]),
+        "t_max": float(idx.track_t_max[k]),
+        "bbox": [float(x) for x in idx.track_bbox[k]],  # y0, y1, x0, x1
+        "n_nodes": int(idx.track_n_nodes[k]),
+        "n_segments": int(idx.track_seg_counts[k]),
+        "type_hist": {name: int(hist[i])
+                      for i, name in enumerate(model.CP_TYPES) if hist[i]},
+        "dominant_type": model.CP_TYPES[int(np.argmax(hist))],
+        "n_cover_units": int(idx.track_cover_ptr[k + 1]
+                             - idx.track_cover_ptr[k]),
+    }
+
+
+def track_summaries(src) -> list:
+    """All track summaries of a container (footer parse only)."""
+    _, _, idx = load_track_index(src)
+    return [_summary(idx, k) for k in range(idx.n_tracks)]
+
+
+def query_tracks(src, bbox=None, trange=None, cp_type=None) -> list:
+    """Tracks matching the given feature filters (footer parse only).
+
+    bbox:   (y_min, y_max, x_min, x_max) grid coordinates; a track
+            matches when its node bounding box overlaps.
+    trange: (t_min, t_max); overlap test on the track lifetime.
+    cp_type: a model.CP_TYPES name; matches tracks containing at least
+            one node of that type.
+
+    Summaries reflect the pre-compression field; the verify loop makes
+    its crossed-face topology identical to the decoded field's, and
+    node positions move by O(eb) only, so the filters are exact in
+    topology and eb-accurate in geometry.
+    """
+    _, _, idx = load_track_index(src)
+    sel = np.ones(idx.n_tracks, dtype=bool)
+    if trange is not None:
+        t0, t1 = float(trange[0]), float(trange[1])
+        sel &= (idx.track_t_max >= t0) & (idx.track_t_min <= t1)
+    if bbox is not None:
+        y0, y1, x0, x1 = (float(b) for b in bbox)
+        sel &= (idx.track_bbox[:, 1] >= y0) & (idx.track_bbox[:, 0] <= y1)
+        sel &= (idx.track_bbox[:, 3] >= x0) & (idx.track_bbox[:, 2] <= x1)
+    if cp_type is not None:
+        if cp_type not in model.CP_CODE:
+            raise ValueError(
+                f"unknown cp_type {cp_type!r}; expected one of "
+                f"{model.CP_TYPES}")
+        sel &= idx.track_type_hist[:, model.CP_CODE[cp_type]] > 0
+    return [_summary(idx, int(k)) for k in np.nonzero(sel)[0]]
+
+
+def _cover_entries(hdr: dict, idx: TrackIndex, track_id: int) -> list:
+    """Directory entries of the units covering one track."""
+    wi, ti, tj = idx.decode_keys(idx.cover_units(track_id))
+    keys = {(int(a), int(b), int(c)) for a, b, c in zip(wi, ti, tj)}
+    return [e for e in hdr["units"] if tuple(e["key"]) in keys]
+
+
+def track_read_plan(src, track_id: int) -> list:
+    """Directory entries a ``decode_for_track`` would read -- and
+    nothing else (byte offsets + lengths for remote range reads)."""
+    _, hdr, idx = load_track_index(src)
+    return _cover_entries(hdr, idx, track_id)
+
+
+class _PatchField:
+    """Fancy-indexing facade over a set of decoded unit boxes."""
+
+    def __init__(self, shape, patches):
+        self.shape = shape
+        self.patches = patches            # [(box, int64 array)]
+
+    def __getitem__(self, idx):
+        t, i, j = (np.asarray(x) for x in idx)
+        t, i, j = np.broadcast_arrays(t, i, j)
+        out = np.zeros(t.shape, dtype=np.int64)
+        found = np.zeros(t.shape, dtype=bool)
+        for (t0, t1, i0, i1, j0, j1), arr in self.patches:
+            m = ((t >= t0) & (t < t1) & (i >= i0) & (i < i1)
+                 & (j >= j0) & (j < j1) & ~found)
+            if m.any():
+                out[m] = arr[t[m] - t0, i[m] - i0, j[m] - j0]
+                found |= m
+        assert found.all(), \
+            "gather outside covering units -- index inflation bug"
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class TrackDecode:
+    """decode_for_track result: the exact polyline + read accounting."""
+
+    track: model.Track
+    units_read: int
+    units_total: int
+    bytes_read: int
+    entries: list
+
+
+def decode_for_track(src, track_id: int, backend=None) -> TrackDecode:
+    """Decode ONLY the units covering ``track_id`` and rebuild its
+    polyline exactly (bit-identical to full-decode extraction)."""
+    from ..core import tiling as tiling_mod
+
+    source, hdr, idx = load_track_index(src)
+    idx._check(track_id)
+    T, H, W = hdr["shape"]
+    entries = _cover_entries(hdr, idx, track_id)
+    be = backend_mod.resolve(backend or hdr.get("sl_backend"))
+    stepper = backend_mod.sl_stepper(
+        be, hdr["cfl_x"], hdr["cfl_y"], hdr["d_max"], hdr["n_max"])
+    patches_u, patches_v = [], []
+    for entry in entries:
+        uh, secs = source.unit(entry)
+        u_rec, v_rec = tiling_mod._decode_unit(uh, secs, hdr, stepper)
+        ufp, vfp = fixedpoint.refix(u_rec, v_rec, hdr["scale"])
+        box = tuple(uh["box"])
+        patches_u.append((box, ufp))
+        patches_v.append((box, vfp))
+    up = _PatchField((T, H, W), patches_u)
+    vp = _PatchField((T, H, W), patches_v)
+
+    seg_fid, _ = idx.track_segments(track_id)
+    node_fid = np.unique(seg_fid)
+    local_edges = np.searchsorted(node_fid, seg_fid).astype(np.int64)
+    pos = extraction.node_positions(node_fid, up, vp, (T, H, W))
+    types = classify_mod.classify_nodes(up, vp, pos,
+                                        spiral_tol=idx.spiral_tol)
+    # single-component assembly through the same code path as full
+    # extraction, so ordering / loop detection can never diverge
+    (track,) = model.build_tracks(
+        pos, node_fid, types,
+        np.zeros(len(node_fid), dtype=np.int32), local_edges)
+    return TrackDecode(
+        track=dataclasses.replace(track, track_id=track_id),
+        units_read=len(entries),
+        units_total=len(hdr["units"]),
+        bytes_read=int(sum(e["len"] for e in entries)),
+        entries=entries,
+    )

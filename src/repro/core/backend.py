@@ -234,6 +234,94 @@ def sl_predictions(xu, xv, g2f, stepper):
 
 
 # ----------------------------------------------------------------------
+# op: batched connected-component labeling (trajectory stitching)
+# ----------------------------------------------------------------------
+
+_CCL_MAX_ROUNDS = 64
+
+
+# module-level jits: defining these inside connected_labels would give
+# every call fresh function objects and re-compile both executables
+@jax.jit
+def _ccl_hook_jnp(p, a, b):
+    pa, pb = p[a], p[b]
+    lo = jnp.minimum(pa, pb)
+    hi = jnp.maximum(pa, pb)
+    return p.at[hi].min(lo)
+
+
+@jax.jit
+def _ccl_jump_jnp(p):
+    return p[p]
+
+
+def _ccl_rounds(parent, ea, eb, hook, compress, all_equal):
+    """Shared hook + pointer-jump driver (generic over array backend).
+
+    Each round min-hooks every edge's endpoint labels and then pointer-
+    jumps ``parent`` to its own fixpoint (full path compression), so
+    label information spreads at a doubling rate along tracks.  The loop
+    stops when a hook round changes nothing.  Labels only ever decrease
+    and only toward ids inside the same component, so the fixpoint is
+    exactly label[i] = min(component(i)) -- deterministic, identical
+    across backends, and independent of edge order.
+    """
+    for _ in range(_CCL_MAX_ROUNDS):
+        nxt = hook(parent, ea, eb)
+        while True:
+            jumped = compress(nxt)
+            if all_equal(jumped, nxt):
+                break
+            nxt = jumped
+        if all_equal(nxt, parent):
+            return parent
+        parent = nxt
+    raise RuntimeError("connected_labels did not converge "
+                       f"in {_CCL_MAX_ROUNDS} rounds")
+
+
+def connected_labels(n: int, edges, backend="xla"):
+    """Connected components of an undirected graph on nodes [0, n).
+
+    edges: (E, 2) integer array.  Returns int64 labels with
+    label[i] = min node id of i's component -- the device-resident
+    replacement for the host union-find over trajectory crossing nodes
+    (iterated min-hook + pointer jumping).  The integer op is exact, so
+    all three backends return identical labels; ``pallas`` routes to the
+    xla implementation (the op is pure gather/scatter, which XLA already
+    emits as memory-bound kernels -- there is no compute to fuse).
+    """
+    edges = np.asarray(edges) if backend == "numpy" else jnp.asarray(edges)
+    if n == 0:
+        return np.empty(0, np.int64) if backend == "numpy" \
+            else jnp.empty(0, jnp.int64)
+    if edges.size == 0:
+        return np.arange(n, dtype=np.int64) if backend == "numpy" \
+            else jnp.arange(n, dtype=jnp.int64)
+
+    if backend == "numpy":
+        ea = np.asarray(edges[:, 0], np.int64)
+        eb = np.asarray(edges[:, 1], np.int64)
+
+        def hook(p, a, b):
+            p = p.copy()
+            pa, pb = p[a], p[b]
+            lo = np.minimum(pa, pb)
+            hi = np.maximum(pa, pb)
+            np.minimum.at(p, hi, lo)
+            return p
+
+        return _ccl_rounds(np.arange(n, dtype=np.int64), ea, eb, hook,
+                           lambda p: p[p], np.array_equal)
+
+    ea = jnp.asarray(edges[:, 0], jnp.int64)
+    eb = jnp.asarray(edges[:, 1], jnp.int64)
+    return _ccl_rounds(
+        jnp.arange(n, dtype=jnp.int64), ea, eb, _ccl_hook_jnp,
+        _ccl_jump_jnp, lambda a, b: bool(jnp.array_equal(a, b)))
+
+
+# ----------------------------------------------------------------------
 # op 3: SoS face-crossing predicate
 # ----------------------------------------------------------------------
 

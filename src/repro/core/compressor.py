@@ -84,6 +84,8 @@ class CompressionConfig:
     backend: Optional[str] = None     # 'pallas' | 'xla' | 'numpy' | None=auto
     fused: Optional[bool] = None      # None -> perfflags.fused_default()
     tiling: Optional[object] = None   # tiling.TileGrid -> tiled pipeline
+    track_index: bool = True          # tiled: write the CPTT1 sidecar
+                                      # track index (repro.analysis)
 
 
 def _as_fields(u, v):

@@ -337,6 +337,31 @@ def unpack(blob: bytes):
 # other unit is touched.  The footer header carries the global stream
 # parameters plus a ``units`` directory: one entry per unit with its
 # grid key, owned space-time box, byte offset and length.
+#
+# Forward compatibility: the footer header is a msgpack map and readers
+# only look up the keys they know, so OPTIONAL sections ride along as
+# extra keys that old readers skip without parsing.  The trajectory
+# sidecar index (repro/analysis/index.py) is stored this way under
+# TRACK_INDEX_KEY, with its own internal version number -- adding or
+# evolving it never bumps the container version and never disturbs unit
+# byte offsets (tests/test_container_golden.py pins both properties).
+
+TRACK_INDEX_KEY = "track_index"
+
+
+def pack_ndarray(arr) -> dict:
+    """msgpack-able {dtype, shape, data} triple for a numpy array."""
+    arr = np.ascontiguousarray(arr)
+    return {
+        "dtype": str(arr.dtype),
+        "shape": [int(s) for s in arr.shape],
+        "data": arr.tobytes(),
+    }
+
+
+def unpack_ndarray(d: dict) -> np.ndarray:
+    arr = np.frombuffer(d["data"], dtype=np.dtype(d["dtype"]))
+    return arr.reshape(d["shape"])
 
 
 def is_tiled(blob: bytes) -> bool:
@@ -396,20 +421,38 @@ class TiledWriter:
         return self._pos
 
 
+def tiled_header_ranged(read, size: int) -> dict:
+    """Directory footer via an (offset, length) range reader.
+
+    ``read(off, ln) -> bytes`` over a container of ``size`` bytes --
+    the primitive for file/remote sources where loading the whole blob
+    would defeat read planning (three small reads: magic, length word,
+    footer)."""
+    m = len(MAGIC_TILED)
+    assert read(0, m) == MAGIC_TILED, "not a CPTT tiled container"
+    tail = read(size - m - 4, m + 4)
+    assert tail[-m:] == MAGIC_TILED, "truncated tiled container (no footer)"
+    (hlen,) = struct.unpack("<I", tail[:4])
+    raw = read(size - m - 4 - hlen, hlen)
+    return msgpack.unpackb(zlib.decompress(raw), raw=False)
+
+
 def tiled_header(blob: bytes) -> dict:
     """Directory footer of a tiled container (header dict incl. units)."""
-    m = len(MAGIC_TILED)
-    assert is_tiled(blob), "not a CPTT tiled container"
-    assert blob[-m:] == MAGIC_TILED, "truncated tiled container (no footer)"
-    (hlen,) = struct.unpack("<I", blob[-m - 4 : -m])
-    raw = blob[-m - 4 - hlen : -m - 4]
-    return msgpack.unpackb(zlib.decompress(raw), raw=False)
+    return tiled_header_ranged(lambda off, ln: blob[off : off + ln],
+                               len(blob))
+
+
+def read_tiled_unit_ranged(read, entry: dict):
+    """Decode ONE unit frame via an (offset, length) range reader."""
+    frame = read(entry["off"], entry["len"])
+    assert len(frame) == entry["len"], "unit frame out of range"
+    return unpack(frame)
 
 
 def read_tiled_unit(blob: bytes, entry: dict):
     """Decode ONE unit frame by directory entry -- touches only its bytes."""
-    frame = blob[entry["off"] : entry["off"] + entry["len"]]
-    assert len(frame) == entry["len"], "unit frame out of range"
-    return unpack(frame)
+    return read_tiled_unit_ranged(lambda off, ln: blob[off : off + ln],
+                                  entry)
 
 

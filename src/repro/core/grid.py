@@ -138,6 +138,129 @@ def slab_tets(H: int, W: int) -> np.ndarray:
 TET_FACES = np.array([[0, 1, 2], [0, 1, 3], [0, 2, 3], [1, 2, 3]], dtype=np.int32)
 
 
+# ----------------------------------------------------------------------
+# global face enumeration + tet-face index (trajectory analytics)
+# ----------------------------------------------------------------------
+#
+# Every face of the (T, H, W) space-time mesh gets one dense int64 id,
+# interleaved per time step so the id NEVER depends on T (streaming
+# writers assign ids before the stream length is known):
+#
+#     slice faces   t * (Fs + Fb) + f          t in [0, T)
+#     slab  faces   t * (Fs + Fb) + Fs + f     t in [0, T-1)
+#
+# with Fs = len(slice0) (f indexing slab_faces(H, W)["slice0"]) and
+# Fb = len(side) + len(internal) (f indexing concat(side, internal),
+# the ebound.slab_face_table order).  The id is what the analytics
+# subsystem (repro/analysis) keys crossing nodes on: it is globally
+# canonical (one id per geometric face, shared by both incident tets
+# and both adjacent tiles), so segment lists recorded per (tile,
+# window) unit glue into exact global tracks by id equality.  Ids are
+# also monotone in time, which makes min-fid track ordering a
+# birth-time ordering.
+
+
+def face_family_sizes(H: int, W: int):
+    """(Fs, Fb): per-slab slice-face and slab-face counts."""
+    f = slab_faces(H, W)
+    return len(f["slice0"]), len(f["side"]) + len(f["internal"])
+
+
+def n_faces(shape) -> int:
+    """Total number of distinct faces of the (T, H, W) mesh."""
+    T, H, W = shape
+    Fs, Fb = face_family_sizes(H, W)
+    return T * Fs + (T - 1) * Fb
+
+
+def _row_lookup(table: np.ndarray, queries: np.ndarray) -> np.ndarray:
+    """Index of each query row in ``table`` (every query must be a row)."""
+    uniq, inv = np.unique(
+        np.concatenate([table, queries], axis=0), axis=0, return_inverse=True
+    )
+    pos = np.full(len(uniq), -1, dtype=np.int64)
+    pos[inv[: len(table)]] = np.arange(len(table))
+    out = pos[inv[len(table):]]
+    assert (out >= 0).all(), "query face not present in face table"
+    return out
+
+
+@lru_cache(maxsize=32)
+def tet_face_map(H: int, W: int):
+    """Per tet-face (family, index) into the per-slab face enumeration.
+
+    Returns (family (Ntet, 4) int8, index (Ntet, 4) int32) where family
+    0 = bottom slice (slab time t), 1 = top slice (t + 1, indexed in the
+    slice0 table), 2 = slab face (indexed in concat(side, internal) --
+    the ebound.slab_face_table order).  With these tables the crossing
+    state of every tet face is a pure gather from the face-predicate
+    tables: no SoS re-evaluation per tet.
+    """
+    HW = H * W
+    tets = slab_tets(H, W).astype(np.int64)
+    tf = tets[:, TET_FACES]                    # (Ntet, 4, 3) local ids
+    sf = slab_faces(H, W)
+    slice_tab = sf["slice0"].astype(np.int64)
+    slab_tab = np.concatenate([sf["side"], sf["internal"]], 0).astype(np.int64)
+
+    plane1 = tf >= HW
+    all0 = ~plane1.any(axis=2)
+    all1 = plane1.all(axis=2)
+    family = np.full(tf.shape[:2], 2, dtype=np.int8)
+    family[all0] = 0
+    family[all1] = 1
+
+    index = np.empty(tf.shape[:2], dtype=np.int32)
+    flat = tf.reshape(-1, 3)
+    fam_flat = family.reshape(-1)
+    for fam, tab, off in ((0, slice_tab, 0), (1, slice_tab, HW),
+                          (2, slab_tab, 0)):
+        sel = fam_flat == fam
+        if sel.any():
+            index.reshape(-1)[sel] = _row_lookup(tab, flat[sel] - off)
+    return family, index
+
+
+def tet_face_fids(family, index, t_slab, H, W):
+    """Global face ids for tet faces of slab(s) ``t_slab``.
+
+    family/index as returned by tet_face_map (any matching shapes),
+    t_slab broadcastable int array of slab times.  Returns int64 ids
+    (independent of T -- see the enumeration comment above).
+    """
+    Fs, Fb = face_family_sizes(H, W)
+    F = Fs + Fb
+    family = np.asarray(family)
+    index = np.asarray(index, dtype=np.int64)
+    t = np.asarray(t_slab, dtype=np.int64)
+    slice_t = t + (family == 1)
+    return np.where(
+        family == 2,
+        t * F + Fs + index,
+        slice_t * F + index,
+    )
+
+
+def face_vertices(fids, H, W) -> np.ndarray:
+    """Global space-time vertex ids (N, 3) of faces given by global id."""
+    HW = H * W
+    Fs, Fb = face_family_sizes(H, W)
+    F = Fs + Fb
+    sf = slab_faces(H, W)
+    slice_tab = sf["slice0"].astype(np.int64)
+    slab_tab = np.concatenate([sf["side"], sf["internal"]], 0).astype(np.int64)
+    fids = np.asarray(fids, dtype=np.int64)
+    t = fids // F
+    r = fids % F
+    is_slab = r >= Fs
+    out = np.empty((len(fids), 3), dtype=np.int64)
+    if (~is_slab).any():
+        out[~is_slab] = slice_tab[r[~is_slab]] + t[~is_slab, None] * HW
+    if is_slab.any():
+        out[is_slab] = slab_tab[r[is_slab] - Fs] + t[is_slab, None] * HW
+    return out
+
+
 def box_vertex_ids(shape, box) -> np.ndarray:
     """Global flat vertex ids of a space-time sub-box.
 

@@ -28,7 +28,12 @@ def psnr(u, v, u_rec, v_rec) -> float:
 
 def evaluate(u, v, u_rec, v_rec, scale, orig_bytes, comp_bytes,
              with_tracks: bool = True) -> dict:
-    """Full metric suite: CR, PSNR, FC_t, FC_s, #Traj (orig vs rec)."""
+    """Full metric suite: CR, PSNR, FC_t, FC_s, #Traj (orig vs rec).
+
+    The fields are refixed ONCE and the face-predicate tables are built
+    ONCE per field, then threaded through both the false-case diff and
+    the track extraction (the seed rebuilt both twice).
+    """
     from . import fixedpoint
 
     out = {
@@ -41,10 +46,14 @@ def evaluate(u, v, u_rec, v_rec, scale, orig_bytes, comp_bytes,
             )
         ),
     }
-    out.update(trajectory.false_cases(u, v, u_rec, v_rec, scale))
+    uo, vo = fixedpoint.refix(u, v, scale)
+    ur, vr = fixedpoint.refix(u_rec, v_rec, scale)
+    p0 = trajectory.face_predicate_tables(uo, vo)
+    p1 = trajectory.face_predicate_tables(ur, vr)
+    out.update(trajectory.false_cases_from_tables(p0, p1))
     if with_tracks:
-        uo, vo = fixedpoint.refix(u, v, scale)
-        ur, vr = fixedpoint.refix(u_rec, v_rec, scale)
-        out["n_traj_orig"] = trajectory.extract_tracks(uo, vo)["n_tracks"]
-        out["n_traj_rec"] = trajectory.extract_tracks(ur, vr)["n_tracks"]
+        out["n_traj_orig"] = trajectory.extract_tracks(
+            uo, vo, tables=p0)["n_tracks"]
+        out["n_traj_rec"] = trajectory.extract_tracks(
+            ur, vr, tables=p1)["n_tracks"]
     return out

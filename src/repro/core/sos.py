@@ -111,6 +111,33 @@ def face_crossed_vals(xp, uvals, vvals, idx):
     )
 
 
+def _sign_det_sos_lt(xp, au, av, bu, bv, lt):
+    """sign_det_sos with the id comparison index(A) < index(B) given as
+    a precomputed bool instead of two index operands."""
+    d = au * bv - av * bu
+    s = _sign(xp, d)
+    tie = xp.where(lt,
+                   _tiebreak(xp, au, av, bu, bv),
+                   -_tiebreak(xp, bu, bv, au, av))
+    return xp.where(s != 0, s, tie)
+
+
+def face_crossed_ordered(xp, au, av, bu, bv, cu, cv, lt_ab, lt_bc, lt_ca):
+    """face_crossed with the SoS id-order comparisons precomputed.
+
+    lt_ab = index(a) < index(b) etc.  Bit-identical to face_crossed --
+    the ids enter the predicate ONLY through these three comparisons.
+    Used by jitted batch paths that would otherwise close over large
+    int64 id constants: XLA constant-folds slices/compares of embedded
+    constants at compile time, which took >30 s per tile geometry on
+    production-size tiles; host-precomputed bools leave nothing to fold.
+    """
+    s1 = _sign_det_sos_lt(xp, au, av, bu, bv, lt_ab)
+    s2 = _sign_det_sos_lt(xp, bu, bv, cu, cv, lt_bc)
+    s3 = _sign_det_sos_lt(xp, cu, cv, au, av, lt_ca)
+    return (s1 == s2) & (s2 == s3)
+
+
 def barycentric_crossing(uvals, vvals):
     """Barycentric coordinates of the origin in conv{a,b,c} (paper Eq. 2).
 

@@ -66,7 +66,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import backend as backend_mod
-from . import compressor, ebound, encode, fixedpoint, quantize
+from . import compressor, ebound, encode, fixedpoint, quantize, sos
+from . import grid as mesh
 
 TILED_FORMAT_VERSION = 3
 _EB_BIG = np.int64(2**62)
@@ -238,6 +239,8 @@ class _State:
     preds: dict = dataclasses.field(default_factory=dict)
     seen: dict = dataclasses.field(default_factory=dict)
     writer: object = None
+    tindex: object = None           # analysis.index.TrackIndexBuilder | None
+    n_frames: int = 0
     bad_counts: list = dataclasses.field(default_factory=list)
     rounds: int = 0
     n_ll: int = 0
@@ -273,7 +276,13 @@ def _init_state(cfg, grid: TileGrid, H, W, vrange, sink):
     cfl_y = cfg.dt / cfg.dy
     stepper = backend_mod.sl_stepper(be, cfl_x, cfl_y, cfg.d_max, cfg.n_max)
     all_ll = tau < 1 or n_usable < 1
+    tindex = None
+    if getattr(cfg, "track_index", True):
+        from ..analysis.index import TrackIndexBuilder
+
+        tindex = TrackIndexBuilder(grid, be)
     return _State(
+        tindex=tindex,
         cfg=cfg, grid=grid, be=be, H=H, W=W,
         scale=scale, eb_abs=eb_abs, tau=tau, xi_unit=xi_unit,
         n_usable=n_usable, g2f=(2.0 * xi_unit) / scale, stepper=stepper,
@@ -291,6 +300,7 @@ def _add_frame(st: _State, t, u_t, v_t):
     u_t = np.asarray(u_t, np.float32)
     v_t = np.asarray(v_t, np.float32)
     assert u_t.shape == (st.H, st.W) and v_t.shape == (st.H, st.W)
+    st.n_frames = max(st.n_frames, t + 1)
     st.u.put(t, u_t)
     st.v.put(t, v_t)
     st.ufp.put(t, np.round(u_t.astype(np.float64) * st.scale))
@@ -513,6 +523,202 @@ def _fixpoint(st: _State, windows, frontier: int = 0):
 
 
 # ----------------------------------------------------------------------
+# per-unit trajectory-segment extraction (sidecar track index)
+# ----------------------------------------------------------------------
+#
+# Every unit owns the tets anchored in its owned box (slabs
+# [t0, min(t1, T-1)), cells [i0, min(i1, H-1)) x [j0, min(j1, W-1)) --
+# a partition of all tets).  The crossed-state of those tets' faces is
+# evaluated on the halo extension with tile-local vertex ids
+# (order-isomorphic to global ids => bit-identical SoS predicates),
+# batched per extension-geometry group and shard_mapped over the
+# ("tiles",) mesh like the eb derivation.  The sparse host pass then
+# converts crossings to GLOBAL face ids / anchor cells and records the
+# unit's segments + crossing nodes into the TrackIndexBuilder; global
+# stitching happens once at finish time (analysis/index.py).
+
+
+class _PlanesView:
+    """(T, H, W) fancy-indexing facade over _Planes frame storage.
+
+    Lets analysis.node_positions / classify gather from the sliding
+    per-frame planes without materializing the full field (streaming
+    holds only ~2 windows of frames).
+    """
+
+    def __init__(self, planes: _Planes, T: int):
+        self.planes = planes
+        self.shape = (T, planes.H, planes.W)
+
+    def __getitem__(self, idx):
+        t, i, j = (np.asarray(x) for x in idx)
+        t, i, j = np.broadcast_arrays(t, i, j)
+        out = np.empty(t.shape, dtype=self.planes.dtype)
+        for tt in np.unique(t):
+            m = t == tt
+            assert int(tt) in self.planes.p, \
+                f"frame {int(tt)} not resident (dropped or not yet seen)"
+            out[m] = self.planes.p[int(tt)][i[m], j[m]]
+        return out
+
+
+@functools.lru_cache(maxsize=64)
+def _local_tet_faces(key):
+    """Static (n_slabs * Ntl, 4, 3) tet-face vertex ids, local to the
+    extension box, for the tets a unit owns.  Mirrors the grid.py
+    enumeration order (tau1|tau2|tau3 over tri1|tri2 over row-major
+    cells) so local tet index -> global tet index is pure arithmetic.
+    """
+    Te, he, we, dt0, di0, dj0, nsl, nci, ncj = key
+    if nsl <= 0 or nci <= 0 or ncj <= 0:
+        return None
+    P = he * we
+    ii, jj = np.meshgrid(np.arange(nci), np.arange(ncj), indexing="ij")
+
+    def sid(i, j):
+        return ((di0 + i) * we + (dj0 + j)).ravel().astype(np.int64)
+
+    v00 = sid(ii, jj)
+    v10 = sid(ii, jj + 1)
+    v01 = sid(ii + 1, jj)
+    v11 = sid(ii + 1, jj + 1)
+    tri1 = np.stack([v00, v01, v11], 1)
+    tri2 = np.stack([v00, v10, v11], 1)
+    tris = np.concatenate([tri1, tri2], 0)
+    a, b, c = tris[:, 0], tris[:, 1], tris[:, 2]
+    tau1 = np.stack([a, b, c, c + P], 1)
+    tau2 = np.stack([a, b, b + P, c + P], 1)
+    tau3 = np.stack([a, a + P, b + P, c + P], 1)
+    tets = np.concatenate([tau1, tau2, tau3], 0)
+    faces = tets[:, mesh.TET_FACES]               # (Ntl, 4, 3)
+    out = faces[None] + ((dt0 + np.arange(nsl, dtype=np.int64)) * P
+                         )[:, None, None, None]
+    return np.ascontiguousarray(out.reshape(-1, 4, 3))
+
+
+@functools.lru_cache(maxsize=64)
+def _batch_seg_fn(key, be: str):
+    """Batched crossed-face evaluator for one extension geometry.
+
+    Local ids are order-isomorphic to global ids, so the SoS predicate
+    is bit-identical to the global evaluation (the integer op contract:
+    all backends agree, so jnp is used on-device and numpy on host).
+    The per-vertex gather indices and SoS id-order bools are pre-split
+    on the host (sos.face_crossed_ordered): embedding the combined
+    (N, 4, 3) int64 id table as a jit constant made XLA constant-fold
+    its slices and compares for >30 s per geometry at 128x128 tiles.
+    """
+    fidx_np = _local_tet_faces(key)
+    if fidx_np is None:
+        return None
+    if be == "numpy":
+        def run_np(us, vs):
+            return np.stack([
+                sos.face_crossed_vals(
+                    np, np.asarray(u).reshape(-1)[fidx_np],
+                    np.asarray(v).reshape(-1)[fidx_np], fidx_np)
+                for u, v in zip(us, vs)])
+        return run_np
+
+    from ..parallel import sharding
+
+    f0 = jnp.asarray(fidx_np[..., 0])
+    f1 = jnp.asarray(fidx_np[..., 1])
+    f2 = jnp.asarray(fidx_np[..., 2])
+    lt_ab = jnp.asarray(fidx_np[..., 0] < fidx_np[..., 1])
+    lt_bc = jnp.asarray(fidx_np[..., 1] < fidx_np[..., 2])
+    lt_ca = jnp.asarray(fidx_np[..., 2] < fidx_np[..., 0])
+
+    def one(uu, vv):
+        uf = uu.reshape(-1)
+        vf = vv.reshape(-1)
+        return sos.face_crossed_ordered(
+            jnp, uf[f0], vf[f0], uf[f1], vf[f1], uf[f2], vf[f2],
+            lt_ab, lt_bc, lt_ca)
+
+    return jax.jit(lambda us, vs: sharding.map_tiles_padded(one, us, vs))
+
+
+def _unit_segment_records(st: _State, spec: TileSpec, crossed, key):
+    """Host conversion: local crossings -> global segments + nodes."""
+    from ..analysis import classify as classify_mod
+    from ..analysis import extraction
+
+    (_, _, _, _, _, _, nsl, nci, ncj) = key
+    H, W = st.H, st.W
+    ncc = nci * ncj
+    Ntl = 6 * ncc
+    crossed = np.asarray(crossed).reshape(nsl * Ntl, 4)
+    from . import trajectory
+    trajectory.check_lemma1(crossed.reshape(nsl, Ntl, 4), t_lo=spec.t0)
+
+    j = np.nonzero(crossed.sum(axis=1) == 2)[0]
+    if len(j) == 0:
+        e = np.empty
+        return (e((0, 2), np.int64), e((0, 3), np.int32), e(0, np.int64),
+                e((0, 3), np.float64), e(0, np.int8))
+    rows = crossed[j]
+    _, slots = np.nonzero(rows)
+    slots = slots.reshape(-1, 2)
+    rt = j // Ntl
+    r = j % Ntl
+    k = r // (2 * ncc)
+    rq = r % (2 * ncc)
+    q = rq // ncc
+    cc = rq % ncc
+    gi = spec.i0 + cc // ncj
+    gj = spec.j0 + cc % ncj
+    ts = spec.t0 + rt
+    Nc = (H - 1) * (W - 1)
+    gtet = (k * 2 + q) * Nc + gi * (W - 1) + gj
+    family, index = mesh.tet_face_map(H, W)
+    seg_fid = mesh.tet_face_fids(
+        family[gtet[:, None], slots], index[gtet[:, None], slots],
+        ts[:, None], H, W)
+    seg_cell = np.stack([ts, gi, gj], axis=1).astype(np.int32)
+
+    node_fid = np.unique(seg_fid)
+    uview = _PlanesView(st.ufp, st.n_frames)
+    vview = _PlanesView(st.vfp, st.n_frames)
+    node_pos = extraction.node_positions(
+        node_fid, uview, vview, uview.shape)
+    node_type = classify_mod.classify_nodes(
+        uview, vview, node_pos, spiral_tol=st.tindex.spiral_tol)
+    return seg_fid, seg_cell, node_fid, node_pos, node_type
+
+
+def _window_segment_records(st: _State, w) -> dict:
+    """Batched per-tile segment extraction for one window's units."""
+    T = st.n_frames
+    groups = {}
+    for spec in w.specs:
+        key = (spec.ext_shape + (
+            spec.t0 - spec.et0, spec.i0 - spec.ei0, spec.j0 - spec.ej0,
+            min(spec.t1, T - 1) - spec.t0,
+            min(spec.i1, st.H - 1) - spec.i0,
+            min(spec.j1, st.W - 1) - spec.j0))
+        groups.setdefault(key, []).append(spec)
+    records = {}
+    for key, specs in groups.items():
+        run = _batch_seg_fn(key, st.be)
+        if run is None:
+            e = np.empty
+            for spec in specs:
+                records[spec.key] = (
+                    e((0, 2), np.int64), e((0, 3), np.int32),
+                    e(0, np.int64), e((0, 3), np.float64), e(0, np.int8))
+            continue
+        us = np.stack([st.ufp.box(s.ext_box) for s in specs])
+        vs = np.stack([st.vfp.box(s.ext_box) for s in specs])
+        crossed = np.asarray(run(jnp.asarray(us), jnp.asarray(vs))
+                             if st.be != "numpy" else run(us, vs))
+        for b, spec in enumerate(specs):
+            records[spec.key] = _unit_segment_records(
+                st, spec, crossed[b], key)
+    return records
+
+
+# ----------------------------------------------------------------------
 # unit emission
 # ----------------------------------------------------------------------
 
@@ -521,6 +727,8 @@ def _emit_window(st: _State, w):
     # round's streams: a cache would hold every pending tile's residual
     # field (2x the raw f32 footprint) alive until emission, defeating
     # the bounded-memory point of tiling for one redundant encode pass
+    seg_records = _window_segment_records(st, w) \
+        if st.tindex is not None else None
     for spec in w.specs:
         (_, _, _, _, xu_e, xv_e, ll_e, res_u, res_v, bm) = \
             _quant_and_streams(st, spec)
@@ -542,6 +750,8 @@ def _emit_window(st: _State, w):
             "bm_shape": np.asarray(bm.shape, dtype=np.int32),
         }
         st.writer.add_unit(spec.key, spec.owned_box, header, sections)
+        if seg_records is not None:
+            st.tindex.add_unit(spec.key, *seg_records[spec.key])
         st.n_units += 1
         st.n_ll += int(ll_o.sum())
         st.n_verts += ll_o.size
@@ -551,6 +761,20 @@ def _emit_window(st: _State, w):
         st.preds.pop(spec.key, None)
         st.seen.pop(spec.key, None)
     w.emitted = True
+
+
+def _finish_header(st: _State, T: int):
+    """Container header + the optional track-index footer section.
+
+    The index rides as an EXTRA msgpack key (encode.TRACK_INDEX_KEY):
+    readers that do not know it skip it without parsing, so the
+    container version stays unchanged.
+    """
+    header = _container_header(st, T)
+    if st.tindex is not None:
+        header[encode.TRACK_INDEX_KEY] = st.tindex.finalize(
+            (T, st.H, st.W))
+    return header
 
 
 def _container_header(st: _State, T: int):
@@ -651,7 +875,7 @@ def compress_tiled(u, v, cfg=None, grid: Optional[TileGrid] = None,
         _fixpoint(st, windows, frontier=0)
     for w in windows:
         _emit_window(st, w)
-    blob = st.writer.finish(_container_header(st, T))
+    blob = st.writer.finish(_finish_header(st, T))
     return blob, _stats(st, T, blob, t_start)
 
 
@@ -744,7 +968,7 @@ def compress_stream(pairs, cfg=None, grid: Optional[TileGrid] = None,
     _derive_ready()
     _advance()
     assert not pending, "scheduler left unemitted windows"
-    blob = st.writer.finish(_container_header(st, T))
+    blob = st.writer.finish(_finish_header(st, T))
     return blob, _stats(st, T, blob, t_start)
 
 

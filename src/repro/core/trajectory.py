@@ -60,6 +60,17 @@ def face_predicate_tables(ufp, vfp):
     return {"slice": slice_pred, "slab": slab_pred}
 
 
+class Lemma1ViolationError(RuntimeError):
+    """A tet with a crossed-face count outside {0, 2}.
+
+    Under SoS this is impossible (paper Lemma 1): the zero set enters
+    and leaves every tetrahedron through exactly two faces or misses it
+    entirely.  Hitting this means a predicate-consistency bug upstream
+    (e.g. faces of one tet evaluated with inconsistent vertex ids), so
+    extraction raises instead of silently dropping the crossing.
+    """
+
+
 class _UnionFind:
     def __init__(self):
         self.parent = {}
@@ -78,61 +89,103 @@ class _UnionFind:
             self.parent[ra] = rb
 
 
-def _face_key(verts):
-    """Canonical global face key (verts already sorted ascending)."""
-    return (int(verts[0]), int(verts[1]), int(verts[2]))
+def check_lemma1(crossed, t_lo: int = 0):
+    """Raise Lemma1ViolationError unless every tet has 0 or 2 crossings.
+
+    crossed: (C, Ntet, 4) bool for slabs [t_lo, t_lo + C).
+    """
+    n_crossed = crossed.sum(axis=2)
+    bad = (n_crossed != 0) & (n_crossed != 2)
+    if bad.any():
+        ci, ti = np.nonzero(bad)
+        raise Lemma1ViolationError(
+            f"{bad.sum()} tets with crossed-face count not in {{0, 2}} "
+            f"(first: slab {t_lo + int(ci[0])}, tet {int(ti[0])}, "
+            f"count {int(n_crossed[ci[0], ti[0]])}); SoS predicates are "
+            f"inconsistent upstream")
 
 
-def extract_tracks(ufp, vfp):
-    """Track statistics of the zero set.
+def tet_crossings(tables, shape, t_lo: int, t_hi: int):
+    """Crossed-state of every tet face of slabs [t_lo, t_hi), as pure
+    gathers from precomputed face-predicate tables (no SoS work).
 
-    Returns dict: n_tracks, n_crossings, crossings per kind.
+    Returns crossed (C, Ntet, 4) bool (grid.tet_face_fids gives the
+    global ids).  Raises Lemma1ViolationError on degenerate tets.
+    """
+    T, H, W = shape
+    family, index = grid.tet_face_map(H, W)
+    sl = tables["slice"]
+    sb = tables["slab"]
+    idx_slice = np.where(family == 2, 0, index)        # keep gathers in-range
+    idx_slab = np.where(family == 2, index, 0)
+    c_bot = sl[t_lo:t_hi][:, idx_slice]                # (C, Ntet, 4)
+    c_top = sl[t_lo + 1 : t_hi + 1][:, idx_slice]
+    c_slab = sb[t_lo:t_hi][:, idx_slab]
+    crossed = np.where(family == 0, c_bot,
+                       np.where(family == 1, c_top, c_slab))
+    check_lemma1(crossed, t_lo)
+    return crossed
+
+
+def segment_edges(crossed, t_lo, shape):
+    """Global-face-id segment edges of slabs [t_lo, t_lo + C).
+
+    Each tet with two crossed faces contributes one zero-set segment
+    joining them; the edge is the (fid_a, fid_b) pair.  Returns (E, 2)
+    int64 (unsorted pairs in tet order).
+    """
+    T, H, W = shape
+    family, index = grid.tet_face_map(H, W)
+    ci, ti = np.nonzero(crossed.sum(axis=2) == 2)
+    if len(ci) == 0:
+        return np.empty((0, 2), dtype=np.int64)
+    rows = crossed[ci, ti]                     # (M, 4), exactly 2 True
+    _, slots = np.nonzero(rows)
+    slots = slots.reshape(-1, 2)
+    fids = grid.tet_face_fids(
+        family[ti[:, None], slots], index[ti[:, None], slots],
+        (t_lo + ci)[:, None], H, W)
+    return fids
+
+
+def extract_tracks(ufp, vfp, tables=None):
+    """Track statistics of the zero set (host union-find reference).
+
+    Returns dict: n_tracks, n_crossing_nodes, n_crossed_incidences.
+    ``tables`` optionally passes precomputed face_predicate_tables so
+    callers evaluating several metrics share one predicate pass.  The
+    union-find here is the host reference implementation; the
+    device-resident geometric extraction lives in repro.analysis.
     """
     T, H, W = ufp.shape
-    HW = H * W
-    u2 = ufp.reshape(T, HW)
-    v2 = vfp.reshape(T, HW)
-    tets = grid.slab_tets(H, W).astype(np.int64)  # (Ntet, 4) local 2-plane ids
-    tet_faces = tets[:, grid.TET_FACES]           # (Ntet, 4, 3)
+    shape = (T, H, W)
+    if tables is None:
+        tables = face_predicate_tables(ufp, vfp)
 
     uf = _UnionFind()
     crossed_total = 0
-
-    # predicates for a batch of slabs at once (vectorized); the python
-    # union-find below only walks the sparse active tets
-    step = _frame_chunk(4 * len(tet_faces))
+    seen = set()
+    family, _ = grid.tet_face_map(H, W)
+    step = _frame_chunk(4 * family.shape[0])
     for lo in range(0, T - 1, step):
         hi = min(lo + step, T - 1)
-        pair_u = np.concatenate([u2[lo:hi], u2[lo + 1 : hi + 1]], axis=1)
-        pair_v = np.concatenate([v2[lo:hi], v2[lo + 1 : hi + 1]], axis=1)
-        fu = pair_u[:, tet_faces]                 # (C, Ntet, 4, 3)
-        fv = pair_v[:, tet_faces]
-        idx = tet_faces[None] \
-            + (np.arange(lo, hi, dtype=np.int64) * HW)[:, None, None, None]
-        crossed = sos.face_crossed_vals(np, fu, fv, idx)  # (C, Ntet, 4)
+        crossed = tet_crossings(tables, shape, lo, hi)
         crossed_total += int(crossed.sum())
-        n_crossed = crossed.sum(axis=2)
-        # Under SoS each tet has 0 or 2 crossed faces (Lemma 1).
-        for ci, ti in zip(*np.nonzero(n_crossed == 2)):
-            fa, fb = np.nonzero(crossed[ci, ti])[0]
-            ka = _face_key(idx[ci, ti, fa])
-            kb = _face_key(idx[ci, ti, fb])
-            uf.union(ka, kb)
-
+        edges = segment_edges(crossed, lo, shape)
+        for a, b in edges:
+            uf.union(int(a), int(b))
+        seen.update(edges.reshape(-1).tolist())
+    n_nodes = len(seen)
     roots = {uf.find(k) for k in uf.parent}
     return {
         "n_tracks": len(roots),
-        "n_crossing_nodes": len(uf.parent),
+        "n_crossing_nodes": n_nodes,
         "n_crossed_incidences": crossed_total,
     }
 
 
-def false_cases(u_orig, v_orig, u_rec, v_rec, scale):
-    """FC_t / FC_s / per-time CP counts, per the paper's metrics."""
-    uo, vo = fixedpoint.refix(u_orig, v_orig, scale)
-    ur, vr = fixedpoint.refix(u_rec, v_rec, scale)
-    p0 = face_predicate_tables(uo, vo)
-    p1 = face_predicate_tables(ur, vr)
+def false_cases_from_tables(p0, p1):
+    """FC_t / FC_s / CP counts from precomputed predicate tables."""
     fc_t = int((p0["slice"] ^ p1["slice"]).sum())
     fc_s = int((p0["slab"] ^ p1["slab"]).sum())
     return {
@@ -143,3 +196,12 @@ def false_cases(u_orig, v_orig, u_rec, v_rec, scale):
         "CP_slab_orig": int(p0["slab"].sum()),
         "CP_slab_rec": int(p1["slab"].sum()),
     }
+
+
+def false_cases(u_orig, v_orig, u_rec, v_rec, scale):
+    """FC_t / FC_s / per-time CP counts, per the paper's metrics."""
+    uo, vo = fixedpoint.refix(u_orig, v_orig, scale)
+    ur, vr = fixedpoint.refix(u_rec, v_rec, scale)
+    p0 = face_predicate_tables(uo, vo)
+    p1 = face_predicate_tables(ur, vr)
+    return false_cases_from_tables(p0, p1)

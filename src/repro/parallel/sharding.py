@@ -257,3 +257,27 @@ def map_tiles(fn, *batched):
         return shard_map(vfn, mesh=tiles_mesh(),
                          in_specs=spec, out_specs=spec)(*batched)
     return vfn(*batched)
+
+
+def map_tiles_padded(fn, *batched):
+    """map_tiles that PADS a ragged batch up to a device-count multiple
+    (repeating the last tile) so the shard_mapped path is always taken,
+    then drops the padded rows from every output leaf.
+
+    Used by the per-tile trajectory-segment extraction (core/tiling.py),
+    whose group sizes (edge/corner tile counts) rarely divide the device
+    count; ``fn`` must be row-independent (tile units are, by
+    construction).  On one device this degenerates to map_tiles.
+    """
+    import jax.numpy as jnp
+
+    batched = [jnp.asarray(b) for b in batched]
+    n = int(batched[0].shape[0])
+    d = jax.device_count()
+    if n == 0 or n % d == 0:
+        return map_tiles(fn, *batched)
+    pad = d - n % d
+    padded = [jnp.concatenate([b, jnp.repeat(b[-1:], pad, axis=0)], axis=0)
+              for b in batched]
+    out = map_tiles(fn, *padded)
+    return jax.tree.map(lambda leaf: leaf[:n], out)

@@ -1,0 +1,240 @@
+"""Trajectory analytics: geometry, classification, device CCL parity.
+
+Oracles come from the analytic structure of the synthetic fields:
+
+* double_gyre: two gyre cores (divergence-free rotation -> ``center``)
+  at domain (x, y) ~ (0.5, 0.5) and (1.5, 0.5), plus two boundary-row
+  saddles near x ~ 1.0 -- four tracks alive for the whole window.
+* vortex_street: Oseen vortex cores advecting downstream (+x) typed as
+  centers/spirals, with saddles between them.
+
+Device-vs-host parity: the pointer-jumping connected-component
+labeling (backend.connected_labels, xla + numpy) must produce the same
+partition as the reference host union-find on every synthetic field.
+"""
+import numpy as np
+import pytest
+
+from repro import analysis
+from repro.analysis import classify, extraction, model
+from repro.core import backend as backend_mod
+from repro.core import fixedpoint, trajectory
+from repro.data import synthetic
+
+
+def _field(name):
+    return {
+        "double_gyre": lambda: synthetic.double_gyre(T=6, H=20, W=28),
+        "vortex_street": lambda: synthetic.vortex_street(T=6, H=24, W=36),
+        "heated_plume": lambda: synthetic.heated_plume(T=5, H=32, W=16),
+        "turbulence": lambda: synthetic.turbulence(T=5, H=24, W=24),
+    }[name]()
+
+
+def _fixed(name):
+    u, v = _field(name)
+    scale, ufp, vfp = fixedpoint.to_fixed(u, v)
+    return ufp, vfp
+
+
+# ----------------------------------------------------------------------
+# classification oracles
+# ----------------------------------------------------------------------
+
+def test_double_gyre_classification_oracle():
+    ufp, vfp = _fixed("double_gyre")
+    T, H, W = ufp.shape
+    ts = analysis.extract(ufp, vfp)
+    assert ts.n_tracks == 4
+    centers = [t for t in ts.tracks if t.dominant_type == "center"]
+    saddles = [t for t in ts.tracks if t.dominant_type == "saddle"]
+    assert len(centers) == 2 and len(saddles) == 2
+    # gyre cores sit at mid-height, near domain x = 0.5 and 1.5
+    # (grid x = j / (W-1) * 2), and live for the whole window
+    xs = sorted(t.nodes[:, 2].mean() / (W - 1) * 2.0 for t in centers)
+    assert abs(xs[0] - 0.5) < 0.2 and abs(xs[1] - 1.5) < 0.2
+    for t in centers:
+        assert abs(t.nodes[:, 1].mean() / (H - 1) - 0.5) < 0.05
+        assert t.t_min == 0.0 and t.t_max == T - 1
+        assert t.events(T) == {"birth": "domain_start",
+                               "death": "domain_end"}
+    # boundary saddles on the y = 0 / y = H-1 rows near domain x = 1
+    rows = sorted(t.nodes[:, 1].mean() for t in saddles)
+    assert rows[0] == 0.0 and rows[1] == H - 1
+    for t in saddles:
+        assert abs(t.nodes[:, 2].mean() / (W - 1) * 2.0 - 1.0) < 0.15
+        # every node of a saddle track is typed saddle (det < 0 is
+        # robust -- no tolerance involved)
+        assert (t.types == model.CP_CODE["saddle"]).all()
+
+
+def test_vortex_street_classification_oracle():
+    ufp, vfp = _fixed("vortex_street")
+    ts = analysis.extract(ufp, vfp)
+    rotating = {model.CP_CODE[n] for n in
+                ("center", "spiral_in", "spiral_out")}
+    cores = [t for t in ts.tracks
+             if len(t.face_ids) >= 10
+             and model.CP_CODE[t.dominant_type] in rotating]
+    saddles = [t for t in ts.tracks if t.dominant_type == "saddle"
+               and len(t.face_ids) >= 10]
+    assert len(cores) >= 4, ts.summary()
+    assert len(saddles) >= 2, ts.summary()
+    for t in cores:
+        # vortices advect downstream with the carrier flow
+        assert t.nodes[-1, 2] > t.nodes[0, 2]
+        # and the polyline is time-monotone (one CP tracked through time)
+        assert (np.diff(t.nodes[:, 0]) >= 0).all()
+
+
+def test_node_geometry_inside_faces():
+    ufp, vfp = _fixed("double_gyre")
+    T, H, W = ufp.shape
+    ts = analysis.extract(ufp, vfp)
+    assert len(ts.nodes)
+    from repro.core import grid as mesh
+    verts = mesh.face_vertices(ts.face_ids, H, W)
+    HW = H * W
+    tv, iv, jv = verts // HW, (verts % HW) // W, verts % W
+    # barycentric weights of a crossed face are a convex combination
+    for col, lo, hi in ((0, tv.min(1), tv.max(1)),
+                        (1, iv.min(1), iv.max(1)),
+                        (2, jv.min(1), jv.max(1))):
+        assert (ts.nodes[:, col] >= lo - 1e-9).all()
+        assert (ts.nodes[:, col] <= hi + 1e-9).all()
+
+
+def test_classify_analytic_jacobians():
+    # synthetic single-cell fields with known Jacobians at the center
+    base_u = np.zeros((2, 2, 2))
+    base_v = np.zeros((2, 2, 2))
+    yy, xx = np.meshgrid([-0.5, 0.5], [-0.5, 0.5], indexing="ij")
+    cases = {
+        "saddle": (xx, -yy),
+        "source": (xx, yy),
+        "sink": (-xx, -yy),
+        "center": (-yy, xx),
+        "spiral_out": (0.2 * xx - yy, xx + 0.2 * yy),
+        "spiral_in": (-0.2 * xx - yy, xx - 0.2 * yy),
+    }
+    for name, (uu, vv) in cases.items():
+        u = base_u + uu[None]
+        v = base_v + vv[None]
+        code = classify.classify_nodes(
+            u, v, np.array([[0.5, 0.5, 0.5]]))[0]
+        assert model.CP_TYPES[code] == name, (name, model.CP_TYPES[code])
+
+
+# ----------------------------------------------------------------------
+# device CCL vs host union-find partition parity
+# ----------------------------------------------------------------------
+
+def _host_partition(ufp, vfp):
+    """Reference union-find partition: node fid -> canonical group."""
+    shape = ufp.shape
+    T = shape[0]
+    tables = trajectory.face_predicate_tables(ufp, vfp)
+    uf = trajectory._UnionFind()
+    edges = []
+    for lo in range(0, T - 1):
+        crossed = trajectory.tet_crossings(tables, shape, lo, lo + 1)
+        e = trajectory.segment_edges(crossed, lo, shape)
+        edges.append(e)
+        for a, b in e:
+            uf.union(int(a), int(b))
+    fids = np.unique(np.concatenate(edges).reshape(-1))
+    groups = {}
+    for f in fids:
+        groups.setdefault(uf.find(int(f)), []).append(int(f))
+    # canonical: each node -> min fid of its group
+    out = {}
+    for members in groups.values():
+        m = min(members)
+        for f in members:
+            out[f] = m
+    return out
+
+
+@pytest.mark.parametrize("name", ["double_gyre", "vortex_street",
+                                  "heated_plume", "turbulence"])
+@pytest.mark.parametrize("be", ["numpy", "xla"])
+def test_device_partition_matches_host_union_find(name, be):
+    ufp, vfp = _fixed(name)
+    host = _host_partition(ufp, vfp)
+    ts = extraction.extract(ufp, vfp, backend=be)
+    assert ts.n_nodes == len(host)
+    # same grouping AND same canonical representative per group
+    for i, fid in enumerate(ts.face_ids):
+        rep_idx = np.nonzero(ts.track_of == ts.track_of[i])[0].min()
+        assert int(ts.face_ids[rep_idx]) == host[int(fid)]
+
+
+def test_connected_labels_backends_agree():
+    rng = np.random.default_rng(0)
+    for n, e in ((1, 0), (50, 30), (400, 380), (1000, 1500)):
+        edges = rng.integers(0, n, size=(e, 2))
+        l_np = np.asarray(backend_mod.connected_labels(n, edges, "numpy"))
+        l_x = np.asarray(backend_mod.connected_labels(n, edges, "xla"))
+        assert np.array_equal(l_np, l_x)
+        # label == min of component: idempotent under one more hook
+        for a, b in edges:
+            assert l_np[a] == l_np[b]
+        assert (l_np <= np.arange(n)).all()
+
+
+def test_connected_labels_long_path_converges():
+    # a single 10k-node path exercises the pointer-jumping doubling
+    n = 10_000
+    edges = np.stack([np.arange(n - 1), np.arange(1, n)], axis=1)
+    labels = np.asarray(backend_mod.connected_labels(n, edges, "numpy"))
+    assert (labels == 0).all()
+
+
+# ----------------------------------------------------------------------
+# Lemma-1 degeneracy is an error, not a silent drop
+# ----------------------------------------------------------------------
+
+def test_lemma1_violation_raises():
+    crossed = np.zeros((1, 8, 4), dtype=bool)
+    crossed[0, 3, 0] = True          # one crossed face: count == 1
+    with pytest.raises(trajectory.Lemma1ViolationError, match="tet 3"):
+        trajectory.check_lemma1(crossed, t_lo=5)
+
+
+def test_extract_tracks_raises_on_inconsistent_tables():
+    ufp, vfp = _fixed("double_gyre")
+    tables = trajectory.face_predicate_tables(ufp, vfp)
+    assert tables["slab"].any()
+    bad = {"slice": tables["slice"].copy(), "slab": tables["slab"].copy()}
+    t, f = np.argwhere(bad["slab"])[0]
+    bad["slab"][t, f] = False        # drop one crossing -> odd count
+    with pytest.raises(trajectory.Lemma1ViolationError):
+        trajectory.extract_tracks(ufp, vfp, tables=bad)
+
+
+# ----------------------------------------------------------------------
+# determinism of the canonical polyline order
+# ----------------------------------------------------------------------
+
+def test_polyline_order_edge_order_invariant():
+    ufp, vfp = _fixed("vortex_street")
+    ts = analysis.extract(ufp, vfp)
+    rng = np.random.default_rng(1)
+    perm = rng.permutation(len(ts.edges))
+    flip = rng.integers(0, 2, len(ts.edges)).astype(bool)
+    edges = ts.edges[perm]
+    edges[flip[perm]] = edges[flip[perm]][:, ::-1]
+    tracks2 = model.build_tracks(ts.nodes, ts.face_ids, ts.types,
+                                 ts.track_of, edges)
+    for a, b in zip(ts.tracks, tracks2):
+        assert np.array_equal(a.face_ids, b.face_ids)
+        assert np.array_equal(a.nodes, b.nodes)
+
+
+def test_metrics_evaluate_shares_tables():
+    from repro.core import metrics
+    u, v = _field("double_gyre")
+    scale, _, _ = fixedpoint.to_fixed(u, v)
+    out = metrics.evaluate(u, v, u, v, scale, 100, 10)
+    assert out["FC_t"] == 0 and out["FC_s"] == 0
+    assert out["n_traj_orig"] == out["n_traj_rec"] == 4

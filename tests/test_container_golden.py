@@ -63,6 +63,30 @@ def test_future_version_refused_tiled():
         decompress(blob)
 
 
+def test_track_index_rides_without_version_bump():
+    """The PR-3 sidecar track index must not bump the tiled container
+    version: old (PR-2) readers check ``version`` and would refuse a
+    bump, but unknown footer KEYS are skipped cleanly.  This pins the
+    index to the key-based extension path."""
+    from repro.core import CompressionConfig, TileGrid, compress_tiled
+    from repro.core.tiling import TILED_FORMAT_VERSION
+    from repro.data import synthetic
+
+    u, v = synthetic.double_gyre(T=4, H=10, W=14)
+    blob, stats = compress_tiled(
+        u, v, CompressionConfig(eb=1e-2, track_index=True),
+        TileGrid(tile_h=5, tile_w=7, window_t=2))
+    hdr = encode.tiled_header(blob)
+    assert hdr["version"] == TILED_FORMAT_VERSION == 3
+    assert encode.TRACK_INDEX_KEY in hdr
+    # the index section is self-versioned instead
+    assert hdr[encode.TRACK_INDEX_KEY]["version"] >= 1
+    # and a reader that only knows the PR-2 keys still decodes it
+    ur, vr = decompress(blob)
+    assert np.abs(ur.astype(np.float64) - u).max() <= stats["eb_abs"]
+    assert np.abs(vr.astype(np.float64) - v).max() <= stats["eb_abs"]
+
+
 def test_magics_disjoint():
     assert len({encode.MAGIC, encode.MAGIC_ZLIB, encode.MAGIC_TILED}) == 3
     blob, _ = _golden()

@@ -1,0 +1,189 @@
+"""CPTT1 track index: query roundtrip + footer forward-compat.
+
+The acceptance bar: ``decode_for_track`` on a >= 8-unit tiled blob must
+decode STRICTLY FEWER units than the full field and return a polyline
+bit-identical (node coordinates, connectivity, types) to extraction
+from a monolithic full decode; and blobs written with the index must
+keep decoding identically on readers that ignore the new footer
+section (old-reader simulation).
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from repro import analysis
+from repro.core import (
+    CompressionConfig,
+    TileGrid,
+    compress_stream,
+    compress_tiled,
+    decompress_tiled,
+    encode,
+    fixedpoint,
+)
+from repro.data import synthetic
+
+
+def _make_blob(track_index=True, predictor="mop"):
+    u, v = synthetic.double_gyre(T=8, H=20, W=28)
+    cfg = CompressionConfig(eb=1e-2, mode="rel", predictor=predictor,
+                            fused=True, track_index=track_index,
+                            dt=0.1, dx=2.0 / 27, dy=1.0 / 19)
+    grid = TileGrid(tile_h=10, tile_w=14, window_t=4)
+    blob, stats = compress_tiled(u, v, cfg, grid)
+    return u, v, blob, stats
+
+
+@pytest.fixture(scope="module")
+def indexed():
+    return _make_blob(track_index=True)
+
+
+def test_query_roundtrip_bit_identical(indexed):
+    """decode_for_track == full-decode extraction, track by track."""
+    u, v, blob, stats = indexed
+    assert stats["n_units"] >= 8
+    ur, vr = decompress_tiled(blob)
+    ufp, vfp = fixedpoint.refix(ur, vr, stats["scale"])
+    full = analysis.extract(ufp, vfp)
+    assert full.n_tracks == len(analysis.track_summaries(blob))
+    for k in range(full.n_tracks):
+        res = analysis.decode_for_track(blob, k)
+        ref = full.track(k)
+        assert res.units_read < res.units_total, \
+            "feature decode read the whole field"
+        assert np.array_equal(res.track.face_ids, ref.face_ids)
+        assert np.array_equal(res.track.nodes, ref.nodes)  # bitwise
+        assert np.array_equal(res.track.types, ref.types)
+        assert res.track.is_loop == ref.is_loop
+
+
+def test_read_plan_matches_decode(indexed):
+    _, _, blob, _ = indexed
+    hdr = encode.tiled_header(blob)
+    for s in analysis.track_summaries(blob):
+        k = s["track_id"]
+        plan = analysis.track_read_plan(blob, k)
+        res = analysis.decode_for_track(blob, k)
+        assert plan == res.entries
+        assert 0 < len(plan) < len(hdr["units"])
+        assert res.bytes_read == sum(e["len"] for e in plan)
+        assert res.bytes_read < len(blob)
+
+
+def test_query_filters(indexed):
+    _, _, blob, _ = indexed
+    T, H, W = 8, 20, 28
+    allt = analysis.track_summaries(blob)
+    centers = analysis.query_tracks(blob, cp_type="center")
+    saddles = analysis.query_tracks(blob, cp_type="saddle")
+    assert {s["track_id"] for s in centers} \
+        | {s["track_id"] for s in saddles} \
+        == {s["track_id"] for s in allt}
+    assert len(centers) == 2 and len(saddles) == 2
+    # spatial filter: the left gyre core only
+    left = analysis.query_tracks(blob, bbox=(5, H - 6, 0, W / 2 - 3),
+                                 cp_type="center")
+    assert len(left) == 1
+    # time filter: everything lives through the whole window
+    assert len(analysis.query_tracks(blob, trange=(0, 1))) == len(allt)
+    assert analysis.query_tracks(blob, trange=(T + 5, T + 9)) == []
+    with pytest.raises(ValueError, match="unknown cp_type"):
+        analysis.query_tracks(blob, cp_type="vortexx")
+
+
+def test_streaming_blob_carries_same_index(indexed):
+    u, v, blob, _ = indexed
+    cfg = CompressionConfig(eb=1e-2, mode="rel", predictor="mop",
+                            fused=True, dt=0.1, dx=2.0 / 27, dy=1.0 / 19)
+    grid = TileGrid(tile_h=10, tile_w=14, window_t=4)
+    vr = (float(min(u.min(), v.min())), float(max(u.max(), v.max())))
+    blob_s, _ = compress_stream(
+        ((u[t], v[t]) for t in range(u.shape[0])), cfg, grid,
+        value_range=vr)
+    assert blob_s == blob  # bytes, index included
+
+
+def test_no_index_is_a_clear_error():
+    _, _, blob, _ = _make_blob(track_index=False)
+    with pytest.raises(ValueError, match="no track index"):
+        analysis.track_summaries(blob)
+    with pytest.raises(ValueError, match="no track index"):
+        analysis.decode_for_track(blob, 0)
+
+
+def test_index_does_not_perturb_units_or_decode():
+    """The sidecar index must be purely additive: same unit bytes, same
+    directory offsets, same decoded field as an index-less blob."""
+    _, _, blob_on, _ = _make_blob(track_index=True)
+    _, _, blob_off, _ = _make_blob(track_index=False)
+    h_on = encode.tiled_header(blob_on)
+    h_off = encode.tiled_header(blob_off)
+    assert h_on["units"] == h_off["units"]       # offsets + lengths
+    last = max(e["off"] + e["len"] for e in h_on["units"])
+    assert blob_on[:last] == blob_off[:last]     # unit bytes identical
+    a = decompress_tiled(blob_on)
+    b = decompress_tiled(blob_off)
+    assert np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1])
+
+
+def test_old_reader_skips_footer_section(indexed):
+    """Simulate a pre-index reader: strip the unknown footer key and
+    re-pack the footer -- the decode must be unchanged, proving no
+    decode path depends on the new section."""
+    _, _, blob, _ = indexed
+    hdr = encode.tiled_header(blob)
+    assert encode.TRACK_INDEX_KEY in hdr
+    stripped = copy.deepcopy(hdr)
+    units = stripped.pop("units")
+    stripped.pop(encode.TRACK_INDEX_KEY)
+    # rebuild a footer without the index on top of the same unit bytes
+    import msgpack
+    import struct
+    import zlib
+    stripped["units"] = units
+    last = max(e["off"] + e["len"] for e in units)
+    raw = zlib.compress(msgpack.packb(stripped, use_bin_type=True), 6)
+    doctored = blob[:last] + raw + struct.pack("<I", len(raw)) \
+        + encode.MAGIC_TILED
+    a = decompress_tiled(blob)
+    b = decompress_tiled(doctored)
+    assert np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1])
+
+
+def test_future_index_version_refused(indexed):
+    _, _, blob, _ = indexed
+    hdr = encode.tiled_header(blob)
+    section = copy.deepcopy(hdr[encode.TRACK_INDEX_KEY])
+    section["version"] = 99
+    with pytest.raises(ValueError, match="track index version 99"):
+        analysis.TrackIndex(section)
+
+
+def test_path_source_uses_range_reads(tmp_path, indexed):
+    """A path source must answer queries with seek-based range reads
+    (footer + covering units), matching the bytes-source results."""
+    _, _, blob, _ = indexed
+    p = tmp_path / "field.cptt1"
+    p.write_bytes(blob)
+    assert analysis.track_summaries(str(p)) == analysis.track_summaries(blob)
+    k = analysis.track_summaries(blob)[0]["track_id"]
+    assert analysis.track_read_plan(str(p), k) == \
+        analysis.track_read_plan(blob, k)
+    a = analysis.decode_for_track(str(p), k)
+    b = analysis.decode_for_track(blob, k)
+    assert np.array_equal(a.track.nodes, b.track.nodes)
+    assert a.bytes_read == b.bytes_read < len(blob)
+
+
+def test_lorenzo_predictor_roundtrip():
+    """Same guarantee under the pure-Lorenzo predictor."""
+    u, v, blob, stats = _make_blob(predictor="lorenzo")
+    ur, vr = decompress_tiled(blob)
+    ufp, vfp = fixedpoint.refix(ur, vr, stats["scale"])
+    full = analysis.extract(ufp, vfp)
+    for k in range(full.n_tracks):
+        res = analysis.decode_for_track(blob, k)
+        assert np.array_equal(res.track.nodes, full.track(k).nodes)
+        assert res.units_read < res.units_total
