@@ -1,0 +1,69 @@
+"""Schema gate for BENCH_compress.json (CI).
+
+The bench emitter is the repo's perf-trajectory record; a refactor that
+silently drops a section (or loses a bit-identity guarantee) would
+otherwise rot unnoticed until the next manual read.  This asserts the
+tracked sections exist and their correctness flags hold, so benchmark
+regressions fail the workflow:
+
+    python benchmarks/check_schema.py [BENCH_compress.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def check(payload: dict) -> list:
+    checked = []
+
+    def need(cond, msg):
+        # a real raise, not assert: the gate must still gate under -O
+        if not cond:
+            raise SystemExit(f"BENCH schema check failed: {msg}")
+
+    need(isinstance(payload.get("rows"), list) and payload["rows"],
+         "rows missing or empty")
+    for r in payload["rows"]:
+        need({"dataset", "predictor", "backend", "MBps_encode",
+              "MBps_decode", "ratio"} <= set(r), f"row schema: {r}")
+    checked.append("rows")
+
+    for key in ("tiled_vs_monolithic", "batched_vs_sequential"):
+        sec = payload.get(key)
+        need(isinstance(sec, dict), f"{key} section missing")
+        need(sec.get("bit_identical") is True,
+             f"{key}.bit_identical is not true: {sec.get('bit_identical')}")
+        checked.append(key)
+    need(payload["batched_vs_sequential"].get("n_units", 0) >= 8,
+         "batched_vs_sequential ran on < 8 units")
+    preds = {r["predictor"]
+             for r in payload["batched_vs_sequential"]["rows"]}
+    need({"lorenzo", "mop"} <= preds,
+         f"batched_vs_sequential must cover both predictors, got {preds}")
+
+    traj = payload.get("trajectory_analysis")
+    need(isinstance(traj, dict) and traj.get("rows"),
+         "trajectory_analysis section missing or empty")
+    ours = [r for r in traj["rows"] if r["method"].startswith("ours")]
+    need(ours, "trajectory_analysis has no 'ours' rows")
+    for r in ours:
+        need(r.get("FC_t") == 0 and r.get("FC_s") == 0,
+             f"ours row has false cases: {r}")
+        need(r.get("tracks_preserved") is True,
+             f"ours row did not preserve tracks: {r}")
+    checked.append("trajectory_analysis")
+    return checked
+
+
+def main(path: str = "BENCH_compress.json") -> int:
+    with open(path) as f:
+        payload = json.load(f)
+    checked = check(payload)
+    print(f"{path}: schema ok ({', '.join(checked)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else
+                  "BENCH_compress.json"))

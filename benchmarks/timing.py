@@ -142,6 +142,69 @@ def _bench_tiled(eb, shape, repeat, log):
     return out
 
 
+def _bench_batched(eb, shape, repeat, log):
+    """Batched-vs-sequential unit execution (pipeline.BatchFns): encode
+    MB/s with same-signature units stacked through the vmapped stages +
+    ("tiles",) mesh vs the per-unit Python loop, asserting the two
+    containers are BYTE-equal for both predictor families (the unit-
+    batching guarantee, DESIGN.md #10)."""
+    import dataclasses as _dc
+
+    from repro.core import TileGrid, compress_tiled
+    from repro.data import synthetic
+
+    T, H, W = shape
+    u, v = synthetic.advected_turbulence(T=T, H=H, W=W)
+    mb = (u.nbytes + v.nbytes) / 2**20
+    grid = TileGrid(tile_h=max(H // 2, 1), tile_w=max(W // 2, 1),
+                    window_t=max(T // 2, 1))
+    rows = []
+    identical = True
+    n_units = 0
+    for pred in ("lorenzo", "mop"):
+        cfg_b = CompressionConfig(eb=eb, mode="rel", predictor=pred,
+                                  backend="xla", verify=True, fused=True,
+                                  track_index=False, batch_units=True)
+        cfg_s = _dc.replace(cfg_b, batch_units=False)
+        tb, ts = [], []
+        blob_b = blob_s = None
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            blob_b, stats_b = compress_tiled(u, v, cfg_b, grid)
+            tb.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            blob_s, _ = compress_tiled(u, v, cfg_s, grid)
+            ts.append(time.perf_counter() - t0)
+        same = blob_b == blob_s
+        assert same, f"batched {pred} diverged from sequential bytes"
+        identical = identical and same
+        n_units = stats_b["n_units"]
+        rows.append({
+            "predictor": pred,
+            "n_units": stats_b["n_units"],
+            "t_encode_sequential": round(min(ts), 3),
+            "t_encode_batched": round(min(tb), 3),
+            "MBps_encode_sequential": round(mb / max(min(ts), 1e-9), 2),
+            "MBps_encode_batched": round(mb / max(min(tb), 1e-9), 2),
+            "speedup": round(min(ts) / max(min(tb), 1e-9), 3),
+            "bytes_equal": same,
+        })
+        log(f"[bench] batched-vs-sequential {pred:8s} "
+            f"({stats_b['n_units']} units): "
+            f"{rows[-1]['MBps_encode_sequential']} -> "
+            f"{rows[-1]['MBps_encode_batched']} MB/s "
+            f"({rows[-1]['speedup']}x), bytes_equal={same}")
+    assert n_units >= 8, f"batched A/B needs >= 8 units, got {n_units}"
+    return {
+        "field": f"advected_turbulence {T}x{H}x{W}",
+        "backend": "xla",
+        "MB": round(mb, 2),
+        "n_units": n_units,
+        "rows": rows,
+        "bit_identical": identical,
+    }
+
+
 def _bench_trajectory_analysis(eb, shape, log, field="turbulence"):
     """Track-level metric rows: ours vs the non-trajectory-preserving
     baselines (broken vs preserved tracks), with per-type CP counts,
@@ -204,7 +267,8 @@ def bench_compress(small=True, eb=1e-2, backends=("xla",),
                    predictors=("lorenzo", "sl", "mop"),
                    speedup_shape=(64, 256, 256), repeat=2, log=print,
                    data=None, tiled_shape=(64, 256, 256),
-                   analysis_shape=(16, 48, 48)):
+                   analysis_shape=(16, 48, 48),
+                   batched_shape=(16, 64, 64)):
     """Emit the BENCH_compress.json payload.
 
     Each (dataset, predictor, backend) cell reports best-of-``repeat``
@@ -268,11 +332,16 @@ def bench_compress(small=True, eb=1e-2, backends=("xla",),
     tiled = None
     if tiled_shape is not None:
         tiled = _bench_tiled(eb, tiled_shape, repeat, log)
+    batched = None
+    if batched_shape is not None:
+        batched = _bench_batched(eb, batched_shape, repeat, log)
     traj = None
     if analysis_shape is not None:
         traj = _bench_trajectory_analysis(eb, analysis_shape, log)
     return {"rows": rows, "seed_vs_fused": comparison,
-            "tiled_vs_monolithic": tiled, "trajectory_analysis": traj,
+            "tiled_vs_monolithic": tiled,
+            "batched_vs_sequential": batched,
+            "trajectory_analysis": traj,
             "eb": eb, "small": small}
 
 
@@ -299,7 +368,8 @@ if __name__ == "__main__":
         payload = bench_compress(
             eb=args.eb, backends=backends, data=tiny,
             predictors=("mop",), speedup_shape=(6, 32, 32), repeat=1,
-            tiled_shape=(6, 32, 32), analysis_shape=(6, 24, 24))
+            tiled_shape=(6, 32, 32), analysis_shape=(6, 24, 24),
+            batched_shape=(6, 32, 32))
     else:
         payload = bench_compress(
             small=not args.large, eb=args.eb, backends=backends,

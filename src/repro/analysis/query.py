@@ -28,7 +28,6 @@ import os
 
 import numpy as np
 
-from ..core import backend as backend_mod
 from ..core import encode, fixedpoint
 from . import classify as classify_mod
 from . import extraction, model
@@ -177,20 +176,20 @@ class TrackDecode:
 
 def decode_for_track(src, track_id: int, backend=None) -> TrackDecode:
     """Decode ONLY the units covering ``track_id`` and rebuild its
-    polyline exactly (bit-identical to full-decode extraction)."""
-    from ..core import tiling as tiling_mod
+    polyline exactly (bit-identical to full-decode extraction).  Unit
+    decode goes through the shared pipeline executor -- the same
+    decode_payload implementation full decode and region decode use."""
+    from ..core import pipeline as pipeline_mod
 
     source, hdr, idx = load_track_index(src)
     idx._check(track_id)
     T, H, W = hdr["shape"]
     entries = _cover_entries(hdr, idx, track_id)
-    be = backend_mod.resolve(backend or hdr.get("sl_backend"))
-    stepper = backend_mod.sl_stepper(
-        be, hdr["cfl_x"], hdr["cfl_y"], hdr["d_max"], hdr["n_max"])
+    ex = pipeline_mod.executor_from_header(hdr, backend)
     patches_u, patches_v = [], []
     for entry in entries:
         uh, secs = source.unit(entry)
-        u_rec, v_rec = tiling_mod._decode_unit(uh, secs, hdr, stepper)
+        u_rec, v_rec = ex.decode_unit(uh, secs)
         ufp, vfp = fixedpoint.refix(u_rec, v_rec, hdr["scale"])
         box = tuple(uh["box"])
         patches_u.append((box, ufp))

@@ -233,6 +233,23 @@ def sl_predictions(xu, xv, g2f, stepper):
     return jnp.stack(pus), jnp.stack(pvs)
 
 
+def sl_predictions_batched(xus, xvs, g2f, stepper):
+    """Predictions for a (B, T, H, W) batch of units, T >= 2.
+
+    Deliberately NOT a vmap: float arithmetic is not bit-stable across
+    compilation contexts (module doc), so every (unit, frame) steps
+    through the SAME per-frame executable the sequential encode path and
+    the decoder use -- batched output is bit-identical to per-unit
+    output by construction.  All B * (T-1) dispatches are asynchronous.
+    """
+    pus, pvs = [], []
+    for b in range(int(xus.shape[0])):
+        pu, pv = sl_predictions(xus[b], xvs[b], g2f, stepper)
+        pus.append(pu)
+        pvs.append(pv)
+    return jnp.stack(pus), jnp.stack(pvs)
+
+
 # ----------------------------------------------------------------------
 # op: batched connected-component labeling (trajectory stitching)
 # ----------------------------------------------------------------------

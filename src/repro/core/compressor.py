@@ -22,47 +22,32 @@ Pipeline (encode):
   6. escape-coded symbol streams + lossless side channels -> zstd (or
      zlib-fallback) container (encode.py)
 
-Two pipeline implementations coexist (DESIGN.md #5):
-
-* FUSED (default): every verify round is device-resident -- quantize,
-  residuals, decode simulation, reconstruction, refix and predicate
-  diff all run as jitted stages with only scalars and small index sets
-  crossing to the host (no field-sized np.asarray round-trips
-  mid-loop).  After round 0 re-verification is INCREMENTAL: forcing a
-  vertex lossless changes the reconstruction only at that vertex (X is
-  pointwise, integer decode is exact, and the SL predictor is replayed
-  through the same stepper executable), so only faces incident to
-  newly-forced vertices are re-checked, and the pointwise bound can
-  only newly fail at vertices that are now stored exactly.  Decode --
-  both the verify simulation and decompress, which share one
-  implementation -- exploits that block-Lorenzo time-stepping
-  X_t = X_{t-1} + C2(res_t) is a prefix sum: maximal Lorenzo-only
-  frame runs are decoded with one cumsum over time (parallel-in-time),
-  falling back to per-frame stepping only across SL frames.
-
-* LEGACY (cfg.fused=False / REPRO_FUSED=0): the seed pipeline --
-  full predicate re-evaluation and host transfers every round,
-  sequential lax.scan decode -- kept callable so benchmarks/timing.py
-  can measure the fused speedup under identical accounting.
+Since the pipeline-plan refactor (DESIGN.md #10) this module is a thin
+driver: the stage graph lives in core/pipeline.py as a ``PipelinePlan``
+executed by a ``PlanExecutor``, and the SAME stage implementations serve
+the monolithic fused path, the legacy seed path (``cfg.fused=False`` /
+``REPRO_FUSED=0`` -- just the alternate stage binding, kept so
+benchmarks/timing.py can measure the fused speedup under identical
+accounting) and the tiled/streaming paths (core/tiling.py).  Names like
+``_decode_fields_parallel`` are re-exported here for backward
+compatibility (tests, baselines, benchmarks).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from .. import perfflags
 from . import backend as backend_mod
-from . import ebound, encode, fixedpoint, grid, mop, predictors, quantize
+from . import ebound, encode, fixedpoint, pipeline, predictors, quantize
 
 jax.config.update("jax_enable_x64", True)
 
-FORMAT_VERSION = 2
+FORMAT_VERSION = pipeline.FORMAT_VERSION
 
 
 @dataclasses.dataclass
@@ -86,6 +71,9 @@ class CompressionConfig:
     tiling: Optional[object] = None   # tiling.TileGrid -> tiled pipeline
     track_index: bool = True          # tiled: write the CPTT1 sidecar
                                       # track index (repro.analysis)
+    batch_units: bool = True          # tiled: stack same-signature units
+                                      # through the vmapped batched stages
+                                      # (pipeline.py; False = per-unit loop)
 
 
 def _as_fields(u, v):
@@ -108,654 +96,60 @@ def _abs_eb(u, v, cfg):
 
 
 # ----------------------------------------------------------------------
-# shared jitted stages
+# backward-compatible re-exports (implementations live in pipeline.py)
 # ----------------------------------------------------------------------
 
-@jax.jit
-def _predicates(ufp, vfp):
-    return ebound.all_face_predicates(ufp, vfp)
-
-
-_derive_eb_jit = ebound.derive_vertex_eb_jit  # one executable per (shape, tau)
+_derive_eb_jit = ebound.derive_vertex_eb_jit
+_predicates = pipeline._predicates_jit
+_decode_fields = pipeline._decode_fields
+_decode_fields_jit = pipeline._decode_fields_jit
+_decode_fields_parallel = pipeline._decode_fields_parallel
+_reconstruct = pipeline._reconstruct
+_faces_to_vertex_mask = pipeline._faces_to_vertex_mask
+_face_verts = pipeline._face_verts
+_touched_faces = pipeline._touched_faces
+_FusedFns = pipeline.UnitFns
+_fused_fns = pipeline.unit_fns
 
 
 def _encode_stage(ufp, vfp, eb, xi_unit, n_levels, lossless_extra,
                   cfg: CompressionConfig):
-    """eb -> X fields.  eb is the precomputed per-vertex bound."""
-    k, lossless = quantize.quantize_eb(eb, xi_unit, n_levels)
-    lossless = jnp.logical_or(lossless, lossless_extra)
-    k = jnp.where(lossless_extra, -1, k)
-    xu = quantize.dual_quantize(ufp, k, lossless, xi_unit)
-    xv = quantize.dual_quantize(vfp, k, lossless, xi_unit)
-    return xu, xv, lossless
+    """eb -> X fields (legacy quantize binding; eb is precomputed)."""
+    return pipeline.legacy_quantize(ufp, vfp, eb, xi_unit, n_levels,
+                                    lossless_extra)
 
 
 def _residuals(xu, xv, scale, xi_unit, cfg: CompressionConfig):
-    g2f = (2.0 * xi_unit) / scale
-    cfl_x = cfg.dt / cfg.dx
-    cfl_y = cfg.dt / cfg.dy
-    T = xu.shape[0]
-    nbi = -(-xu.shape[1] // cfg.block)
-    nbj = -(-xu.shape[2] // cfg.block)
-    if cfg.predictor == "lorenzo":
-        res3_u = predictors.lorenzo_encode(xu, cfg.block)
-        res3_v = predictors.lorenzo_encode(xv, cfg.block)
-        bm = jnp.zeros((T, nbi, nbj), dtype=bool)
-        return res3_u, res3_v, bm
-    ressl_u, ressl_v = predictors.sl_encode(
-        xu, xv, g2f, cfl_x, cfl_y, cfg.d_max, cfg.n_max
-    )
-    if cfg.predictor == "sl":
-        # only frame 0 consumes a Lorenzo (spatial-only) residual; skip
-        # the full 3DL stack the seed computed here
-        res_u = ressl_u.at[0].set(predictors.d2_block(xu[0], cfg.block))
-        res_v = ressl_v.at[0].set(predictors.d2_block(xv[0], cfg.block))
-        bm = jnp.ones((T, nbi, nbj), dtype=bool).at[0].set(False)
-        return res_u, res_v, bm
-    res3_u = predictors.lorenzo_encode(xu, cfg.block)
-    res3_v = predictors.lorenzo_encode(xv, cfg.block)
-    bm = mop.select(res3_u, res3_v, ressl_u, ressl_v, cfg.block)
-    res_u = mop.assemble(res3_u, ressl_u, bm, cfg.block)
-    res_v = mop.assemble(res3_v, ressl_v, bm, cfg.block)
-    return res_u, res_v, bm
-
-
-def _decode_fields(res_u, res_v, blockmap, scale, xi_unit, block,
-                   cfl_x, cfl_y, d_max, n_max):
-    """Legacy decode: sequential scan over frames (seed pipeline)."""
-    g2f = (2.0 * xi_unit) / scale
-    T, H, W = res_u.shape
-
-    def frame0(res_u0, res_v0):
-        xu = predictors.c2_block(res_u0, block)
-        xv = predictors.c2_block(res_v0, block)
-        return xu, xv
-
-    def step(carry, inp):
-        xu_p, xv_p = carry
-        ru, rv, bm = inp
-        xu3 = predictors.lorenzo_decode_frame(xu_p, ru, block)
-        xv3 = predictors.lorenzo_decode_frame(xv_p, rv, block)
-        pu, pv = predictors.sl_predict_frame(
-            xu_p, xv_p, g2f, cfl_x, cfl_y, d_max, n_max
-        )
-        xus = ru + pu
-        xvs = rv + pv
-        mask = jnp.repeat(jnp.repeat(bm, block, axis=0), block, axis=1)[:H, :W]
-        xu = jnp.where(mask, xus, xu3)
-        xv = jnp.where(mask, xvs, xv3)
-        return (xu, xv), (xu, xv)
-
-    xu0, xv0 = frame0(res_u[0], res_v[0])
-    (_, _), (xu_rest, xv_rest) = jax.lax.scan(
-        step, (xu0, xv0), (res_u[1:], res_v[1:], blockmap[1:])
-    )
-    xu = jnp.concatenate([xu0[None], xu_rest], axis=0)
-    xv = jnp.concatenate([xv0[None], xv_rest], axis=0)
-    return xu, xv
-
-
-_decode_fields_jit = jax.jit(
-    _decode_fields, static_argnums=(5, 8, 9), static_argnames=()
-)
-
-
-def _reconstruct(xu, xv, scale, xi_unit, lossless, u_raw, v_raw):
-    g = 2.0 * xi_unit
-    u_rec = (xu.astype(jnp.float64) * (g / scale)).astype(jnp.float32)
-    v_rec = (xv.astype(jnp.float64) * (g / scale)).astype(jnp.float32)
-    u_rec = jnp.where(lossless, u_raw, u_rec)
-    v_rec = jnp.where(lossless, v_raw, v_rec)
-    return u_rec, v_rec
-
-
-def _faces_to_vertex_mask(bad_slice, bad_slab, T, H, W):
-    """Mark all vertices of violated faces (vectorized scatter)."""
-    HW = H * W
-    mask = np.zeros(T * HW, dtype=bool)
-    slice_tab = grid.slab_faces(H, W)["slice0"]
-    slab_tab = ebound.slab_face_table(H, W)
-    t_ids, f_ids = np.nonzero(np.asarray(bad_slice))
-    if len(t_ids):
-        ids = slice_tab[f_ids].astype(np.int64) + t_ids[:, None] * HW
-        mask[ids.reshape(-1)] = True
-    t_ids, f_ids = np.nonzero(np.asarray(bad_slab))
-    if len(t_ids):
-        ids = slab_tab[f_ids].astype(np.int64) + t_ids[:, None] * HW
-        mask[ids.reshape(-1)] = True
-    return mask.reshape(T, H, W)
-
-
-# ----------------------------------------------------------------------
-# fused pipeline: device-resident verify rounds + parallel-in-time decode
-# ----------------------------------------------------------------------
-
-def _decode_fields_parallel(res_u, res_v, blockmap, scale, xi_unit, block,
-                            stepper):
-    """Parallel-in-time decode shared by the verify simulation and
-    decompress (one implementation => bitwise-consistent guarantees).
-
-    ``blockmap`` is a HOST bool array (T, nbi, nbj): maximal runs of
-    frames with no SL tile satisfy X_t = X_{t-1} + C2(res_t), a prefix
-    sum decoded with one cumsum over time; only frames containing SL
-    tiles step through the shared SL ``stepper`` executable.
-    """
-    res_u = jnp.asarray(res_u)
-    res_v = jnp.asarray(res_v)
-    bm = np.asarray(blockmap)
-    T, H, W = res_u.shape
-    g2f = (2.0 * xi_unit) / scale
-    c2u = predictors.c2_block(res_u, block)   # every frame, in parallel
-    c2v = predictors.c2_block(res_v, block)
-    any_sl = bm.reshape(T, -1).any(axis=1)
-    any_sl[0] = False                          # frame 0 is spatial-only
-    if not any_sl.any():
-        return jnp.cumsum(c2u, axis=0), jnp.cumsum(c2v, axis=0)
-    Su = jnp.cumsum(c2u, axis=0)
-    Sv = jnp.cumsum(c2v, axis=0)
-    mask_rep = np.repeat(np.repeat(bm, block, axis=1), block, axis=2)[:, :H, :W]
-
-    us, vs = [], []
-    prev_u = prev_v = None
-    cur = 0
-    for t in np.flatnonzero(any_sl):
-        t = int(t)
-        if t > cur:
-            if cur == 0:
-                seg_u, seg_v = Su[:t], Sv[:t]
-            else:
-                seg_u = (prev_u - Su[cur - 1])[None] + Su[cur:t]
-                seg_v = (prev_v - Sv[cur - 1])[None] + Sv[cur:t]
-            us.append(seg_u)
-            vs.append(seg_v)
-            prev_u, prev_v = seg_u[-1], seg_v[-1]
-        pu, pv = stepper(prev_u, prev_v, g2f)
-        m = jnp.asarray(mask_rep[t])
-        xu_t = jnp.where(m, res_u[t] + pu, prev_u + c2u[t])
-        xv_t = jnp.where(m, res_v[t] + pv, prev_v + c2v[t])
-        us.append(xu_t[None])
-        vs.append(xv_t[None])
-        prev_u, prev_v = xu_t, xv_t
-        cur = t + 1
-    if cur < T:
-        us.append((prev_u - Su[cur - 1])[None] + Su[cur:])
-        vs.append((prev_v - Sv[cur - 1])[None] + Sv[cur:])
-    return jnp.concatenate(us, axis=0), jnp.concatenate(vs, axis=0)
-
-
-class _FusedFns:
-    """Jitted stages of the fused pipeline for one static configuration
-    (shape x block x n_levels x predictor x backend); cached below.
-
-    ``be_lorenzo`` routes only the Lorenzo-residual op: the pallas
-    kernel computes in int32 (|residual| <= 2^32 / xi_unit worst case),
-    so callers demote it to xla when xi_unit < 4 keeps no headroom.
-    """
-
-    def __init__(self, shape, block, n_levels, predictor, be,
-                 be_lorenzo=None):
-        self.shape = shape
-        self.block = block
-        self.n_levels = n_levels
-        self.predictor = predictor
-        self.be = be
-        self.be_lorenzo = be if be_lorenzo is None else be_lorenzo
-        T, H, W = shape
-        self.nb = (-(-H // block), -(-W // block))
-        sf = grid.slab_faces(H, W)
-        self._slice_tab = jnp.asarray(sf["slice0"])
-        self._slab_tab = jnp.asarray(ebound.slab_face_table(H, W))
-        jit = (lambda f, **kw: f) if be == "numpy" else jax.jit
-
-        self.lorenzo_stage = jit(self._lorenzo_stage)
-        self.quant_stage = jit(self._quant_stage)
-        self.sl_stage = jit(self._sl_stage)
-        self.mop_stage = jit(self._mop_stage)
-        self.screen_unsafe = jit(self._screen_unsafe)
-        self.check_pt = jit(self._check_pt)
-        self.face_subset = jit(self._face_subset)
-
-    # ---- encode stages
-
-    def _quant_stage(self, ufp, vfp, eb_vertex, lossless_extra, xi_unit):
-        k, lossless = quantize.quantize_eb(eb_vertex, xi_unit, self.n_levels)
-        lossless = jnp.logical_or(lossless, lossless_extra)
-        k = jnp.where(lossless_extra, -1, k)
-        xu = quantize.dual_quantize(ufp, k, lossless, xi_unit)
-        xv = quantize.dual_quantize(vfp, k, lossless, xi_unit)
-        return xu, xv, k, lossless
-
-    def _lorenzo_stage(self, ufp, vfp, eb_vertex, lossless_extra, xi_unit):
-        """Pure-Lorenzo encode: the fused dualquant+residual op, no X
-        materialization."""
-        k, lossless = quantize.quantize_eb(eb_vertex, xi_unit, self.n_levels)
-        lossless = jnp.logical_or(lossless, lossless_extra)
-        k = jnp.where(lossless_extra, -1, k)
-        res_u = backend_mod.lorenzo_residual(
-            ufp, k, lossless, xi_unit, self.block, self.be_lorenzo)
-        res_v = backend_mod.lorenzo_residual(
-            vfp, k, lossless, xi_unit, self.block, self.be_lorenzo)
-        return res_u, res_v, lossless
-
-    def _sl_stage(self, xu, xv, pu, pv):
-        res_u = jnp.concatenate(
-            [predictors.d2_block(xu[:1], self.block), xu[1:] - pu], axis=0)
-        res_v = jnp.concatenate(
-            [predictors.d2_block(xv[:1], self.block), xv[1:] - pv], axis=0)
-        return res_u, res_v
-
-    def _mop_stage(self, ufp, vfp, k, lossless, xu, xv, pu, pv, xi_unit):
-        res3_u = backend_mod.lorenzo_residual(
-            ufp, k, lossless, xi_unit, self.block, self.be_lorenzo, x=xu)
-        res3_v = backend_mod.lorenzo_residual(
-            vfp, k, lossless, xi_unit, self.block, self.be_lorenzo, x=xv)
-        zero = jnp.zeros_like(xu[:1])
-        ressl_u = jnp.concatenate([zero, xu[1:] - pu], axis=0)
-        ressl_v = jnp.concatenate([zero, xv[1:] - pv], axis=0)
-        res3_u = jnp.asarray(res3_u)
-        res3_v = jnp.asarray(res3_v)
-        bm = mop.select(res3_u, res3_v, ressl_u, ressl_v, self.block)
-        res_u = mop.assemble(res3_u, ressl_u, bm, self.block)
-        res_v = mop.assemble(res3_v, ressl_v, bm, self.block)
-        return res_u, res_v, bm
-
-    # ---- verify stages
-
-    def _recon_refix(self, xu_d, xv_d, lossless, u_raw, v_raw, scale,
-                     xi_unit, eb_abs):
-        u_rec, v_rec = _reconstruct(xu_d, xv_d, scale, xi_unit, lossless,
-                                    u_raw, v_raw)
-        ur_fp = jnp.round(u_rec.astype(jnp.float64) * scale).astype(jnp.int64)
-        vr_fp = jnp.round(v_rec.astype(jnp.float64) * scale).astype(jnp.int64)
-        err = jnp.maximum(
-            jnp.abs(u_rec.astype(jnp.float64) - u_raw.astype(jnp.float64)),
-            jnp.abs(v_rec.astype(jnp.float64) - v_raw.astype(jnp.float64)),
-        )
-        bad_pt = err > eb_abs
-        return ur_fp, vr_fp, bad_pt
-
-    def _screen_unsafe(self, ufp, vfp, ur_fp, vr_fp):
-        """Faces whose predicate COULD have flipped (sound screen).
-
-        A face all of whose u-components (or all of whose v-components)
-        keep one strict sign in BOTH the original and the reconstruction
-        cannot be crossed in either (the convex hull stays off the
-        origin, SoS included), so its predicate is provably unchanged.
-        Only the remaining faces -- a thin band around the zero set --
-        need the exact SoS evaluation.  Pure boolean gathers: no int64
-        products.
-        """
-        T, H, W = self.shape
-        HW = H * W
-        masks = []
-        for o, r in ((ufp, ur_fp), (vfp, vr_fp)):
-            masks.append(((o > 0) & (r > 0)).reshape(T, HW))
-            masks.append(((o < 0) & (r < 0)).reshape(T, HW))
-
-        def face_all(m, tab):
-            return m[:, tab[:, 0]] & m[:, tab[:, 1]] & m[:, tab[:, 2]]
-
-        def unsafe(window):
-            pu, nu, pv, nv = (face_all(m, tab) for m, tab in window)
-            return ~(pu | nu | pv | nv)
-
-        st = self._slice_tab
-        unsafe_slice = unsafe([(m, st) for m in masks])
-        bt = self._slab_tab
-        pair = [jnp.concatenate([m[:-1], m[1:]], axis=1) for m in masks]
-        unsafe_slab = unsafe([(m, bt) for m in pair])
-        return unsafe_slice, unsafe_slab
-
-    def _check_pt(self, xu_d, xv_d, lossless, lossless_extra, u_raw, v_raw,
-                  scale, xi_unit, eb_abs):
-        ur_fp, vr_fp, bad_pt = self._recon_refix(
-            xu_d, xv_d, lossless, u_raw, v_raw, scale, xi_unit, eb_abs)
-        forced = lossless_extra | bad_pt
-        return forced, jnp.asarray(bad_pt).sum(), ur_fp, vr_fp
-
-    def _face_subset(self, ur_flat, vr_flat, verts):
-        """Predicates for an explicit face subset (incremental rounds)."""
-        T, H, W = self.shape
-        fu = ur_flat[verts]
-        fv = vr_flat[verts]
-        return backend_mod.face_crossed(
-            fu, fv, verts.astype(jnp.int64), backend=self.be,
-            n_verts=T * H * W)
-
-
-# 64 entries: the tiled pipeline (core/tiling.py) requests one per
-# distinct tile extension AND owned shape (edge/corner/interior tiles x
-# first/middle/tail windows) on top of the monolithic shapes; a smaller
-# cache would evict live entries and silently recompile every round
-@functools.lru_cache(maxsize=64)
-def _fused_fns(shape, block, n_levels, predictor, be, be_lorenzo=None):
-    return _FusedFns(shape, block, n_levels, predictor, be, be_lorenzo)
-
-
-def _face_verts(ts, fs, tb, fb, H, W):
-    """Global vertex-id triples for explicit (slice, slab) face indices."""
-    HW = H * W
-    slice_tab = grid.slab_faces(H, W)["slice0"]
-    slab_tab = ebound.slab_face_table(H, W)
-    return np.concatenate([
-        slice_tab[fs].astype(np.int64) + ts[:, None] * HW,
-        slab_tab[fb].astype(np.int64) + tb[:, None] * HW,
-    ], axis=0)
-
-
-def _touched_faces(delta_np, T, H, W):
-    """Faces incident to newly-forced vertices -> (verts (N,3) global
-    ids, slice_sel, slab_sel index arrays)."""
-    HW = H * W
-    slice_tab = grid.slab_faces(H, W)["slice0"]
-    slab_tab = ebound.slab_face_table(H, W)
-    d2 = delta_np.reshape(T, HW)
-    t_slice = (d2[:, slice_tab[:, 0]] | d2[:, slice_tab[:, 1]]
-               | d2[:, slice_tab[:, 2]])
-    pair = np.concatenate([d2[:-1], d2[1:]], axis=1)
-    t_slab = (pair[:, slab_tab[:, 0]] | pair[:, slab_tab[:, 1]]
-              | pair[:, slab_tab[:, 2]])
-    ts, fs = np.nonzero(t_slice)
-    tb, fb = np.nonzero(t_slab)
-    return _face_verts(ts, fs, tb, fb, H, W), (ts, fs), (tb, fb)
-
-
-def _compress_fused(u, v, cfg: CompressionConfig, be: str):
-    t0 = time.perf_counter()
-    u, v = _as_fields(u, v)
-    T, H, W = u.shape
-    eb_abs = _abs_eb(u, v, cfg)
-    scale, ufp, vfp = fixedpoint.to_fixed(u, v, cfg.fixed_bits)
-    tau = max(int(np.floor(eb_abs * scale)), 0)
-    xi_unit, n_usable = quantize.ladder(tau, cfg.n_levels)
-    cfl_x = cfg.dt / cfg.dx
-    cfl_y = cfg.dt / cfg.dy
-    g2f = (2.0 * xi_unit) / scale
-
-    # the pallas Lorenzo kernel is int32; at xi_unit < 4 a worst-case
-    # residual (8 * 2^29 / xi_unit) could wrap, so demote that op to xla
-    be_lorenzo = "xla" if (be == "pallas" and xi_unit < 4) else be
-    fns = _fused_fns((T, H, W), cfg.block, cfg.n_levels, cfg.predictor, be,
-                     be_lorenzo)
-    stepper = backend_mod.sl_stepper(be, cfl_x, cfl_y, cfg.d_max, cfg.n_max)
-    nbi, nbj = fns.nb
-
-    ufp_j = jnp.asarray(ufp)
-    vfp_j = jnp.asarray(vfp)
-    u_j = jnp.asarray(u)
-    v_j = jnp.asarray(v)
-    # eb derivation evaluates every face's SoS predicate along the way
-    # (the crossed-face zeroing); reuse those instead of a second full
-    # predicate pass over the original field (the seed paid it twice)
-    eb_vertex, slice_pred0, slab_pred0 = _derive_eb_jit(
-        ufp_j, vfp_j, int(max(tau, 1)))
-
-    lossless_extra = jnp.zeros((T, H, W), dtype=bool)
-    if tau < 1 or n_usable < 1:
-        lossless_extra = jnp.ones((T, H, W), dtype=bool)
-
-    slice0_np = slab0_np = None   # host copies, fetched once if needed
-    rounds = 0
-    stats_rounds = []
-    prev_extra = None
-    while True:
-        # ---- encode (jitted stages; device-resident)
-        if cfg.predictor == "lorenzo":
-            res_u, res_v, lossless = fns.lorenzo_stage(
-                ufp_j, vfp_j, eb_vertex, lossless_extra, xi_unit)
-            bm = np.zeros((T, nbi, nbj), dtype=bool)
-        else:
-            xu, xv, k, lossless = fns.quant_stage(
-                ufp_j, vfp_j, eb_vertex, lossless_extra, xi_unit)
-            pu, pv = backend_mod.sl_predictions(xu, xv, g2f, stepper)
-            if cfg.predictor == "sl":
-                res_u, res_v = fns.sl_stage(xu, xv, pu, pv)
-                bm = np.ones((T, nbi, nbj), dtype=bool)
-                bm[0] = False
-            else:
-                res_u, res_v, bm_dev = fns.mop_stage(
-                    ufp_j, vfp_j, k, lossless, xu, xv, pu, pv, xi_unit)
-                bm = np.asarray(bm_dev)
-
-        if not cfg.verify:
-            break
-
-        # ---- simulate the exact decode (same code as decompress)
-        xu_d, xv_d = _decode_fields_parallel(
-            res_u, res_v, bm, scale, xi_unit, cfg.block, stepper)
-
-        # pointwise bound + reconstruction refix, device-resident
-        forced, n_pt, ur_fp, vr_fp = fns.check_pt(
-            xu_d, xv_d, lossless, lossless_extra, u_j, v_j,
-            scale, xi_unit, eb_abs)
-        n_bad = int(n_pt)
-
-        # face predicates are re-evaluated only where they could have
-        # changed: round 0 uses the sign-stability screen (a thin band
-        # around the zero set); later rounds only faces incident to
-        # newly-forced vertices, since the reconstruction changed only
-        # there (#3.5).
-        if prev_extra is None:
-            unsafe_sl, unsafe_sb = fns.screen_unsafe(
-                ufp_j, vfp_j, ur_fp, vr_fp)
-            ts, fs = np.nonzero(np.asarray(unsafe_sl))
-            tb, fb = np.nonzero(np.asarray(unsafe_sb))
-            verts = _face_verts(ts, fs, tb, fb, H, W)
-        else:
-            delta_np = np.asarray(lossless_extra ^ prev_extra)
-            verts, (ts, fs), (tb, fb) = _touched_faces(delta_np, T, H, W)
-        if len(verts):
-            if slice0_np is None:
-                slice0_np = np.asarray(slice_pred0)
-                slab0_np = np.asarray(slab_pred0)
-            orig = np.concatenate([slice0_np[ts, fs], slab0_np[tb, fb]])
-            B = max(8, 1 << (len(verts) - 1).bit_length())
-            verts_p = np.concatenate([
-                verts,
-                np.tile(np.array([[0, 1, 2]], np.int64),
-                        (B - len(verts), 1)),
-            ], axis=0)
-            crossed = np.asarray(fns.face_subset(
-                ur_fp.reshape(-1), vr_fp.reshape(-1),
-                jnp.asarray(verts_p)))[: len(verts)]
-            bad = crossed != orig
-            n_bad += int(bad.sum())
-            if bad.any():
-                add = np.zeros(T * H * W, dtype=bool)
-                add[verts[bad].reshape(-1)] = True
-                forced = forced | jnp.asarray(add.reshape(T, H, W))
-
-        stats_rounds.append(n_bad)
-        if n_bad == 0 or rounds >= cfg.max_rounds:
-            break
-        prev_extra = lossless_extra
-        lossless_extra = forced
-        rounds += 1
-
-    sym_u, esc_u = encode.to_symbols(np.asarray(res_u))
-    sym_v, esc_v = encode.to_symbols(np.asarray(res_v))
-    lossless_np = np.asarray(lossless)
-    u_ll = u[lossless_np]
-    v_ll = v[lossless_np]
-
-    header = {
-        "version": FORMAT_VERSION,
-        "pipeline": "fused",
-        "sl_backend": be,
-        "shape": [int(T), int(H), int(W)],
-        "scale": float(scale),
-        "xi_unit": int(xi_unit),
-        "block": int(cfg.block),
-        "cfl_x": float(cfl_x),
-        "cfl_y": float(cfl_y),
-        "d_max": float(cfg.d_max),
-        "n_max": int(cfg.n_max),
-        "eb_abs": float(eb_abs),
-    }
-    sections = {
-        "sym_u": sym_u,
-        "sym_v": sym_v,
-        "esc_u": esc_u,
-        "esc_v": esc_v,
-        "lossless": np.packbits(lossless_np),
-        "u_ll": u_ll,
-        "v_ll": v_ll,
-        "blockmap": np.packbits(np.asarray(bm)),
-        "bm_shape": np.asarray(bm.shape, dtype=np.int32),
-    }
-    blob = encode.pack(header, sections, cfg.zstd_level)
-    t1 = time.perf_counter()
-    orig_bytes = u.nbytes + v.nbytes
-    stats = {
-        "orig_bytes": orig_bytes,
-        "comp_bytes": len(blob),
-        "ratio": orig_bytes / max(len(blob), 1),
-        "lossless_frac": float(lossless_np.mean()),
-        "sl_block_frac": float(np.asarray(bm).mean()),
-        "verify_rounds": rounds,
-        "verify_bad_counts": stats_rounds,
-        "eb_abs": eb_abs,
-        "scale": scale,
-        "tau": tau,
-        "xi_unit": xi_unit,
-        "seconds": t1 - t0,
-        "backend": be,
-        "pipeline": "fused",
-    }
-    return blob, stats
-
-
-# ----------------------------------------------------------------------
-# legacy (seed) pipeline -- kept for A/B benchmarking
-# ----------------------------------------------------------------------
-
-def _compress_legacy(u, v, cfg: CompressionConfig):
-    t0 = time.perf_counter()
-    u, v = _as_fields(u, v)
-    T, H, W = u.shape
-    eb_abs = _abs_eb(u, v, cfg)
-    scale, ufp, vfp = fixedpoint.to_fixed(u, v, cfg.fixed_bits)
-    tau = max(int(np.floor(eb_abs * scale)), 0)
-    xi_unit, n_usable = quantize.ladder(tau, cfg.n_levels)
-
-    ufp_j = jnp.asarray(ufp)
-    vfp_j = jnp.asarray(vfp)
-    slice_pred0, slab_pred0 = _predicates(ufp_j, vfp_j)
-
-    lossless_extra = jnp.zeros((T, H, W), dtype=bool)
-    if tau < 1 or n_usable < 1:
-        lossless_extra = jnp.ones((T, H, W), dtype=bool)
-
-    cfl_x = cfg.dt / cfg.dx
-    cfl_y = cfg.dt / cfg.dy
-
-    eb_vertex, _, _ = _derive_eb_jit(ufp_j, vfp_j, int(max(tau, 1)))
-
-    rounds = 0
-    stats_rounds = []
-    while True:
-        xu, xv, lossless = _encode_stage(
-            ufp_j, vfp_j, eb_vertex, xi_unit, cfg.n_levels, lossless_extra, cfg
-        )
-        res_u, res_v, blockmap = _residuals(xu, xv, scale, xi_unit, cfg)
-
-        if not cfg.verify:
-            break
-        # simulate the exact decode
-        xu_d, xv_d = _decode_fields_jit(
-            res_u, res_v, blockmap, scale, xi_unit, cfg.block,
-            cfl_x, cfl_y, cfg.d_max, cfg.n_max,
-        )
-        u_rec, v_rec = _reconstruct(
-            xu_d, xv_d, scale, xi_unit, lossless, jnp.asarray(u), jnp.asarray(v)
-        )
-        # end-to-end predicate check on the refixed reconstruction
-        ur_fp, vr_fp = fixedpoint.refix(np.asarray(u_rec), np.asarray(v_rec), scale)
-        slice_pred1, slab_pred1 = _predicates(jnp.asarray(ur_fp), jnp.asarray(vr_fp))
-        bad_slice = np.asarray(slice_pred0 ^ slice_pred1)
-        bad_slab = np.asarray(slab_pred0 ^ slab_pred1)
-        # pointwise bound check (float32 output, strict)
-        err = np.maximum(
-            np.abs(np.asarray(u_rec, dtype=np.float64) - u.astype(np.float64)),
-            np.abs(np.asarray(v_rec, dtype=np.float64) - v.astype(np.float64)),
-        )
-        bad_pt = err > eb_abs
-
-        n_bad = int(bad_slice.sum()) + int(bad_slab.sum()) + int(bad_pt.sum())
-        stats_rounds.append(n_bad)
-        if n_bad == 0 or rounds >= cfg.max_rounds:
-            break
-        extra = np.asarray(lossless_extra).copy()
-        extra |= bad_pt
-        extra |= _faces_to_vertex_mask(bad_slice, bad_slab, T, H, W)
-        lossless_extra = jnp.asarray(extra)
-        rounds += 1
-
-    sym_u, esc_u = encode.to_symbols(np.asarray(res_u))
-    sym_v, esc_v = encode.to_symbols(np.asarray(res_v))
-    lossless_np = np.asarray(lossless)
-    u_ll = u[lossless_np]
-    v_ll = v[lossless_np]
-
-    header = {
-        "version": FORMAT_VERSION,
-        "pipeline": "legacy",
-        "shape": [int(T), int(H), int(W)],
-        "scale": float(scale),
-        "xi_unit": int(xi_unit),
-        "block": int(cfg.block),
-        "cfl_x": float(cfl_x),
-        "cfl_y": float(cfl_y),
-        "d_max": float(cfg.d_max),
-        "n_max": int(cfg.n_max),
-        "eb_abs": float(eb_abs),
-    }
-    sections = {
-        "sym_u": sym_u,
-        "sym_v": sym_v,
-        "esc_u": esc_u,
-        "esc_v": esc_v,
-        "lossless": np.packbits(lossless_np),
-        "u_ll": u_ll,
-        "v_ll": v_ll,
-        "blockmap": np.packbits(np.asarray(blockmap)),
-        "bm_shape": np.asarray(blockmap.shape, dtype=np.int32),
-    }
-    blob = encode.pack(header, sections, cfg.zstd_level)
-    t1 = time.perf_counter()
-    orig_bytes = u.nbytes + v.nbytes
-    stats = {
-        "orig_bytes": orig_bytes,
-        "comp_bytes": len(blob),
-        "ratio": orig_bytes / max(len(blob), 1),
-        "lossless_frac": float(lossless_np.mean()),
-        "sl_block_frac": float(np.asarray(blockmap).mean()),
-        "verify_rounds": rounds,
-        "verify_bad_counts": stats_rounds,
-        "eb_abs": eb_abs,
-        "scale": scale,
-        "tau": tau,
-        "xi_unit": xi_unit,
-        "seconds": t1 - t0,
-        "backend": "xla",
-        "pipeline": "legacy",
-    }
-    return blob, stats
+    """Legacy predict binding (full residual stacks)."""
+    return pipeline.legacy_residuals(
+        xu, xv, scale, xi_unit, cfg.predictor, cfg.block,
+        cfg.dt / cfg.dx, cfg.dt / cfg.dy, cfg.d_max, cfg.n_max)
 
 
 # ----------------------------------------------------------------------
 # public API
 # ----------------------------------------------------------------------
 
-def compress(u, v, cfg: CompressionConfig = CompressionConfig()):
+def compress(u, v, cfg: Optional[CompressionConfig] = None):
+    # default is constructed per call: a module-level default instance
+    # would be shared (and mutable) across every caller
+    if cfg is None:
+        cfg = CompressionConfig()
     if cfg.tiling is not None:
         from . import tiling
         return tiling.compress_tiled(u, v, cfg, cfg.tiling)
     fused = perfflags.fused_default() if cfg.fused is None else cfg.fused
-    if not fused:
-        return _compress_legacy(u, v, cfg)
-    be = backend_mod.resolve(cfg.backend)
-    return _compress_fused(u, v, cfg, be)
+    name = "fused" if fused else "legacy"
+    be = backend_mod.resolve(cfg.backend) if fused else "xla"
+
+    t0 = time.perf_counter()
+    u, v = _as_fields(u, v)
+    eb_abs = _abs_eb(u, v, cfg)
+    scale, ufp, vfp = fixedpoint.to_fixed(u, v, cfg.fixed_bits)
+    plan = pipeline.plan_from_cfg(cfg, be, scale, eb_abs, name)
+    ex = pipeline.PlanExecutor(plan)
+    enc = pipeline.compress_field(ex, u, v, ufp, vfp)
+    return pipeline.pack_field(ex, u, v, enc, t0)
 
 
 def decompress(blob: bytes, backend: Optional[str] = None):
@@ -768,45 +162,5 @@ def decompress(blob: bytes, backend: Optional[str] = None):
         raise ValueError(
             f"container format version {version} is newer than this "
             f"decoder (supports <= {FORMAT_VERSION})")
-    T, H, W = header["shape"]
-    res_u = encode.from_symbols(sections["sym_u"], sections["esc_u"], (T, H, W))
-    res_v = encode.from_symbols(sections["sym_v"], sections["esc_v"], (T, H, W))
-    bm_shape = tuple(int(x) for x in sections["bm_shape"])
-    n_bm = int(np.prod(bm_shape))
-    blockmap = np.unpackbits(sections["blockmap"], count=n_bm).astype(bool)
-    blockmap = blockmap.reshape(bm_shape)
-    lossless = np.unpackbits(sections["lossless"], count=T * H * W).astype(bool)
-    lossless = lossless.reshape(T, H, W)
-
-    if header.get("pipeline", "legacy") == "fused":
-        # replay the SL predictions through the stepper executable the
-        # encoder verified with (backend recorded in the header)
-        be = backend_mod.resolve(backend or header.get("sl_backend"))
-        stepper = backend_mod.sl_stepper(
-            be, header["cfl_x"], header["cfl_y"],
-            header["d_max"], header["n_max"])
-        xu, xv = _decode_fields_parallel(
-            jnp.asarray(res_u), jnp.asarray(res_v), blockmap,
-            header["scale"], header["xi_unit"], header["block"], stepper)
-    else:
-        xu, xv = _decode_fields_jit(
-            jnp.asarray(res_u),
-            jnp.asarray(res_v),
-            jnp.asarray(blockmap),
-            header["scale"],
-            header["xi_unit"],
-            header["block"],
-            header["cfl_x"],
-            header["cfl_y"],
-            header["d_max"],
-            header["n_max"],
-        )
-    u_raw = np.zeros((T, H, W), dtype=np.float32)
-    v_raw = np.zeros((T, H, W), dtype=np.float32)
-    u_raw[lossless] = sections["u_ll"]
-    v_raw[lossless] = sections["v_ll"]
-    u_rec, v_rec = _reconstruct(
-        xu, xv, header["scale"], header["xi_unit"],
-        jnp.asarray(lossless), jnp.asarray(u_raw), jnp.asarray(v_raw),
-    )
-    return np.asarray(u_rec), np.asarray(v_rec)
+    ex = pipeline.executor_from_header(header, backend)
+    return pipeline.decode_field_blob(ex, header, sections)

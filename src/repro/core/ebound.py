@@ -313,7 +313,11 @@ def all_face_predicates(ufp, vfp, be: str = "xla"):
     return slice_pred, slab_pred
 
 
+@lru_cache(maxsize=32)
 def slab_face_table(H, W):
-    """(Fb, 3) int32 side+internal face table (local 2-plane ids)."""
+    """(Fb, 3) int32 side+internal face table (local 2-plane ids).
+
+    Cached: the concatenation is rebuilt for every verify round and every
+    tile geometry otherwise (the table is static per (H, W))."""
     sf = grid.slab_faces(H, W)
     return np.concatenate([sf["side"], sf["internal"]], axis=0)

@@ -97,6 +97,46 @@ def from_symbols(sym, escapes, shape):
 
 
 # ----------------------------------------------------------------------
+# field payload sections (shared by monolithic blobs and tiled units)
+# ----------------------------------------------------------------------
+
+def field_sections(res_u, res_v, lossless_np, u_ll, v_ll, bm) -> dict:
+    """Symbolize one field payload (a full field or one tiled unit) into
+    the canonical section dict -- the single place the section schema is
+    assembled (core/pipeline.py routes every path through it)."""
+    sym_u, esc_u = to_symbols(np.asarray(res_u))
+    sym_v, esc_v = to_symbols(np.asarray(res_v))
+    bm = np.asarray(bm)
+    return {
+        "sym_u": sym_u,
+        "sym_v": sym_v,
+        "esc_u": esc_u,
+        "esc_v": esc_v,
+        "lossless": np.packbits(lossless_np),
+        "u_ll": np.asarray(u_ll),
+        "v_ll": np.asarray(v_ll),
+        "blockmap": np.packbits(bm),
+        "bm_shape": np.asarray(bm.shape, dtype=np.int32),
+    }
+
+
+def parse_field_sections(sections: dict, shape):
+    """Inverse of field_sections (minus the lossless raw values, which
+    the caller scatters): -> (res_u, res_v, blockmap, lossless)."""
+    T, H, W = shape
+    res_u = from_symbols(sections["sym_u"], sections["esc_u"], shape)
+    res_v = from_symbols(sections["sym_v"], sections["esc_v"], shape)
+    bm_shape = tuple(int(x) for x in sections["bm_shape"])
+    n_bm = int(np.prod(bm_shape))
+    blockmap = np.unpackbits(sections["blockmap"], count=n_bm).astype(bool)
+    blockmap = blockmap.reshape(bm_shape)
+    lossless = np.unpackbits(sections["lossless"],
+                             count=T * H * W).astype(bool)
+    lossless = lossless.reshape(shape)
+    return res_u, res_v, blockmap, lossless
+
+
+# ----------------------------------------------------------------------
 # canonical Huffman (reference entropy coder)
 # ----------------------------------------------------------------------
 

@@ -66,11 +66,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import backend as backend_mod
-from . import compressor, ebound, encode, fixedpoint, quantize, sos
+from . import compressor, ebound, encode, fixedpoint, pipeline, sos
 from . import grid as mesh
 
 TILED_FORMAT_VERSION = 3
 _EB_BIG = np.int64(2**62)
+# batched unit execution: cap the stacked batch (with pow2 padding this
+# bounds both peak memory and the number of compiled batch sizes)
+_BATCH_CAP = 8
 
 
 class StreamingCascadeError(RuntimeError):
@@ -220,6 +223,7 @@ class _Planes:
 class _State:
     cfg: object
     grid: TileGrid
+    ex: object                      # pipeline.PlanExecutor (stage impls)
     be: str
     H: int
     W: int
@@ -270,12 +274,9 @@ def _init_state(cfg, grid: TileGrid, H, W, vrange, sink):
         eb_abs = float(cfg.eb) * max(rng, 1e-30)
     max_abs = max(abs(lo), abs(hi), 1e-300)
     scale = fixedpoint.compute_scale(max_abs, cfg.fixed_bits)
-    tau = max(int(np.floor(eb_abs * scale)), 0)
-    xi_unit, n_usable = quantize.ladder(tau, cfg.n_levels)
-    cfl_x = cfg.dt / cfg.dx
-    cfl_y = cfg.dt / cfg.dy
-    stepper = backend_mod.sl_stepper(be, cfl_x, cfl_y, cfg.d_max, cfg.n_max)
-    all_ll = tau < 1 or n_usable < 1
+    plan = pipeline.plan_from_cfg(cfg, be, scale, eb_abs, name="tiled")
+    ex = pipeline.PlanExecutor(plan)
+    all_ll = plan.tau < 1 or plan.n_usable < 1
     tindex = None
     if getattr(cfg, "track_index", True):
         from ..analysis.index import TrackIndexBuilder
@@ -283,9 +284,10 @@ def _init_state(cfg, grid: TileGrid, H, W, vrange, sink):
         tindex = TrackIndexBuilder(grid, be)
     return _State(
         tindex=tindex,
-        cfg=cfg, grid=grid, be=be, H=H, W=W,
-        scale=scale, eb_abs=eb_abs, tau=tau, xi_unit=xi_unit,
-        n_usable=n_usable, g2f=(2.0 * xi_unit) / scale, stepper=stepper,
+        cfg=cfg, grid=grid, ex=ex, be=be, H=H, W=W,
+        scale=plan.scale, eb_abs=plan.eb_abs, tau=plan.tau,
+        xi_unit=plan.xi_unit, n_usable=plan.n_usable, g2f=plan.g2f,
+        stepper=ex.stepper,
         u=_Planes(H, W, np.float32, 0.0),
         v=_Planes(H, W, np.float32, 0.0),
         ufp=_Planes(H, W, np.int64, 0),
@@ -308,10 +310,17 @@ def _add_frame(st: _State, t, u_t, v_t):
 
 
 def _pick_fns(st: _State, shape):
-    # same pallas int32-headroom demotion rule as the monolithic path
-    be_lz = "xla" if (st.be == "pallas" and st.xi_unit < 4) else st.be
-    return compressor._fused_fns(shape, st.cfg.block, st.cfg.n_levels,
-                                 st.cfg.predictor, st.be, be_lz)
+    # one keyed registry for every path (pipeline.unit_fns); the pallas
+    # int32-headroom demotion rule lives in the plan
+    return st.ex.fns(shape)
+
+
+def _sig(spec: TileSpec):
+    """Batching signature: units sharing it stack through one vmapped
+    executable set (pipeline.BatchFns)."""
+    return pipeline.unit_signature(
+        spec.ext_shape, spec.owned_shape,
+        (spec.t0 - spec.et0, spec.i0 - spec.ei0, spec.j0 - spec.ej0))
 
 
 @functools.lru_cache(maxsize=8)
@@ -350,54 +359,15 @@ def _derive_window(st: _State, w):
 # per-tile encode + verify round
 # ----------------------------------------------------------------------
 
-def _unit_streams(st: _State, fns_o, ufp_o, vfp_o, k_o, ll_o, xu_o, xv_o):
-    """Residual streams of one unit (the bytes that get stored).
-
-    The temporal predictor restarts at the unit's first frame and the SL
-    backtrace runs on the unit's own planes (tile-local), so decode of a
-    unit touches nothing outside it.  Residual blocking cannot change
-    the decoded X (exact integer inverses), so this stays bit-compatible
-    with the monolithic output.
-    """
-    cfg = st.cfg
-    To, ho, wo = xu_o.shape
-    nbi, nbj = fns_o.nb
-    if cfg.predictor == "lorenzo":
-        res_u = backend_mod.lorenzo_residual(
-            ufp_o, k_o, ll_o, st.xi_unit, cfg.block, fns_o.be_lorenzo,
-            x=xu_o)
-        res_v = backend_mod.lorenzo_residual(
-            vfp_o, k_o, ll_o, st.xi_unit, cfg.block, fns_o.be_lorenzo,
-            x=xv_o)
-        return res_u, res_v, np.zeros((To, nbi, nbj), dtype=bool)
-    if To > 1:
-        pu, pv = backend_mod.sl_predictions(xu_o, xv_o, st.g2f, st.stepper)
-    else:
-        pu = pv = jnp.zeros((0, ho, wo), jnp.int64)
-    if cfg.predictor == "sl":
-        res_u, res_v = fns_o.sl_stage(xu_o, xv_o, pu, pv)
-        bm = np.ones((To, nbi, nbj), dtype=bool)
-        bm[0] = False
-        return res_u, res_v, bm
-    res_u, res_v, bm_dev = fns_o.mop_stage(
-        ufp_o, vfp_o, k_o, ll_o, xu_o, xv_o, pu, pv, st.xi_unit)
-    return res_u, res_v, np.asarray(bm_dev)
-
-
 def _quant_and_streams(st: _State, spec: TileSpec):
-    """Quantize the halo extension + build the unit's residual streams."""
-    fns_e = _pick_fns(st, spec.ext_shape)
-    ufp_e = jnp.asarray(st.ufp.box(spec.ext_box))
-    vfp_e = jnp.asarray(st.vfp.box(spec.ext_box))
-    eb_e = jnp.asarray(st.eb.box(spec.ext_box))
-    extra_e = jnp.asarray(st.forced.box(spec.ext_box))
-    xu_e, xv_e, k_e, ll_e = fns_e.quant_stage(
-        ufp_e, vfp_e, eb_e, extra_e, st.xi_unit)
-    o = spec.owned_in_ext
-    fns_o = _pick_fns(st, spec.owned_shape)
-    res_u, res_v, bm = _unit_streams(
-        st, fns_o, ufp_e[o], vfp_e[o], k_e[o], ll_e[o], xu_e[o], xv_e[o])
-    return fns_e, ufp_e, vfp_e, extra_e, xu_e, xv_e, ll_e, res_u, res_v, bm
+    """Quantize the halo extension + build the unit's residual streams
+    (sequential per-unit emission path; the batched path is
+    _encode_group).  Returns only what emission reads."""
+    _, _, ll_e, res_u, res_v, bm = st.ex.encode_unit(
+        st.ufp.box(spec.ext_box), st.vfp.box(spec.ext_box),
+        st.eb.box(spec.ext_box), st.forced.box(spec.ext_box),
+        spec.owned_in_ext)
+    return ll_e, res_u, res_v, bm
 
 
 def _tile_round(st: _State, spec: TileSpec, delta):
@@ -409,12 +379,17 @@ def _tile_round(st: _State, spec: TileSpec, delta):
     (forced_ext bool, n_bad) with decisions bit-equal to the monolithic
     round restricted to this extension.
     """
-    (fns_e, ufp_e, vfp_e, extra_e, xu_e, xv_e, ll_e,
-     res_u, res_v, bm) = _quant_and_streams(st, spec)
+    # bind the extension boxes on device once; encode_unit and the
+    # checks below reuse them (jnp.asarray of a device array is free)
+    ufp_e = jnp.asarray(st.ufp.box(spec.ext_box))
+    vfp_e = jnp.asarray(st.vfp.box(spec.ext_box))
+    extra_e = jnp.asarray(st.forced.box(spec.ext_box))
+    xu_e, xv_e, ll_e, res_u, res_v, bm = st.ex.encode_unit(
+        ufp_e, vfp_e, st.eb.box(spec.ext_box), extra_e, spec.owned_in_ext)
+    fns_e = _pick_fns(st, spec.ext_shape)
     o = spec.owned_in_ext
     # simulate the unit's exact decode, paste into the extension
-    xu_d, xv_d = compressor._decode_fields_parallel(
-        res_u, res_v, bm, st.scale, st.xi_unit, st.cfg.block, st.stepper)
+    xu_d, xv_d = st.ex.decode_fields(res_u, res_v, bm)
     xu_sim = jnp.asarray(xu_e).at[o].set(xu_d)
     xv_sim = jnp.asarray(xv_e).at[o].set(xv_d)
     u_e = jnp.asarray(st.u.box(spec.ext_box))
@@ -424,34 +399,121 @@ def _tile_round(st: _State, spec: TileSpec, delta):
         st.scale, st.xi_unit, st.eb_abs)
     n_bad = int(n_pt)
     forced_np = np.asarray(forced)
-
-    Te, he, we = spec.ext_shape
-    if delta is None:
-        unsafe_sl, unsafe_sb = fns_e.screen_unsafe(ufp_e, vfp_e, ur_fp, vr_fp)
-        ts, fs = np.nonzero(np.asarray(unsafe_sl))
-        tb, fb = np.nonzero(np.asarray(unsafe_sb))
-        verts = compressor._face_verts(ts, fs, tb, fb, he, we)
-    else:
-        verts, (ts, fs), (tb, fb) = compressor._touched_faces(
-            delta, Te, he, we)
-    if len(verts):
-        slice0, slab0 = st.preds[spec.key]
-        orig = np.concatenate([slice0[ts, fs], slab0[tb, fb]])
-        B = max(8, 1 << (len(verts) - 1).bit_length())
-        verts_p = np.concatenate([
-            verts,
-            np.tile(np.array([[0, 1, 2]], np.int64), (B - len(verts), 1)),
-        ], axis=0)
-        crossed = np.asarray(fns_e.face_subset(
-            ur_fp.reshape(-1), vr_fp.reshape(-1),
-            jnp.asarray(verts_p)))[: len(verts)]
-        bad = crossed != orig
-        n_bad += int(bad.sum())
-        if bad.any():
-            flat = forced_np.reshape(-1).copy()
-            flat[verts[bad].reshape(-1)] = True
-            forced_np = flat.reshape(spec.ext_shape)
+    add, nf = pipeline.check_faces(
+        fns_e, spec.ext_shape, ufp_e, vfp_e, ur_fp, vr_fp,
+        st.preds[spec.key], delta)
+    n_bad += nf
+    if add is not None:
+        forced_np = forced_np | add
     return forced_np, n_bad
+
+
+# ----------------------------------------------------------------------
+# batched same-signature unit execution (pipeline.BatchFns)
+# ----------------------------------------------------------------------
+
+def _stack_boxes(st: _State, specs, planes):
+    return np.stack([planes.box(s.ext_box) for s in specs])
+
+
+def _encode_group(st: _State, specs):
+    """Batched encode of one same-signature spec group.  Returns
+    per-spec (xu_e, xv_e, ll_e, res_u, res_v, bm) tuples, byte-equal to
+    the sequential _quant_and_streams outputs (pipeline module doc)."""
+    sig = _sig(specs[0])
+    xu_e, xv_e, ll_e, res_u, res_v, bms = st.ex.encode_units(
+        sig, _stack_boxes(st, specs, st.ufp),
+        _stack_boxes(st, specs, st.vfp),
+        _stack_boxes(st, specs, st.eb),
+        _stack_boxes(st, specs, st.forced))
+    return [(xu_e[b], xv_e[b], ll_e[b], res_u[b], res_v[b], bms[b])
+            for b in range(len(specs))]
+
+
+def _round_group(st: _State, specs, deltas):
+    """Batched verify round over one same-signature spec group; the
+    face re-checks (variable-size selections) stay per-unit.  Returns
+    per-spec (forced_ext np bool, n_bad) -- decisions bit-equal to the
+    sequential _tile_round (pipeline module doc).
+
+    Each extension box is stacked and uploaded exactly ONCE per round;
+    encode, decode-sim, pointwise check and screen all reuse the bound
+    device stacks (the sequential path's no-re-upload rule, batched).
+    """
+    ex = st.ex
+    sig = _sig(specs[0])
+    bf = ex.batch_fns(sig)
+    ufp_es = jnp.asarray(_stack_boxes(st, specs, st.ufp))
+    vfp_es = jnp.asarray(_stack_boxes(st, specs, st.vfp))
+    extra_es = jnp.asarray(_stack_boxes(st, specs, st.forced))
+    xu_e, xv_e, ll_e, res_u, res_v, bms = ex.encode_units(
+        sig, ufp_es, vfp_es, _stack_boxes(st, specs, st.eb), extra_es)
+    xu_d, xv_d = ex.decode_units(bf, res_u, res_v, bms)
+    xu_sim, xv_sim = bf.paste(xu_e, xv_e, xu_d, xv_d)
+    u_es = jnp.asarray(_stack_boxes(st, specs, st.u))
+    v_es = jnp.asarray(_stack_boxes(st, specs, st.v))
+    (xu_p, xv_p, ll_p, ex_p, u_p, v_p), _ = pipeline._pad_pow2(
+        [xu_sim, xv_sim, ll_e, extra_es, u_es, v_es])
+    pb = xu_p.shape[0]
+    scales = jnp.full((pb,), st.scale, jnp.float64)
+    xis = jnp.full((pb,), st.xi_unit, jnp.int64)
+    ebs = jnp.full((pb,), st.eb_abs, jnp.float64)
+    forced_b, n_pt_b, ur_b, vr_b = bf.check_pt(
+        xu_p, xv_p, ll_p, ex_p, u_p, v_p, scales, xis, ebs)
+
+    screened = all(d is None for d in deltas)
+    if screened:
+        (ufp_p, vfp_p), _ = pipeline._pad_pow2([ufp_es, vfp_es])
+        unsafe_sl_b, unsafe_sb_b = bf.screen(ufp_p, vfp_p, ur_b, vr_b)
+
+    Te, he, we = specs[0].ext_shape
+    fns_e = _pick_fns(st, specs[0].ext_shape)
+    out = []
+    for b, (spec, delta) in enumerate(zip(specs, deltas)):
+        n_bad = int(n_pt_b[b])
+        forced_np = np.asarray(forced_b[b])
+        if delta is None:
+            selection = pipeline.screen_selection_from(
+                unsafe_sl_b[b], unsafe_sb_b[b], he, we)
+        else:
+            selection = pipeline._touched_faces(delta, Te, he, we)
+        add, nf = pipeline.face_recheck(
+            fns_e, spec.ext_shape, ur_b[b], vr_b[b], st.preds[spec.key],
+            selection)
+        n_bad += nf
+        if add is not None:
+            forced_np = forced_np | add
+        out.append((forced_np, n_bad))
+    return out
+
+
+def _round_work(st: _State, work):
+    """Run one verify round over ``work`` = [(spec, delta)]: batched by
+    signature when the plan allows, per-unit otherwise.  Returns
+    [(spec, forced_ext, n_bad)]."""
+    if not st.ex.plan.batch_units:
+        return [(spec, *_tile_round(st, spec, delta))
+                for spec, delta in work]
+    groups = {}
+    for spec, delta in work:
+        groups.setdefault((_sig(spec), delta is None), []).append(
+            (spec, delta))
+    out = []
+    for items in groups.values():
+        for lo in range(0, len(items), _BATCH_CAP):
+            chunk = items[lo:lo + _BATCH_CAP]
+            if len(chunk) == 1:
+                # a 1-unit batch would just compile a second executable
+                # set for the same work; the per-unit path is bit-equal
+                spec, delta = chunk[0]
+                out.append((spec, *_tile_round(st, spec, delta)))
+                continue
+            specs = [s for s, _ in chunk]
+            deltas = [d for _, d in chunk]
+            for spec, (forced_np, nb) in zip(
+                    specs, _round_group(st, specs, deltas)):
+                out.append((spec, forced_np, nb))
+    return out
 
 
 # ----------------------------------------------------------------------
@@ -482,8 +544,7 @@ def _fixpoint(st: _State, windows, frontier: int = 0):
     while work:
         additions = {}
         n_bad = 0
-        for spec, delta in work:
-            forced_ext, nb = _tile_round(st, spec, delta)
+        for spec, forced_ext, nb in _round_work(st, work):
             n_bad += nb
             new = forced_ext & ~st.forced.box(spec.ext_box)
             if new.any():
@@ -729,26 +790,35 @@ def _emit_window(st: _State, w):
     # the bounded-memory point of tiling for one redundant encode pass
     seg_records = _window_segment_records(st, w) \
         if st.tindex is not None else None
+    streams = {}
+    if st.ex.plan.batch_units:
+        groups = {}
+        for spec in w.specs:
+            groups.setdefault(_sig(spec), []).append(spec)
+        for specs in groups.values():
+            for lo in range(0, len(specs), _BATCH_CAP):
+                chunk = specs[lo:lo + _BATCH_CAP]
+                if len(chunk) == 1:
+                    continue          # per-unit path below is bit-equal
+                for spec, enc in zip(chunk, _encode_group(st, chunk)):
+                    # keep only what emission reads -- pinning the
+                    # extension X fields of a whole window would break
+                    # the streaming path's bounded-memory contract
+                    streams[spec.key] = enc[2:]
     for spec in w.specs:
-        (_, _, _, _, xu_e, xv_e, ll_e, res_u, res_v, bm) = \
-            _quant_and_streams(st, spec)
+        if spec.key in streams:
+            ll_e, res_u, res_v, bm = streams.pop(spec.key)
+        else:
+            ll_e, res_u, res_v, bm = _quant_and_streams(st, spec)
         o = spec.owned_in_ext
         ll_o = np.asarray(ll_e[o])
         u_o = st.u.box(spec.owned_box)
         v_o = st.v.box(spec.owned_box)
-        sym_u, esc_u = encode.to_symbols(np.asarray(res_u))
-        sym_v, esc_v = encode.to_symbols(np.asarray(res_v))
         header = {
             "box": [int(x) for x in spec.owned_box],
         }
-        sections = {
-            "sym_u": sym_u, "sym_v": sym_v,
-            "esc_u": esc_u, "esc_v": esc_v,
-            "lossless": np.packbits(ll_o),
-            "u_ll": u_o[ll_o], "v_ll": v_o[ll_o],
-            "blockmap": np.packbits(bm),
-            "bm_shape": np.asarray(bm.shape, dtype=np.int32),
-        }
+        sections = encode.field_sections(
+            res_u, res_v, ll_o, u_o[ll_o], v_o[ll_o], bm)
         st.writer.add_unit(spec.key, spec.owned_box, header, sections)
         if seg_records is not None:
             st.tindex.add_unit(spec.key, *seg_records[spec.key])
@@ -822,6 +892,7 @@ def _stats(st: _State, T, blob, t0):
         "pipeline": "tiled",
         "n_units": st.n_units,
         "tiling": dataclasses.asdict(st.grid),
+        "batch_units": st.ex.plan.batch_units,
     }
 
 
@@ -991,27 +1062,10 @@ def read_plan(blob: bytes, region=None):
     return [e for e in hdr["units"] if _overlaps(e["box"], region)]
 
 
-def _decode_unit(uh, secs, hdr, stepper):
-    t0, t1, i0, i1, j0, j1 = uh["box"]
-    shape = (t1 - t0, i1 - i0, j1 - j0)
-    res_u = encode.from_symbols(secs["sym_u"], secs["esc_u"], shape)
-    res_v = encode.from_symbols(secs["sym_v"], secs["esc_v"], shape)
-    bm_shape = tuple(int(x) for x in secs["bm_shape"])
-    bm = np.unpackbits(secs["blockmap"], count=int(np.prod(bm_shape)))
-    bm = bm.astype(bool).reshape(bm_shape)
-    ll = np.unpackbits(secs["lossless"], count=int(np.prod(shape)))
-    ll = ll.astype(bool).reshape(shape)
-    xu, xv = compressor._decode_fields_parallel(
-        jnp.asarray(res_u), jnp.asarray(res_v), bm,
-        hdr["scale"], hdr["xi_unit"], hdr["block"], stepper)
-    u_raw = np.zeros(shape, dtype=np.float32)
-    v_raw = np.zeros(shape, dtype=np.float32)
-    u_raw[ll] = secs["u_ll"]
-    v_raw[ll] = secs["v_ll"]
-    u_rec, v_rec = compressor._reconstruct(
-        xu, xv, hdr["scale"], hdr["xi_unit"],
-        jnp.asarray(ll), jnp.asarray(u_raw), jnp.asarray(v_raw))
-    return np.asarray(u_rec), np.asarray(v_rec)
+def _decode_unit(uh, secs, ex):
+    """Decode one unit frame through the shared executor (the same
+    decode_payload implementation every path uses)."""
+    return ex.decode_unit(uh, secs)
 
 
 def decompress_tiled(blob: bytes, region=None, backend=None):
@@ -1032,14 +1086,12 @@ def decompress_tiled(blob: bytes, region=None, backend=None):
     rt0, rt1, ri0, ri1, rj0, rj1 = region
     assert 0 <= rt0 < rt1 <= T and 0 <= ri0 < ri1 <= H \
         and 0 <= rj0 < rj1 <= W, f"region {region} outside field"
-    be = backend_mod.resolve(backend or hdr.get("sl_backend"))
-    stepper = backend_mod.sl_stepper(
-        be, hdr["cfl_x"], hdr["cfl_y"], hdr["d_max"], hdr["n_max"])
+    ex = pipeline.executor_from_header(hdr, backend)
     u_out = np.zeros((rt1 - rt0, ri1 - ri0, rj1 - rj0), dtype=np.float32)
     v_out = np.zeros_like(u_out)
     for entry in read_plan(blob, region):
         uh, secs = encode.read_tiled_unit(blob, entry)
-        u_rec, v_rec = _decode_unit(uh, secs, hdr, stepper)
+        u_rec, v_rec = _decode_unit(uh, secs, ex)
         t0, t1, i0, i1, j0, j1 = uh["box"]
         ct0, ct1 = max(t0, rt0), min(t1, rt1)
         ci0, ci1 = max(i0, ri0), min(i1, ri1)

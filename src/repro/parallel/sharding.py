@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 import re
 from typing import Optional, Tuple
 
@@ -217,12 +218,15 @@ def param_shardings(params_shape, mesh: Mesh):
 
 
 # --------------------------------------------------------- tile units
-# Data parallelism for the tiled compression pipeline (core/tiling.py):
-# (tile, window) units of one extended shape are stacked on a leading
-# axis and mapped with vmap, shard_mapped over a 1-axis "tiles" mesh so
-# the batch splits across every local device.  Tiles are independent by
-# construction (halo-exact eb + seam-agreed verify), so the mapping
-# needs no collectives -- in_specs == out_specs == P("tiles").
+# Data parallelism for the tiled compression pipeline (core/tiling.py +
+# core/pipeline.py BatchFns): (tile, window) units of one batching
+# signature are stacked on a leading axis and mapped with vmap,
+# shard_mapped over a 1-axis "tiles" mesh so the batch splits across
+# every local device.  Tiles are independent by construction (halo-exact
+# eb + seam-agreed verify), so the mapping needs no collectives --
+# in_specs == out_specs == P("tiles").  Every batched pipeline stage
+# (eb derivation, quantize, residuals, decode cumsum, pointwise check,
+# sign screen, segment extraction) routes through map_tiles*.
 
 
 def _shard_map_fn():
@@ -233,8 +237,12 @@ def _shard_map_fn():
         return getattr(jax, "shard_map", None)
 
 
+@functools.lru_cache(maxsize=1)
 def tiles_mesh() -> Mesh:
-    """1-axis mesh over every local device for tile-unit parallelism."""
+    """1-axis mesh over every local device for tile-unit parallelism.
+
+    Cached: the batched pipeline stages re-enter map_tiles at every jit
+    trace, and mesh construction is not free."""
     return jax.make_mesh((jax.device_count(),), ("tiles",))
 
 

@@ -1,0 +1,141 @@
+"""Pipeline-plan executor: one stage graph for every compress path.
+
+Pins the tentpole properties of the refactor (DESIGN.md #10):
+
+* plans: fused / legacy / tiled are bindings of one stage graph, and
+  decode plans are recovered from container headers;
+* batched unit execution is BYTE-equal to the sequential per-unit loop
+  on a >= 8-unit field for both predictor families (the acceptance
+  criterion -- integer stages are exact, SL and MoP selection run
+  through shared executables);
+* the compiled-stage registry is explicitly keyed and never evicts
+  (the old 64-entry LRU silently recompiled on shape churn);
+* ``compress()`` no longer shares a mutable default config across calls.
+"""
+import dataclasses
+import inspect
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompressionConfig,
+    TileGrid,
+    compress,
+    compress_tiled,
+    decompress,
+    decompress_tiled,
+    encode,
+    pipeline,
+)
+from repro.data import synthetic
+
+
+@pytest.fixture(scope="module")
+def field():
+    return synthetic.double_gyre(T=7, H=16, W=24)
+
+
+def _cfg(**kw):
+    kw.setdefault("eb", 1e-2)
+    kw.setdefault("mode", "rel")
+    kw.setdefault("dt", 0.1)
+    kw.setdefault("dx", 2.0 / 23)
+    kw.setdefault("dy", 1.0 / 15)
+    kw.setdefault("track_index", False)
+    return CompressionConfig(**kw)
+
+
+GRID = TileGrid(tile_h=8, tile_w=12, window_t=3)   # 2x2 tiles x 3 windows
+
+
+@pytest.mark.parametrize("predictor", ["lorenzo", "mop"])
+def test_batched_equals_sequential_bytes(field, predictor):
+    """>= 8 units, batched stages vs per-unit loop: identical container
+    bytes (residual streams, blockmaps, lossless masks and directory)."""
+    u, v = field
+    cfg = _cfg(predictor=predictor, batch_units=True)
+    blob_b, stats_b = compress_tiled(u, v, cfg, GRID)
+    assert stats_b["n_units"] >= 8
+    assert stats_b["batch_units"] is True
+    blob_s, stats_s = compress_tiled(
+        u, v, dataclasses.replace(cfg, batch_units=False), GRID)
+    assert stats_s["batch_units"] is False
+    assert blob_b == blob_s
+    ur, vr = decompress_tiled(blob_b)
+    assert np.abs(ur.astype(np.float64) - u).max() <= stats_b["eb_abs"]
+    assert np.abs(vr.astype(np.float64) - v).max() <= stats_b["eb_abs"]
+
+
+def test_batched_tiled_still_equals_monolithic(field):
+    u, v = field
+    cfg = _cfg(predictor="mop", batch_units=True)
+    blob_t, _ = compress_tiled(u, v, cfg, GRID)
+    blob_m, _ = compress(u, v, cfg)
+    um, vm = decompress(blob_m)
+    ut, vt = decompress_tiled(blob_t)
+    assert np.array_equal(um, ut) and np.array_equal(vm, vt)
+
+
+def test_plan_bindings_select_pipeline(field):
+    u, v = field
+    blob_f, stats_f = compress(u, v, _cfg(fused=True))
+    blob_l, stats_l = compress(u, v, _cfg(fused=False))
+    hdr_f, _ = encode.unpack(blob_f)
+    hdr_l, _ = encode.unpack(blob_l)
+    assert hdr_f["pipeline"] == "fused" and stats_f["pipeline"] == "fused"
+    assert hdr_l["pipeline"] == "legacy" and stats_l["pipeline"] == "legacy"
+    assert "sl_backend" in hdr_f and "sl_backend" not in hdr_l
+    # both bindings decode through the executor and honor the bound
+    for blob, stats in ((blob_f, stats_f), (blob_l, stats_l)):
+        ur, vr = decompress(blob)
+        assert np.abs(ur.astype(np.float64) - u).max() <= stats["eb_abs"]
+    # decode plans are recovered from the header
+    plan_f = pipeline.plan_from_header(hdr_f)
+    plan_l = pipeline.plan_from_header(hdr_l)
+    assert dict(plan_f.bindings)["decode"] == "parallel"
+    assert dict(plan_l.bindings)["decode"] == "scan"
+
+
+def test_tiled_header_recovers_fused_bindings(field):
+    u, v = field
+    blob, _ = compress_tiled(u, v, _cfg(), GRID)
+    hdr = encode.tiled_header(blob)
+    plan = pipeline.plan_from_header(hdr)
+    assert plan.name == "tiled"
+    assert plan.bindings == pipeline.FUSED_BINDINGS
+
+
+def test_registry_is_keyed_and_never_evicts():
+    """Shape churn far beyond the old LRU capacity must not evict the
+    first entry (eviction = silent recompiles every verify round)."""
+    first = pipeline.unit_fns((2, 4, 4), 4, 1, "mop", "xla")
+    for w in range(5, 80):
+        pipeline.unit_fns((2, 4, w), 4, 1, "mop", "xla")
+    assert pipeline.unit_fns((2, 4, 4), 4, 1, "mop", "xla") is first
+    key_count = sum(1 for k in pipeline._UNIT_FNS
+                    if k[0][:2] == (2, 4) and k[1] == 4)
+    assert key_count >= 76
+
+
+def test_compress_default_config_not_shared():
+    """Satellite: cfg defaults to None and is constructed per call --
+    the old ``cfg=CompressionConfig()`` default was one module-level
+    instance shared (mutably) by every caller."""
+    assert inspect.signature(compress).parameters["cfg"].default is None
+
+
+def test_golden_blob_decodes_through_executor():
+    """The checked-in PR-1 blob must decode bitwise through the new
+    executor path (redundant with test_container_golden, pinned here so
+    executor regressions name the subsystem)."""
+    import os
+    data = os.path.join(os.path.dirname(__file__), "data")
+    with open(os.path.join(data, "golden_v2_mop.cptz"), "rb") as f:
+        blob = f.read()
+    exp = np.load(os.path.join(data, "golden_v2_expected.npz"))
+    hdr, _ = encode.unpack(blob)
+    ex = pipeline.executor_from_header(hdr)
+    assert ex.plan.name == "fused"
+    ur, vr = decompress(blob)
+    assert np.array_equal(ur, exp["ur"]) and np.array_equal(vr, exp["vr"])

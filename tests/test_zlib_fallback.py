@@ -1,0 +1,97 @@
+"""CPTL1 zlib-fallback container coverage (no ``zstandard`` installed).
+
+The CI minimal-env job exercises import + one roundtrip without the
+zstandard wheel; these tests monkeypatch the module away so the degraded
+codec path is exercised in the full suite too: monolithic roundtrip on
+the CPTL1 magic, tiled-container behavior (unit frames degrade codec,
+the CPTT1 layout is codec-agnostic), and the error path for decoding a
+zstd blob without the module.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompressionConfig,
+    TileGrid,
+    compress,
+    compress_tiled,
+    decompress,
+    decompress_region,
+    decompress_tiled,
+    encode,
+)
+from repro.data import synthetic
+
+
+@pytest.fixture(scope="module")
+def field():
+    return synthetic.double_gyre(T=5, H=12, W=16)
+
+
+def _cfg(**kw):
+    kw.setdefault("eb", 1e-2)
+    kw.setdefault("mode", "rel")
+    kw.setdefault("track_index", False)
+    return CompressionConfig(**kw)
+
+
+@pytest.fixture()
+def no_zstd(monkeypatch):
+    monkeypatch.setattr(encode, "zstandard", None)
+    yield
+
+
+def test_monolithic_roundtrip_on_zlib(field, no_zstd):
+    u, v = field
+    assert encode.backend_codec() == "zlib"
+    blob, stats = compress(u, v, _cfg())
+    assert blob[: len(encode.MAGIC_ZLIB)] == encode.MAGIC_ZLIB
+    header, _ = encode.unpack(blob)
+    assert header["codec"] == "zlib"
+    ur, vr = decompress(blob)
+    assert np.abs(ur.astype(np.float64) - u).max() <= stats["eb_abs"]
+    assert np.abs(vr.astype(np.float64) - v).max() <= stats["eb_abs"]
+
+
+def test_tiled_container_on_zlib(field, no_zstd):
+    """Unit frames degrade to CPTL1 inside the CPTT1 directory layout;
+    full, region and batched==sequential behavior survive the fallback."""
+    u, v = field
+    grid = TileGrid(tile_h=6, tile_w=8, window_t=3)
+    blob, stats = compress_tiled(u, v, _cfg(), grid)
+    assert encode.is_tiled(blob)
+    hdr = encode.tiled_header(blob)
+    uh, _ = encode.read_tiled_unit(blob, hdr["units"][0])
+    assert uh["codec"] == "zlib"
+    ur, vr = decompress_tiled(blob)
+    assert np.abs(ur.astype(np.float64) - u).max() <= stats["eb_abs"]
+    region = (0, 2, 0, 6, 0, 8)
+    urr, vrr = decompress_region(blob, region)
+    assert np.array_equal(urr, ur[0:2, 0:6, 0:8])
+    assert np.array_equal(vrr, vr[0:2, 0:6, 0:8])
+    blob_s, _ = compress_tiled(
+        u, v, _cfg(batch_units=False), grid)
+    assert blob_s == blob
+
+
+def test_zlib_blob_decodes_with_zstd_available(field, monkeypatch):
+    """A CPTL1 blob written by a minimal env must decode when zstandard
+    IS installed (mixed-environment archive reads)."""
+    u, v = field
+    monkeypatch.setattr(encode, "zstandard", None)
+    blob, stats = compress(u, v, _cfg())
+    assert blob[: len(encode.MAGIC_ZLIB)] == encode.MAGIC_ZLIB
+    monkeypatch.undo()
+    ur, vr = decompress(blob)
+    assert np.abs(ur.astype(np.float64) - u).max() <= stats["eb_abs"]
+
+
+def test_zstd_blob_without_zstandard_raises(field, monkeypatch):
+    if not encode.have_zstd():
+        pytest.skip("zstandard not installed in this env")
+    u, v = field
+    blob, _ = compress(u, v, _cfg())
+    assert blob[: len(encode.MAGIC)] == encode.MAGIC
+    monkeypatch.setattr(encode, "zstandard", None)
+    with pytest.raises(RuntimeError, match="zstandard"):
+        decompress(blob)
