@@ -29,12 +29,20 @@ def check(payload: dict) -> list:
               "MBps_decode", "ratio"} <= set(r), f"row schema: {r}")
     checked.append("rows")
 
-    for key in ("tiled_vs_monolithic", "batched_vs_sequential"):
+    for key in ("tiled_vs_monolithic", "batched_vs_sequential",
+                "async_vs_serial"):
         sec = payload.get(key)
         need(isinstance(sec, dict), f"{key} section missing")
         need(sec.get("bit_identical") is True,
              f"{key}.bit_identical is not true: {sec.get('bit_identical')}")
         checked.append(key)
+    async_sec = payload["async_vs_serial"]
+    need(async_sec.get("speedup", 0) > 1.0,
+         "async_vs_serial paced speedup must beat serial (> 1.0): "
+         f"got {async_sec.get('speedup')}")
+    need(async_sec.get("track_query_reads_warm", 1 << 30)
+         < async_sec.get("track_query_reads_cold", 0),
+         "warm track query did not issue fewer range reads than cold")
     need(payload["batched_vs_sequential"].get("n_units", 0) >= 8,
          "batched_vs_sequential ran on < 8 units")
     preds = {r["predictor"]

@@ -26,10 +26,14 @@ from .index import (  # noqa: F401
 )
 from .model import CP_CODE, CP_TYPES, Track, TrajectorySet  # noqa: F401
 from .query import (  # noqa: F401
+    ContainerSource,
     TrackDecode,
+    UnitCache,
+    configure_unit_cache,
     decode_for_track,
     load_track_index,
     query_tracks,
     track_read_plan,
     track_summaries,
+    unit_cache,
 )

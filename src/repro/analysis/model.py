@@ -66,7 +66,14 @@ def order_component(node_keys, edges):
         nbrs = adj[cur]
         step = [x for x in nbrs if x != prev]
         prev, cur = cur, (step[0] if step else None)
-    assert len(order) == n, "component is not a single path/loop"
+    if len(order) != n:
+        # a real raise (not assert): the walk runs over segment edges
+        # that may come from a container's track-index footer, so a
+        # corrupted index must fail typed -- even under python -O --
+        # instead of returning a silently truncated polyline
+        raise ValueError(
+            f"track component is not a single path/loop: walked "
+            f"{len(order)} of {n} nodes (corrupt track index?)")
     return np.asarray(order, dtype=np.int64)
 
 

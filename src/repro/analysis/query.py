@@ -24,7 +24,10 @@ would produce, node for node, bit for bit.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import os
+import threading
+from collections import OrderedDict
 
 import numpy as np
 
@@ -34,31 +37,233 @@ from . import extraction, model
 from .index import TrackIndex, parse_track_index
 
 
-class _Source:
-    """(offset, length) range reads over bytes or a file path."""
+class ContainerSource:
+    """(offset, length) range reads over bytes or a file path.
+
+    Path sources keep ONE file descriptor for the source's lifetime and
+    read with ``os.pread`` -- positional, so concurrent range reads from
+    the fetch pool never race on a shared seek offset (the previous
+    implementation reopened the file on every call and silently
+    truncated short reads).  Every read is length-checked: a truncated
+    container raises ContainerError instead of decoding garbage.
+
+    ``reads``/``bytes_fetched`` count the range reads actually issued --
+    the observable the decoded-unit cache is benchmarked and tested
+    against.
+    """
 
     def __init__(self, src):
         if isinstance(src, (bytes, bytearray, memoryview)):
             self._blob = bytes(src)
+            self._fd = None
             self._path = None
             self.size = len(self._blob)
         else:
             self._blob = None
             self._path = os.fspath(src)
-            self.size = os.path.getsize(self._path)
+            self._fd = os.open(self._path, os.O_RDONLY)
+            self.size = os.fstat(self._fd).st_size
+        self.reads = 0
+        self.bytes_fetched = 0
+        self._lock = threading.Lock()
+        self._hdr = None
+        self._container_id = None
 
     def read(self, off: int, ln: int) -> bytes:
         if self._blob is not None:
-            return self._blob[off : off + ln]
-        with open(self._path, "rb") as f:
-            f.seek(off)
-            return f.read(ln)
+            data = self._blob[off : off + ln]
+        else:
+            if self._fd is None:
+                raise ValueError("source is closed")
+            # POSIX allows a single pread to return fewer bytes than
+            # asked without being at EOF (signals, NFS, the ~2 GiB
+            # per-call cap); only a 0-byte read means truncation
+            parts = []
+            got = 0
+            while got < ln:
+                chunk = os.pread(self._fd, ln - got, off + got)
+                if not chunk:
+                    break
+                parts.append(chunk)
+                got += len(chunk)
+            data = b"".join(parts)
+        if len(data) != ln:
+            raise encode.ContainerError(
+                f"short read: [{off}, {off + ln}) of a {self.size}-byte "
+                f"container returned {len(data)} bytes")
+        with self._lock:
+            self.reads += 1
+            self.bytes_fetched += len(data)
+        return data
+
+    def read_many(self, entries: list) -> list:
+        """Concurrent range reads for a list of directory entries.
+        Bytes sources read serially -- a memory slice has no I/O
+        latency to hide, so pool handoff would be pure overhead."""
+        if len(entries) <= 1 or self._blob is not None:
+            return [self.read(e["off"], e["len"]) for e in entries]
+        from ..parallel.sharding import host_pool
+
+        pool = host_pool("range-read")
+        return list(pool.map(lambda e: self.read(e["off"], e["len"]),
+                             entries))
+
+    def close(self):
+        if self._fd is not None:
+            os.close(self._fd)
+            self._fd = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def __del__(self):  # best-effort; explicit close preferred
+        try:
+            self.close()
+        except Exception:
+            pass
 
     def header(self) -> dict:
-        return encode.tiled_header_ranged(self.read, self.size)
+        """Directory footer (parsed once per source; three range reads).
+
+        Also derives ``container_id`` -- a content fingerprint of the
+        compressed footer bytes -- so the decoded-unit cache recognizes
+        the same container across repeated queries regardless of
+        whether it arrives as a path or as bytes."""
+        if self._hdr is None:
+            hdr, raw = encode.tiled_footer_ranged(self.read, self.size)
+            self._hdr = hdr
+            self._container_id = (self.size,
+                                  hashlib.sha1(raw).hexdigest())
+        return self._hdr
+
+    @property
+    def container_id(self):
+        if self._container_id is None:
+            self.header()
+        return self._container_id
 
     def unit(self, entry: dict):
         return encode.read_tiled_unit_ranged(self.read, entry)
+
+
+# backward-compatible alias (pre-engine name)
+_Source = ContainerSource
+
+
+# ----------------------------------------------------------------------
+# bounded LRU cache of DECODED units
+# ----------------------------------------------------------------------
+
+class UnitCache:
+    """Byte-bounded LRU of decoded unit patches.
+
+    Keyed by ``(container_id, unit_off)``; values are the decoded
+    float32 ``(box, u_rec, v_rec)`` patches, which every read path
+    (region decode, track decode) derives its output from -- unit
+    decode is deterministic and bit-identical across backends, so a
+    cached patch is exactly what a fresh decode would produce.  Bounded
+    by total payload bytes, not entry count, so one capacity knob works
+    for any tile geometry.  Thread-safe: served reads may overlap.
+    """
+
+    def __init__(self, max_bytes: int):
+        self.max_bytes = int(max_bytes)
+        self._d: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+        self.cur_bytes = 0
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        with self._lock:
+            val = self._d.get(key)
+            if val is None:
+                self.misses += 1
+                return None
+            self._d.move_to_end(key)
+            self.hits += 1
+            return val
+
+    def put(self, key, value):
+        box, u_rec, v_rec = value
+        cost = int(u_rec.nbytes + v_rec.nbytes)
+        with self._lock:
+            if self.max_bytes <= 0 or cost > self.max_bytes:
+                return
+            old = self._d.pop(key, None)
+            if old is not None:
+                self.cur_bytes -= int(old[1].nbytes + old[2].nbytes)
+            self._d[key] = value
+            self.cur_bytes += cost
+            while self.cur_bytes > self.max_bytes:
+                _, (_, u_old, v_old) = self._d.popitem(last=False)
+                self.cur_bytes -= int(u_old.nbytes + v_old.nbytes)
+
+    def clear(self):
+        with self._lock:
+            self._d.clear()
+            self.cur_bytes = 0
+            self.hits = 0
+            self.misses = 0
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"entries": len(self._d), "bytes": self.cur_bytes,
+                    "max_bytes": self.max_bytes, "hits": self.hits,
+                    "misses": self.misses}
+
+
+def _cache_mb_from_env() -> float:
+    raw = os.environ.get("REPRO_UNIT_CACHE_MB", "")
+    try:
+        return float(raw) if raw else 256.0
+    except ValueError:
+        import warnings
+
+        warnings.warn(f"ignoring malformed REPRO_UNIT_CACHE_MB={raw!r}; "
+                      f"using the 256 MiB default")
+        return 256.0
+
+
+unit_cache = UnitCache(int(_cache_mb_from_env() * 2**20))
+
+
+def configure_unit_cache(max_mb: float) -> UnitCache:
+    """Resize (and clear) the process-wide decoded-unit cache.
+    ``max_mb=0`` disables caching.  Initial size comes from the
+    ``REPRO_UNIT_CACHE_MB`` environment variable (default 256)."""
+    unit_cache.clear()
+    unit_cache.max_bytes = int(max_mb * 2**20)
+    return unit_cache
+
+
+def fetch_decoded_units(source: ContainerSource, ex, entries: list):
+    """Decoded ``(box, u_rec, v_rec)`` patches for directory entries,
+    served from the unit cache; missing unit frames are range-read
+    CONCURRENTLY, decoded once through the shared executor, and cached.
+    Returns (patches in entry order, cache hit count)."""
+    cid = source.container_id
+    out = {}
+    missing = []
+    for e in entries:
+        got = unit_cache.get((cid, e["off"]))
+        if got is None:
+            missing.append(e)
+        else:
+            out[e["off"]] = got
+    n_hits = len(entries) - len(missing)
+    if missing:
+        frames = source.read_many(missing)
+        for e, frame in zip(missing, frames):
+            uh, secs = encode.unpack(frame)
+            u_rec, v_rec = ex.decode_unit(uh, secs)
+            val = (tuple(uh["box"]), u_rec, v_rec)
+            unit_cache.put((cid, e["off"]), val)
+            out[e["off"]] = val
+    return [out[e["off"]] for e in entries], n_hits
 
 
 def load_track_index(src):
@@ -66,7 +271,7 @@ def load_track_index(src):
 
     ``src`` is raw bytes or a path; only the footer is read here.
     """
-    source = _Source(src)
+    source = ContainerSource(src)
     hdr = source.header()
     return source, hdr, parse_track_index(hdr)
 
@@ -90,8 +295,9 @@ def _summary(idx: TrackIndex, k: int) -> dict:
 
 def track_summaries(src) -> list:
     """All track summaries of a container (footer parse only)."""
-    _, _, idx = load_track_index(src)
-    return [_summary(idx, k) for k in range(idx.n_tracks)]
+    source, _, idx = load_track_index(src)
+    with source:
+        return [_summary(idx, k) for k in range(idx.n_tracks)]
 
 
 def query_tracks(src, bbox=None, trange=None, cp_type=None) -> list:
@@ -108,7 +314,8 @@ def query_tracks(src, bbox=None, trange=None, cp_type=None) -> list:
     node positions move by O(eb) only, so the filters are exact in
     topology and eb-accurate in geometry.
     """
-    _, _, idx = load_track_index(src)
+    source, _, idx = load_track_index(src)
+    source.close()
     sel = np.ones(idx.n_tracks, dtype=bool)
     if trange is not None:
         t0, t1 = float(trange[0]), float(trange[1])
@@ -136,7 +343,8 @@ def _cover_entries(hdr: dict, idx: TrackIndex, track_id: int) -> list:
 def track_read_plan(src, track_id: int) -> list:
     """Directory entries a ``decode_for_track`` would read -- and
     nothing else (byte offsets + lengths for remote range reads)."""
-    _, hdr, idx = load_track_index(src)
+    source, hdr, idx = load_track_index(src)
+    source.close()
     return _cover_entries(hdr, idx, track_id)
 
 
@@ -158,60 +366,76 @@ class _PatchField:
             if m.any():
                 out[m] = arr[t[m] - t0, i[m] - i0, j[m] - j0]
                 found |= m
-        assert found.all(), \
-            "gather outside covering units -- index inflation bug"
+        if not found.all():
+            raise encode.ContainerError(
+                "track gather landed outside the covering units -- "
+                "corrupt or incompatible track index")
         return out
 
 
 @dataclasses.dataclass(frozen=True)
 class TrackDecode:
-    """decode_for_track result: the exact polyline + read accounting."""
+    """decode_for_track result: the exact polyline + read accounting.
+
+    ``bytes_read`` is the LOGICAL read volume of the plan (sum of
+    covering-unit frame lengths -- what a cold decode costs);
+    ``range_reads``/``bytes_fetched`` count the range reads actually
+    issued this call, and shrink to the three footer reads when every
+    covering unit is served from the decoded-unit cache.
+    """
 
     track: model.Track
     units_read: int
     units_total: int
     bytes_read: int
     entries: list
+    range_reads: int = 0
+    bytes_fetched: int = 0
+    cache_hits: int = 0
 
 
 def decode_for_track(src, track_id: int, backend=None) -> TrackDecode:
     """Decode ONLY the units covering ``track_id`` and rebuild its
     polyline exactly (bit-identical to full-decode extraction).  Unit
     decode goes through the shared pipeline executor -- the same
-    decode_payload implementation full decode and region decode use."""
+    decode_payload implementation full decode and region decode use --
+    and repeated or overlapping queries are served from the
+    decoded-unit cache instead of re-reading and re-decoding."""
     from ..core import pipeline as pipeline_mod
 
     source, hdr, idx = load_track_index(src)
-    idx._check(track_id)
-    T, H, W = hdr["shape"]
-    entries = _cover_entries(hdr, idx, track_id)
-    ex = pipeline_mod.executor_from_header(hdr, backend)
-    patches_u, patches_v = [], []
-    for entry in entries:
-        uh, secs = source.unit(entry)
-        u_rec, v_rec = ex.decode_unit(uh, secs)
-        ufp, vfp = fixedpoint.refix(u_rec, v_rec, hdr["scale"])
-        box = tuple(uh["box"])
-        patches_u.append((box, ufp))
-        patches_v.append((box, vfp))
-    up = _PatchField((T, H, W), patches_u)
-    vp = _PatchField((T, H, W), patches_v)
+    with source:
+        idx._check(track_id)
+        T, H, W = hdr["shape"]
+        entries = _cover_entries(hdr, idx, track_id)
+        ex = pipeline_mod.executor_from_header(hdr, backend)
+        decoded, n_hits = fetch_decoded_units(source, ex, entries)
+        patches_u, patches_v = [], []
+        for box, u_rec, v_rec in decoded:
+            ufp, vfp = fixedpoint.refix(u_rec, v_rec, hdr["scale"])
+            patches_u.append((box, ufp))
+            patches_v.append((box, vfp))
+        up = _PatchField((T, H, W), patches_u)
+        vp = _PatchField((T, H, W), patches_v)
 
-    seg_fid, _ = idx.track_segments(track_id)
-    node_fid = np.unique(seg_fid)
-    local_edges = np.searchsorted(node_fid, seg_fid).astype(np.int64)
-    pos = extraction.node_positions(node_fid, up, vp, (T, H, W))
-    types = classify_mod.classify_nodes(up, vp, pos,
-                                        spiral_tol=idx.spiral_tol)
-    # single-component assembly through the same code path as full
-    # extraction, so ordering / loop detection can never diverge
-    (track,) = model.build_tracks(
-        pos, node_fid, types,
-        np.zeros(len(node_fid), dtype=np.int32), local_edges)
-    return TrackDecode(
-        track=dataclasses.replace(track, track_id=track_id),
-        units_read=len(entries),
-        units_total=len(hdr["units"]),
-        bytes_read=int(sum(e["len"] for e in entries)),
-        entries=entries,
-    )
+        seg_fid, _ = idx.track_segments(track_id)
+        node_fid = np.unique(seg_fid)
+        local_edges = np.searchsorted(node_fid, seg_fid).astype(np.int64)
+        pos = extraction.node_positions(node_fid, up, vp, (T, H, W))
+        types = classify_mod.classify_nodes(up, vp, pos,
+                                            spiral_tol=idx.spiral_tol)
+        # single-component assembly through the same code path as full
+        # extraction, so ordering / loop detection can never diverge
+        (track,) = model.build_tracks(
+            pos, node_fid, types,
+            np.zeros(len(node_fid), dtype=np.int32), local_edges)
+        return TrackDecode(
+            track=dataclasses.replace(track, track_id=track_id),
+            units_read=len(entries),
+            units_total=len(hdr["units"]),
+            bytes_read=int(sum(e["len"] for e in entries)),
+            entries=entries,
+            range_reads=source.reads,
+            bytes_fetched=source.bytes_fetched,
+            cache_hits=n_hits,
+        )

@@ -79,10 +79,13 @@ class CompressionConfig:
 def _as_fields(u, v):
     u = np.asarray(u)
     v = np.asarray(v)
-    assert u.shape == v.shape and u.ndim == 3, "expect (T, H, W) u and v"
-    assert u.shape[0] >= 2 and u.shape[1] >= 2 and u.shape[2] >= 2, (
-        "need at least a 2x2x2 space-time grid"
-    )
+    # real raises (not asserts): input validation must hold under -O
+    if u.shape != v.shape or u.ndim != 3:
+        raise ValueError(
+            f"expect (T, H, W) u and v, got {u.shape} and {v.shape}")
+    if min(u.shape) < 2:
+        raise ValueError(
+            f"need at least a 2x2x2 space-time grid, got {u.shape}")
     return u.astype(np.float32), v.astype(np.float32)
 
 

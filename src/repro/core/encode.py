@@ -34,6 +34,17 @@ MAGIC_TILED = b"CPTT1"    # tiled container (unit frames + directory footer)
 ESC = 255
 
 
+class ContainerError(ValueError):
+    """Malformed, truncated, or corrupted container bytes.
+
+    Every integrity check on the read path raises this (never a bare
+    ``assert``, which vanishes under ``python -O`` and would turn a
+    truncated or forged container into silent wrong output).  It
+    subclasses ValueError so pre-existing ``except ValueError`` callers
+    keep working.
+    """
+
+
 def have_zstd() -> bool:
     return zstandard is not None
 
@@ -55,14 +66,29 @@ def codec_compress(raw: bytes, level: int = 12) -> bytes:
 
 
 def codec_decompress(blob: bytes, codec: str) -> bytes:
+    """Decompress one container frame; unknown codec names are refused.
+
+    A corrupted/forged header used to fall through to zlib and decode
+    to garbage; now anything but the two known codecs raises, and a
+    frame that fails to decompress raises ContainerError.
+    """
     if codec == "zstd":
         if zstandard is None:
             raise RuntimeError(
                 "blob was packed with zstd but the 'zstandard' module is "
                 "not installed; pip install zstandard to decode it"
             )
-        return zstandard.ZstdDecompressor().decompress(blob)
-    return zlib.decompress(blob)
+        try:
+            return zstandard.ZstdDecompressor().decompress(blob)
+        except zstandard.ZstdError as e:
+            raise ContainerError(f"corrupt zstd frame: {e}") from e
+    if codec == "zlib":
+        try:
+            return zlib.decompress(blob)
+        except zlib.error as e:
+            raise ContainerError(f"corrupt zlib frame: {e}") from e
+    raise ValueError(
+        f"unknown container codec {codec!r}; expected 'zstd' or 'zlib'")
 
 
 # ----------------------------------------------------------------------
@@ -347,17 +373,50 @@ def pack(header: dict, sections: dict, level: int = 12) -> bytes:
 
 def unpack(blob: bytes):
     magic = blob[: len(MAGIC)]
-    assert magic in (MAGIC, MAGIC_ZLIB), "not a CPTZ container"
+    if magic not in (MAGIC, MAGIC_ZLIB):
+        raise ContainerError("not a CPTZ/CPTL container (bad magic)")
     codec = "zstd" if magic == MAGIC else "zlib"
     payload = codec_decompress(blob[len(MAGIC):], codec)
+    if len(payload) < 4:
+        raise ContainerError("truncated container: missing header length")
     (hlen,) = struct.unpack("<I", payload[:4])
-    header = msgpack.unpackb(payload[4 : 4 + hlen], raw=False)
+    if 4 + hlen > len(payload):
+        raise ContainerError(
+            f"truncated container: header length {hlen} exceeds "
+            f"{len(payload)}-byte payload")
+    try:
+        header = msgpack.unpackb(payload[4 : 4 + hlen], raw=False)
+    except Exception as e:
+        raise ContainerError(f"corrupt container header: {e}") from e
+    if not isinstance(header, dict) or "sections" not in header:
+        raise ContainerError("container header has no sections index")
     base = 4 + hlen
     sections = {}
-    for name, meta in header.pop("sections").items():
-        raw = payload[base + meta["off"] : base + meta["off"] + meta["len"]]
-        arr = np.frombuffer(raw, dtype=np.dtype(meta["dtype"]))
-        sections[name] = arr.reshape(meta["shape"])
+    sec_index = header.pop("sections")
+    if not isinstance(sec_index, dict):
+        raise ContainerError("container sections index is not a map")
+    for name, meta in sec_index.items():
+        try:
+            off, ln = meta["off"], meta["len"]
+            dtype, shape = meta["dtype"], meta["shape"]
+        except (TypeError, KeyError) as e:
+            raise ContainerError(
+                f"malformed section entry {name!r}: {e}") from e
+        if not (isinstance(off, int) and isinstance(ln, int)):
+            raise ContainerError(
+                f"malformed section entry {name!r}: non-integer "
+                f"off/len {off!r}/{ln!r}")
+        lo = base + off
+        hi = lo + ln
+        if off < 0 or hi > len(payload):
+            raise ContainerError(
+                f"section {name!r} byte range [{lo}, {hi}) outside "
+                f"{len(payload)}-byte payload")
+        try:
+            arr = np.frombuffer(payload[lo:hi], dtype=np.dtype(dtype))
+            sections[name] = arr.reshape(shape)
+        except (TypeError, ValueError) as e:
+            raise ContainerError(f"corrupt section {name!r}: {e}") from e
     return header, sections
 
 
@@ -461,20 +520,55 @@ class TiledWriter:
         return self._pos
 
 
-def tiled_header_ranged(read, size: int) -> dict:
-    """Directory footer via an (offset, length) range reader.
+def tiled_footer_ranged(read, size: int):
+    """(header dict, compressed footer bytes) via a range reader.
 
     ``read(off, ln) -> bytes`` over a container of ``size`` bytes --
     the primitive for file/remote sources where loading the whole blob
     would defeat read planning (three small reads: magic, length word,
-    footer)."""
+    footer).  The raw footer bytes double as a content fingerprint for
+    the decoded-unit cache (analysis/query.py)."""
     m = len(MAGIC_TILED)
-    assert read(0, m) == MAGIC_TILED, "not a CPTT tiled container"
+    if size < 2 * m + 4:
+        raise ContainerError(
+            f"truncated tiled container: {size} bytes is smaller than "
+            f"the minimal frame")
+    if read(0, m) != MAGIC_TILED:
+        raise ContainerError("not a CPTT tiled container (bad magic)")
     tail = read(size - m - 4, m + 4)
-    assert tail[-m:] == MAGIC_TILED, "truncated tiled container (no footer)"
+    if tail[-m:] != MAGIC_TILED:
+        raise ContainerError("truncated tiled container (no footer)")
     (hlen,) = struct.unpack("<I", tail[:4])
+    if hlen + 2 * m + 4 > size:
+        raise ContainerError(
+            f"corrupt tiled footer: header length {hlen} exceeds "
+            f"{size}-byte container")
     raw = read(size - m - 4 - hlen, hlen)
-    return msgpack.unpackb(zlib.decompress(raw), raw=False)
+    try:
+        header = msgpack.unpackb(zlib.decompress(raw), raw=False)
+    except Exception as e:
+        raise ContainerError(f"corrupt tiled footer: {e}") from e
+    if not isinstance(header, dict) or "units" not in header:
+        raise ContainerError("tiled footer has no unit directory")
+    units = header["units"]
+    if not isinstance(units, list) or any(
+            not isinstance(e, dict)
+            or not {"key", "box", "off", "len"} <= e.keys()
+            for e in units):
+        raise ContainerError("tiled footer unit directory is malformed")
+    for e in units:
+        off, ln = e["off"], e["len"]
+        if not (isinstance(off, int) and isinstance(ln, int)
+                and m <= off and 0 <= ln and off + ln <= size):
+            raise ContainerError(
+                f"unit directory entry {e['key']} byte range "
+                f"[{off}, {off + ln}) outside [{m}, {size})")
+    return header, raw
+
+
+def tiled_header_ranged(read, size: int) -> dict:
+    """Directory footer via an (offset, length) range reader."""
+    return tiled_footer_ranged(read, size)[0]
 
 
 def tiled_header(blob: bytes) -> dict:
@@ -486,7 +580,11 @@ def tiled_header(blob: bytes) -> dict:
 def read_tiled_unit_ranged(read, entry: dict):
     """Decode ONE unit frame via an (offset, length) range reader."""
     frame = read(entry["off"], entry["len"])
-    assert len(frame) == entry["len"], "unit frame out of range"
+    if len(frame) != entry["len"]:
+        raise ContainerError(
+            f"short read: unit frame at [{entry['off']}, "
+            f"{entry['off'] + entry['len']}) returned {len(frame)} bytes "
+            f"(truncated container?)")
     return unpack(frame)
 
 

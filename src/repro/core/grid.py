@@ -181,7 +181,11 @@ def _row_lookup(table: np.ndarray, queries: np.ndarray) -> np.ndarray:
     pos = np.full(len(uniq), -1, dtype=np.int64)
     pos[inv[: len(table)]] = np.arange(len(table))
     out = pos[inv[len(table):]]
-    assert (out >= 0).all(), "query face not present in face table"
+    if not (out >= 0).all():
+        # real raise (not assert): queries can originate from a
+        # container's track index, so bad ids must fail under -O too
+        raise ValueError("query face not present in face table "
+                         "(corrupt face ids?)")
     return out
 
 

@@ -55,6 +55,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 import time
 from typing import Optional
 
@@ -431,24 +432,30 @@ class UnitFns:
 
 
 # explicit keyed registries (no LRU: shape churn can never evict a live
-# entry and silently recompile every verify round)
+# entry and silently recompile every verify round).  Guarded by a lock:
+# the async stream engine and the served-read layer (analysis/query.py)
+# may build executors from worker threads, and an unguarded get-or-create
+# could construct the same UnitFns twice concurrently.
 _UNIT_FNS: dict = {}
 _BATCH_FNS: dict = {}
+_REGISTRY_LOCK = threading.Lock()
 
 
 def unit_fns(shape, block, n_levels, predictor, be, be_lorenzo=None
              ) -> UnitFns:
     key = (tuple(shape), block, n_levels, predictor, be, be_lorenzo)
-    fns = _UNIT_FNS.get(key)
-    if fns is None:
-        fns = _UNIT_FNS[key] = UnitFns(shape, block, n_levels, predictor,
-                                       be, be_lorenzo)
+    with _REGISTRY_LOCK:
+        fns = _UNIT_FNS.get(key)
+        if fns is None:
+            fns = _UNIT_FNS[key] = UnitFns(shape, block, n_levels,
+                                           predictor, be, be_lorenzo)
     return fns
 
 
 def clear_registries():
-    _UNIT_FNS.clear()
-    _BATCH_FNS.clear()
+    with _REGISTRY_LOCK:
+        _UNIT_FNS.clear()
+        _BATCH_FNS.clear()
 
 
 # ----------------------------------------------------------------------
@@ -543,9 +550,10 @@ class BatchFns:
 
 def batch_fns(sig, block, n_levels) -> BatchFns:
     key = (sig, block, n_levels)
-    fns = _BATCH_FNS.get(key)
-    if fns is None:
-        fns = _BATCH_FNS[key] = BatchFns(sig, block, n_levels)
+    with _REGISTRY_LOCK:
+        fns = _BATCH_FNS.get(key)
+        if fns is None:
+            fns = _BATCH_FNS[key] = BatchFns(sig, block, n_levels)
     return fns
 
 

@@ -1,0 +1,299 @@
+"""Out-of-core concurrent streaming engine (DESIGN.md #11).
+
+``compress_stream`` used to process windows strictly serially: host
+frame ingestion, device encode/verify, and CPU symbolize/pack took
+turns on one thread, so the device idled during zstd packing and the
+packer idled during verify rounds.  This module runs the SAME window
+state machine with the three stages overlapped:
+
+    ingest thread   -- pulls (u_t, v_t) frames from the source iterable
+                       (window N+1), converts to float32 and precomputes
+                       the fixed-point planes, hands frames over a
+                       bounded queue;
+    compute thread  -- (the caller's thread) owns ALL device work and
+                       the sliding plane storage: window derivation, the
+                       seam-agreed verify fixpoint, and the final-mask
+                       encode of window N via the shared PlanExecutor
+                       batched stages (core/pipeline.py);
+    writer thread   -- consumes per-unit payloads (core/tiling.py
+                       ``_UnitPayload``) in emission order: symbolize,
+                       pack (zstd/zlib) and TiledWriter emission of
+                       window N-1, plus track-index bookkeeping.
+
+Why the bytes cannot change: the scheduler below is the one state
+machine both modes run (``Scheduler``), so derive/fixpoint/emit
+decisions are identical; payloads are produced in the serial emission
+order and the writer queue is FIFO, so units hit the TiledWriter in the
+same order at the same offsets; and symbolize/pack are deterministic
+pure functions of the payload.  Only WHEN work happens moves across
+threads -- never WHAT is computed.  Asserted end-to-end in
+tests/test_stream_async.py and the ``async_vs_serial`` benchmark
+section.
+
+Why memory stays bounded (~2 windows, preserved from the serial
+engine): the plane store still drops frames behind the pending
+frontier, the ingest queue holds at most one window of frames ahead,
+and the writer queue holds at most ~2 windows of unit payloads
+(residual streams, ~1/4 the footprint of raw frames); a slow sink
+back-pressures the compute thread instead of growing the queue.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+
+import numpy as np
+
+from . import tiling
+
+
+class Scheduler:
+    """The window state machine shared by the serial and async engines.
+
+    Transplanted verbatim from the pre-engine ``compress_stream`` loop
+    (PR 2): derive every window whose halo extension is fully buffered,
+    run the seam-agreed fixpoint over derived-but-unemitted windows,
+    emit each window once the NEXT window's fixpoint has run (its
+    verify outcome is then sealed), and drop frame planes behind the
+    pending frontier.  ``emit`` receives ``_UnitPayload`` objects in
+    the canonical emission order; the engines differ only in where
+    that callable runs the CPU pack.
+    """
+
+    def __init__(self, st, cfg, grid, emit):
+        self.st = st
+        self.cfg = cfg
+        self.grid = grid
+        self.emit = emit
+        self.windows = []       # every derived window, in order
+        self.pending = []       # derived, not yet emitted (ordered)
+        self.frontier = 0       # frames below this are sealed
+        self.next_w = 0         # next window index to derive
+        self.T = 0
+        self.eof = False
+
+    def add_frame(self, u_t, v_t, ufp_t=None, vfp_t=None):
+        tiling._add_frame(self.st, self.T, u_t, v_t, ufp_t, vfp_t)
+        self.T += 1
+        if self._derive_ready():
+            self._advance()
+
+    def finish(self):
+        self.eof = True
+        self._derive_ready()
+        self._advance()
+        if self.pending:
+            raise RuntimeError("scheduler left unemitted windows")
+
+    def _derive_ready(self):
+        """Derive every window whose extension is fully buffered."""
+        st, grid = self.st, self.grid
+        out = []
+        while True:
+            t0 = self.next_w * grid.window_t
+            if t0 >= self.T:
+                break
+            t1 = min(t0 + grid.window_t, self.T)
+            full = t1 == t0 + grid.window_t and self.T >= t1 + grid.thalo
+            if not (full or self.eof):
+                break
+            et1 = min(t1 + grid.thalo, self.T)
+            w = tiling._Window(
+                self.next_w, t0, t1,
+                tiling.window_specs(self.next_w, t0, t1, st.H, st.W,
+                                    et1, grid))
+            tiling._derive_window(st, w)
+            self.windows.append(w)
+            self.pending.append(w)
+            self.next_w += 1
+            out.append(w)
+        return out
+
+    def _advance(self):
+        """Fixpoint + emit everything the derive frontier allows."""
+        st, grid = self.st, self.grid
+        if not self.pending:
+            return
+        eb_final_hi = self.T if self.eof else self.windows[-1].t1
+        fix = [w for w in self.pending if w.et1 <= eb_final_hi]
+        if not fix:
+            return
+        if self.cfg.verify:
+            tiling._fixpoint(st, fix, frontier=self.frontier)
+        emit_hi = len(fix) if self.eof else len(fix) - 1
+        for w in fix[:emit_hi]:
+            for p in tiling._unit_payloads(st, w):
+                self.emit(p)
+            self.pending.remove(w)
+            self.frontier = w.t1
+        if self.pending:
+            keep = self.pending[0].t0 - grid.thalo
+            for planes in (st.u, st.v, st.ufp, st.vfp, st.eb, st.forced):
+                planes.drop_below(keep)
+
+
+def run(pairs, cfg, grid, value_range, sink=None, async_engine=False):
+    """Streaming-compress ``pairs`` with the serial or async engine.
+    Entry point for ``tiling.compress_stream`` (which owns the
+    config/grid defaulting and the no-value-range fallback)."""
+    t_start = time.perf_counter()
+    if async_engine:
+        blob, stats = _AsyncEngine(cfg, grid, value_range, sink).run(
+            pairs, t_start)
+    else:
+        blob, stats = _run_serial(pairs, cfg, grid, value_range, sink,
+                                  t_start)
+    stats["async_engine"] = bool(async_engine)
+    return blob, stats
+
+
+def _run_serial(pairs, cfg, grid, value_range, sink, t_start):
+    st = None
+    sched = None
+    for uf, vf in pairs:
+        uf = np.asarray(uf, np.float32)
+        if sched is None:
+            H, W = uf.shape
+            st = tiling._init_state(cfg, grid, H, W, value_range, sink)
+            sched = Scheduler(st, cfg, grid,
+                              emit=lambda p: tiling._write_unit(st, p))
+        sched.add_frame(uf, vf)
+    if sched is None or sched.T < 2:
+        raise ValueError("need at least 2 frames")
+    sched.finish()
+    blob = st.writer.finish(tiling._finish_header(st, sched.T))
+    return blob, tiling._stats(st, sched.T, blob, t_start)
+
+
+_EOF = object()
+
+
+class _AsyncEngine:
+    """Three-stage overlapped engine; see the module docstring."""
+
+    def __init__(self, cfg, grid, value_range, sink):
+        self.cfg = cfg
+        self.grid = grid
+        self.value_range = value_range
+        self.sink = sink
+        # at most ~one window of frames buffered ahead of the planes
+        self.q_in = queue.Queue(maxsize=max(grid.window_t, 2))
+        self.q_out = None           # sized once the tile count is known
+        self.stop = threading.Event()
+        self.scale = None           # set after state init; read by ingest
+        self._ingest_exc = None
+        self._writer_exc = None
+        self.st = None
+
+    # ---- ingest stage ---------------------------------------------------
+
+    def _ingest(self, pairs):
+        try:
+            for uf, vf in pairs:
+                uf = np.asarray(uf, np.float32)
+                vf = np.asarray(vf, np.float32)
+                scale = self.scale
+                ufp = vfp = None
+                if scale is not None:
+                    # deterministic: bit-equal wherever it is computed
+                    ufp = np.round(uf.astype(np.float64) * scale)
+                    vfp = np.round(vf.astype(np.float64) * scale)
+                if not self._put(self.q_in, (uf, vf, ufp, vfp)):
+                    return
+        except BaseException as e:  # propagate to the compute thread
+            self._ingest_exc = e
+        finally:
+            self._put(self.q_in, _EOF, force=True)
+
+    # ---- writer stage ---------------------------------------------------
+
+    def _writer(self):
+        try:
+            while True:
+                p = self.q_out.get()
+                if p is _EOF:
+                    return
+                tiling._write_unit(self.st, p)
+        except BaseException as e:
+            self._writer_exc = e
+            # drain so a blocked compute-thread put can never deadlock
+            while True:
+                p = self.q_out.get()
+                if p is _EOF:
+                    return
+
+    def _put(self, q, item, force=False):
+        """Queue put that stays responsive to shutdown/stage failure."""
+        while True:
+            try:
+                q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                if not force and self.stop.is_set():
+                    return False
+
+    def _emit(self, p):
+        if self._writer_exc is not None:
+            raise self._writer_exc
+        self._put(self.q_out, p, force=True)
+
+    # ---- compute stage (caller thread) ----------------------------------
+
+    def run(self, pairs, t_start):
+        ingest = threading.Thread(target=self._ingest, args=(pairs,),
+                                  name="repro-stream-ingest", daemon=True)
+        writer = threading.Thread(target=self._writer,
+                                  name="repro-stream-writer", daemon=True)
+        ingest.start()
+        sched = None
+        try:
+            while True:
+                item = self.q_in.get()
+                if item is _EOF:
+                    break
+                uf, vf, ufp, vfp = item
+                if sched is None:
+                    H, W = uf.shape
+                    self.st = tiling._init_state(
+                        self.cfg, self.grid, H, W, self.value_range,
+                        self.sink)
+                    self.scale = self.st.scale
+                    nti = -(-H // self.grid.tile_h)
+                    ntj = -(-W // self.grid.tile_w)
+                    # ~2 windows of unit payloads in flight, max
+                    self.q_out = queue.Queue(
+                        maxsize=max(2 * nti * ntj, 2))
+                    writer.start()
+                    sched = Scheduler(self.st, self.cfg, self.grid,
+                                      emit=self._emit)
+                sched.add_frame(uf, vf, ufp, vfp)
+            if self._ingest_exc is not None:
+                raise self._ingest_exc
+            if sched is None or sched.T < 2:
+                raise ValueError("need at least 2 frames")
+            sched.finish()
+            self._put(self.q_out, _EOF, force=True)
+            writer.join()
+            if self._writer_exc is not None:
+                raise self._writer_exc
+            blob = self.st.writer.finish(
+                tiling._finish_header(self.st, sched.T))
+            return blob, tiling._stats(self.st, sched.T, blob, t_start)
+        finally:
+            self.stop.set()
+            if writer.is_alive():
+                self._put(self.q_out, _EOF, force=True)
+                writer.join(timeout=10.0)
+            # unblock a full-queue ingest put, then give it a bounded
+            # window to exit -- it may be blocked INSIDE the user's
+            # frame iterable (a stalled solver/socket), which no amount
+            # of draining can interrupt; it is a daemon thread, so
+            # leaking it beats hanging the caller on shutdown
+            deadline = time.monotonic() + 5.0
+            while ingest.is_alive() and time.monotonic() < deadline:
+                try:
+                    self.q_in.get_nowait()
+                except queue.Empty:
+                    pass
+                ingest.join(timeout=0.1)

@@ -95,9 +95,16 @@ class TileGrid:
     thalo: int = 1      # temporal halo (frames); >= 1
 
     def validate(self):
-        assert self.tile_h >= 1 and self.tile_w >= 1 and self.window_t >= 1
-        assert self.halo >= 1, "spatial halo must cover incident faces"
-        assert self.thalo >= 1, "temporal halo must cover incident slabs"
+        # real raises, not asserts: geometry validation must hold under
+        # python -O (a halo=0 grid silently breaks eb exactness)
+        if self.tile_h < 1 or self.tile_w < 1 or self.window_t < 1:
+            raise ValueError(f"tile/window sizes must be >= 1: {self}")
+        if self.halo < 1:
+            raise ValueError("spatial halo must cover incident faces "
+                             "(halo >= 1)")
+        if self.thalo < 1:
+            raise ValueError("temporal halo must cover incident slabs "
+                             "(thalo >= 1)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -298,15 +305,25 @@ def _init_state(cfg, grid: TileGrid, H, W, vrange, sink):
     )
 
 
-def _add_frame(st: _State, t, u_t, v_t):
+def _add_frame(st: _State, t, u_t, v_t, ufp_t=None, vfp_t=None):
+    """Insert one frame; ``ufp_t``/``vfp_t`` accept the fixed-point
+    planes precomputed off-thread (the async engine's ingest stage --
+    np.round(x64 * scale) is deterministic, so who computes it cannot
+    change a bit)."""
     u_t = np.asarray(u_t, np.float32)
     v_t = np.asarray(v_t, np.float32)
-    assert u_t.shape == (st.H, st.W) and v_t.shape == (st.H, st.W)
+    if u_t.shape != (st.H, st.W) or v_t.shape != (st.H, st.W):
+        raise ValueError(
+            f"frame {t} shape {u_t.shape}/{v_t.shape} != ({st.H}, {st.W})")
     st.n_frames = max(st.n_frames, t + 1)
     st.u.put(t, u_t)
     st.v.put(t, v_t)
-    st.ufp.put(t, np.round(u_t.astype(np.float64) * st.scale))
-    st.vfp.put(t, np.round(v_t.astype(np.float64) * st.scale))
+    if ufp_t is None:
+        ufp_t = np.round(u_t.astype(np.float64) * st.scale)
+    if vfp_t is None:
+        vfp_t = np.round(v_t.astype(np.float64) * st.scale)
+    st.ufp.put(t, ufp_t)
+    st.vfp.put(t, vfp_t)
 
 
 def _pick_fns(st: _State, shape):
@@ -783,11 +800,37 @@ def _window_segment_records(st: _State, w) -> dict:
 # unit emission
 # ----------------------------------------------------------------------
 
-def _emit_window(st: _State, w):
-    # re-quantizes at the final mask rather than caching the last verify
-    # round's streams: a cache would hold every pending tile's residual
-    # field (2x the raw f32 footprint) alive until emission, defeating
-    # the bounded-memory point of tiling for one redundant encode pass
+@dataclasses.dataclass
+class _UnitPayload:
+    """Everything the CPU-side write stage needs for ONE unit -- no
+    reference back into the sliding plane storage, so the scheduler may
+    drop frames the moment payloads exist (the async engine hands these
+    across a thread boundary)."""
+
+    key: tuple
+    box: tuple
+    ll: object          # owned lossless mask (np bool)
+    u_ll: object        # raw values at lossless vertices (np f32)
+    v_ll: object
+    res_u: object       # residual streams (device or host arrays)
+    res_v: object
+    bm: object          # blockmap (np bool)
+    seg: object         # segment records tuple | None
+
+
+def _unit_payloads(st: _State, w):
+    """Device/plane-reading half of window emission.
+
+    Runs the final-mask encode (batched by signature when the plan
+    allows) and snapshots per-unit payloads in the window's spec order
+    -- the order the serial writer emits, which the async engine
+    preserves through its handoff queue, keeping the container bytes
+    identical.  Re-quantizes at the final mask rather than caching the
+    last verify round's streams: a cache would hold every pending
+    tile's residual field (2x the raw f32 footprint) alive until
+    emission, defeating the bounded-memory point of tiling for one
+    redundant encode pass.
+    """
     seg_records = _window_segment_records(st, w) \
         if st.tindex is not None else None
     streams = {}
@@ -805,6 +848,7 @@ def _emit_window(st: _State, w):
                     # extension X fields of a whole window would break
                     # the streaming path's bounded-memory contract
                     streams[spec.key] = enc[2:]
+    payloads = []
     for spec in w.specs:
         if spec.key in streams:
             ll_e, res_u, res_v, bm = streams.pop(spec.key)
@@ -814,23 +858,40 @@ def _emit_window(st: _State, w):
         ll_o = np.asarray(ll_e[o])
         u_o = st.u.box(spec.owned_box)
         v_o = st.v.box(spec.owned_box)
-        header = {
-            "box": [int(x) for x in spec.owned_box],
-        }
-        sections = encode.field_sections(
-            res_u, res_v, ll_o, u_o[ll_o], v_o[ll_o], bm)
-        st.writer.add_unit(spec.key, spec.owned_box, header, sections)
-        if seg_records is not None:
-            st.tindex.add_unit(spec.key, *seg_records[spec.key])
-        st.n_units += 1
-        st.n_ll += int(ll_o.sum())
-        st.n_verts += ll_o.size
-        st.n_sl_blocks += int(bm.sum())
-        st.n_blocks += bm.size
+        payloads.append(_UnitPayload(
+            key=spec.key, box=spec.owned_box, ll=ll_o,
+            u_ll=u_o[ll_o], v_ll=v_o[ll_o],
+            res_u=res_u, res_v=res_v, bm=bm,
+            seg=None if seg_records is None else seg_records[spec.key]))
         # original-predicate tables and seam snapshots are dead now
         st.preds.pop(spec.key, None)
         st.seen.pop(spec.key, None)
     w.emitted = True
+    return payloads
+
+
+def _write_unit(st: _State, p: _UnitPayload):
+    """CPU half of unit emission: symbolize + pack + directory/index
+    bookkeeping.  Pure host work on payload data only -- the async
+    engine runs this on its writer thread while the device encodes the
+    next window."""
+    header = {"box": [int(x) for x in p.box]}
+    sections = encode.field_sections(
+        p.res_u, p.res_v, p.ll, p.u_ll, p.v_ll, p.bm)
+    st.writer.add_unit(p.key, p.box, header, sections)
+    if p.seg is not None:
+        st.tindex.add_unit(p.key, *p.seg)
+    bm = np.asarray(p.bm)
+    st.n_units += 1
+    st.n_ll += int(p.ll.sum())
+    st.n_verts += p.ll.size
+    st.n_sl_blocks += int(bm.sum())
+    st.n_blocks += bm.size
+
+
+def _emit_window(st: _State, w):
+    for p in _unit_payloads(st, w):
+        _write_unit(st, p)
 
 
 def _finish_header(st: _State, T: int):
@@ -951,7 +1012,7 @@ def compress_tiled(u, v, cfg=None, grid: Optional[TileGrid] = None,
 
 
 def compress_stream(pairs, cfg=None, grid: Optional[TileGrid] = None,
-                    value_range=None, sink=None):
+                    value_range=None, sink=None, async_engine=False):
     """Streaming tiled compression of an iterable of (u_t, v_t) frames.
 
     ``value_range=(lo, hi)`` must be the exact global min/max over both
@@ -961,86 +1022,36 @@ def compress_stream(pairs, cfg=None, grid: Optional[TileGrid] = None,
     frames; emits each unit as soon as later frames can no longer
     change its verify outcome.  Returns (blob, stats); blob is None
     when writing to ``sink``.
+
+    ``async_engine=True`` runs the out-of-core concurrent engine
+    (core/stream_engine.py): frame ingestion, device encode/verify and
+    CPU symbolize/pack overlap on three stages, producing bytes
+    IDENTICAL to the serial path (and to compress_tiled) -- only the
+    scheduling changes, never the emission order or the packed streams.
     """
     cfg = cfg or compressor.CompressionConfig()
     grid = grid or getattr(cfg, "tiling", None) or TileGrid()
     grid.validate()
+    from . import stream_engine
+
     if value_range is None:
+        # the stream must be materialized to learn the global range;
+        # with the async engine requested, derive the exact range and
+        # still run the engine (same bytes either way) rather than
+        # silently downgrading to the serial in-memory path
         frames = [(np.asarray(uf, np.float32), np.asarray(vf, np.float32))
                   for uf, vf in pairs]
-        u = np.stack([f[0] for f in frames])
-        v = np.stack([f[1] for f in frames])
-        return compress_tiled(u, v, cfg, grid, sink=sink)
+        if not async_engine:
+            u = np.stack([f[0] for f in frames])
+            v = np.stack([f[1] for f in frames])
+            return compress_tiled(u, v, cfg, grid, sink=sink)
+        lo = min(min(float(uf.min()), float(vf.min())) for uf, vf in frames)
+        hi = max(max(float(uf.max()), float(vf.max())) for uf, vf in frames)
+        pairs = frames
+        value_range = (lo, hi)
 
-    t_start = time.perf_counter()
-    st = None
-    windows = []
-    pending = []            # derived, not yet emitted (ordered)
-    frontier = 0            # frames below this are sealed
-    next_w = 0              # next window index to derive
-    T = 0
-    it = iter(pairs)
-    eof = False
-
-    def _derive_ready():
-        """Derive every window whose extension is fully buffered."""
-        nonlocal next_w
-        out = []
-        while True:
-            t0 = next_w * grid.window_t
-            if t0 >= T:
-                break
-            t1 = min(t0 + grid.window_t, T)
-            full = t1 == t0 + grid.window_t and T >= t1 + grid.thalo
-            if not (full or eof):
-                break
-            et1 = min(t1 + grid.thalo, T)
-            w = _Window(next_w, t0, t1,
-                        window_specs(next_w, t0, t1, st.H, st.W, et1, grid))
-            _derive_window(st, w)
-            windows.append(w)
-            pending.append(w)
-            next_w += 1
-            out.append(w)
-        return out
-
-    def _advance():
-        """Fixpoint + emit everything the derive frontier allows."""
-        nonlocal frontier
-        if not pending:
-            return
-        eb_final_hi = T if eof else windows[-1].t1
-        fix = [w for w in pending if w.et1 <= eb_final_hi]
-        if not fix:
-            return
-        if cfg.verify:
-            _fixpoint(st, fix, frontier=frontier)
-        emit_hi = len(fix) if eof else len(fix) - 1
-        for w in fix[:emit_hi]:
-            _emit_window(st, w)
-            pending.remove(w)
-            frontier = w.t1
-        if pending:
-            keep = pending[0].t0 - grid.thalo
-            for planes in (st.u, st.v, st.ufp, st.vfp, st.eb, st.forced):
-                planes.drop_below(keep)
-
-    for uf, vf in it:
-        uf = np.asarray(uf, np.float32)
-        if st is None:
-            H, W = uf.shape
-            st = _init_state(cfg, grid, H, W, value_range, sink)
-        _add_frame(st, T, uf, vf)
-        T += 1
-        if _derive_ready():
-            _advance()
-    eof = True
-    assert st is not None and T >= 2, "need at least 2 frames"
-    _derive_ready()
-    _advance()
-    assert not pending, "scheduler left unemitted windows"
-    blob = st.writer.finish(_finish_header(st, T))
-    return blob, _stats(st, T, blob, t_start)
+    return stream_engine.run(pairs, cfg, grid, value_range, sink,
+                             async_engine=async_engine)
 
 
 # ----------------------------------------------------------------------
@@ -1054,58 +1065,94 @@ def _overlaps(box, region):
         and j0 < rj1 and rj0 < j1
 
 
-def read_plan(blob: bytes, region=None):
-    """Directory entries a region decode touches -- and nothing else."""
-    hdr = encode.tiled_header(blob)
+def _source_of(src):
+    """ContainerSource over bytes or a path (persistent handle + typed
+    short-read errors + decoded-unit cache id; analysis/query.py)."""
+    from ..analysis import query as query_mod
+
+    return query_mod.ContainerSource(src)
+
+
+def _plan_entries(hdr: dict, region=None):
+    """Directory entries overlapping ``region`` -- the ONE place the
+    coverage rule lives (read planning and region decode must never
+    diverge on which units a region touches)."""
     if region is None:
         return list(hdr["units"])
     return [e for e in hdr["units"] if _overlaps(e["box"], region)]
 
 
-def _decode_unit(uh, secs, ex):
-    """Decode one unit frame through the shared executor (the same
-    decode_payload implementation every path uses)."""
-    return ex.decode_unit(uh, secs)
+def read_plan(src, region=None):
+    """Directory entries a region decode touches -- and nothing else.
+    ``src`` is container bytes or a filesystem path."""
+    with _source_of(src) as source:
+        hdr = source.header()
+    return _plan_entries(hdr, region)
 
 
-def decompress_tiled(blob: bytes, region=None, backend=None):
+def decompress_tiled(src, region=None, backend=None):
     """Decode a tiled container (whole field, or just ``region``).
 
-    Only the units whose owned boxes overlap the region are read from
-    the blob (byte slices at directory offsets) and decoded.
+    ``src`` is container bytes or a filesystem path (range reads only).
+    Only the units whose owned boxes overlap the region are read
+    (byte slices at directory offsets) and decoded -- and repeated or
+    overlapping decodes are served from the process-wide decoded-unit
+    cache (analysis/query.py) instead of re-reading and re-decoding
+    covering units.
     """
-    hdr = encode.tiled_header(blob)
-    version = hdr.get("version", 1)
-    if version > TILED_FORMAT_VERSION:
-        raise ValueError(
-            f"container format version {version} is newer than this "
-            f"decoder (supports <= {TILED_FORMAT_VERSION})")
-    T, H, W = hdr["shape"]
-    if region is None:
-        region = (0, T, 0, H, 0, W)
-    rt0, rt1, ri0, ri1, rj0, rj1 = region
-    assert 0 <= rt0 < rt1 <= T and 0 <= ri0 < ri1 <= H \
-        and 0 <= rj0 < rj1 <= W, f"region {region} outside field"
-    ex = pipeline.executor_from_header(hdr, backend)
-    u_out = np.zeros((rt1 - rt0, ri1 - ri0, rj1 - rj0), dtype=np.float32)
-    v_out = np.zeros_like(u_out)
-    for entry in read_plan(blob, region):
-        uh, secs = encode.read_tiled_unit(blob, entry)
-        u_rec, v_rec = _decode_unit(uh, secs, ex)
-        t0, t1, i0, i1, j0, j1 = uh["box"]
-        ct0, ct1 = max(t0, rt0), min(t1, rt1)
-        ci0, ci1 = max(i0, ri0), min(i1, ri1)
-        cj0, cj1 = max(j0, rj0), min(j1, rj1)
-        src = (slice(ct0 - t0, ct1 - t0), slice(ci0 - i0, ci1 - i0),
-               slice(cj0 - j0, cj1 - j0))
-        dst = (slice(ct0 - rt0, ct1 - rt0), slice(ci0 - ri0, ci1 - ri0),
-               slice(cj0 - rj0, cj1 - rj0))
-        u_out[dst] = u_rec[src]
-        v_out[dst] = v_rec[src]
+    from ..analysis import query as query_mod
+
+    with _source_of(src) as source:
+        hdr = source.header()
+        version = hdr.get("version", 1)
+        if version > TILED_FORMAT_VERSION:
+            raise ValueError(
+                f"container format version {version} is newer than this "
+                f"decoder (supports <= {TILED_FORMAT_VERSION})")
+        T, H, W = hdr["shape"]
+        if region is None:
+            region = (0, T, 0, H, 0, W)
+        rt0, rt1, ri0, ri1, rj0, rj1 = region
+        if not (0 <= rt0 < rt1 <= T and 0 <= ri0 < ri1 <= H
+                and 0 <= rj0 < rj1 <= W):
+            raise ValueError(f"region {region} outside field "
+                             f"({T}, {H}, {W})")
+        ex = pipeline.executor_from_header(hdr, backend)
+        u_out = np.zeros((rt1 - rt0, ri1 - ri0, rj1 - rj0),
+                         dtype=np.float32)
+        v_out = np.zeros_like(u_out)
+        entries = _plan_entries(hdr, region)
+        full = (rt0, rt1, ri0, ri1, rj0, rj1) == (0, T, 0, H, 0, W)
+        if full:
+            # full-field decode: stream unit-at-a-time (one compressed
+            # frame resident at a time) and leave the unit cache alone
+            # -- pinning a whole field of patches would evict every
+            # entry with real reuse probability for zero future hits
+            def decoded_iter():
+                for entry in entries:
+                    uh, secs = source.unit(entry)
+                    u_rec, v_rec = ex.decode_unit(uh, secs)
+                    yield tuple(uh["box"]), u_rec, v_rec
+            decoded = decoded_iter()
+        else:
+            decoded, _ = query_mod.fetch_decoded_units(source, ex,
+                                                       entries)
+        for box, u_rec, v_rec in decoded:
+            t0, t1, i0, i1, j0, j1 = box
+            ct0, ct1 = max(t0, rt0), min(t1, rt1)
+            ci0, ci1 = max(i0, ri0), min(i1, ri1)
+            cj0, cj1 = max(j0, rj0), min(j1, rj1)
+            u_src = (slice(ct0 - t0, ct1 - t0), slice(ci0 - i0, ci1 - i0),
+                     slice(cj0 - j0, cj1 - j0))
+            dst = (slice(ct0 - rt0, ct1 - rt0),
+                   slice(ci0 - ri0, ci1 - ri0),
+                   slice(cj0 - rj0, cj1 - rj0))
+            u_out[dst] = u_rec[u_src]
+            v_out[dst] = v_rec[u_src]
     return u_out, v_out
 
 
-def decompress_region(blob: bytes, region, backend=None):
+def decompress_region(src, region, backend=None):
     """Random-access decode of (t0, t1, i0, i1, j0, j1) -- reads only
-    the units covering the region."""
-    return decompress_tiled(blob, region=region, backend=backend)
+    the units covering the region (cached across repeated queries)."""
+    return decompress_tiled(src, region=region, backend=backend)

@@ -267,6 +267,29 @@ def map_tiles(fn, *batched):
     return vfn(*batched)
 
 
+# --------------------------------------------------------- host workers
+# Shared host-side thread pools for the out-of-core paths: the async
+# stream engine's stage threads hand work off through queues, but the
+# served-read layer (analysis/query.py) fans CONCURRENT RANGE READS of
+# unit frames over a pool -- reads are I/O-bound (page cache misses,
+# network filesystems), so a handful of threads hides most of the
+# latency without oversubscribing the host.
+
+DEFAULT_HOST_WORKERS = 8
+
+
+@functools.lru_cache(maxsize=8)
+def host_pool(name: str, workers: int = DEFAULT_HOST_WORKERS):
+    """Named, process-lifetime ThreadPoolExecutor for host-side I/O
+    concurrency.  Cached by (name, workers): callers on a hot path
+    (every track query) must not pay pool construction, and idle
+    threads cost nothing."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    return ThreadPoolExecutor(max_workers=workers,
+                              thread_name_prefix=f"repro-{name}")
+
+
 def map_tiles_padded(fn, *batched):
     """map_tiles that PADS a ragged batch up to a device-count multiple
     (repeating the last tile) so the shard_mapped path is always taken,

@@ -1,0 +1,143 @@
+"""Shared corrupt-container matrix (importable, assert-free checks).
+
+Used twice:
+
+* tests/test_container_errors.py runs it under pytest (both codecs);
+* tests/opt_mode_check.py runs it under ``python -O`` in CI, where
+  ``assert`` statements are stripped -- the typed ContainerError /
+  ValueError raises exercised here are the only thing standing between
+  a truncated container and silent garbage output, so every check below
+  fails loudly with a real raise, never an assert.
+"""
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+from repro.core import CompressionConfig, TileGrid, compress, compress_tiled
+from repro.core import encode
+
+
+def build_blobs():
+    """(monolithic blob, tiled blob, tiled header) on a tiny field."""
+    from repro.data import synthetic
+
+    u, v = synthetic.double_gyre(T=5, H=12, W=16)
+    cfg = CompressionConfig(eb=1e-2, mode="rel", predictor="mop",
+                            fused=True, track_index=True,
+                            dt=0.1, dx=2.0 / 15, dy=1.0 / 11)
+    mono, _ = compress(u, v, cfg)
+    tiled, _ = compress_tiled(u, v, cfg, TileGrid(tile_h=6, tile_w=8,
+                                                  window_t=3))
+    return mono, tiled, encode.tiled_header(tiled)
+
+
+def expect(exc_types, fn, what: str):
+    """Assert-free 'raises' check (works under python -O)."""
+    try:
+        fn()
+    except exc_types:
+        return
+    except Exception as e:  # wrong type is as bad as no raise
+        raise SystemExit(
+            f"{what}: expected {exc_types}, got {type(e).__name__}: {e}")
+    raise SystemExit(f"{what}: expected {exc_types}, nothing was raised")
+
+
+def corrupt_footer_length(tiled: bytes) -> bytes:
+    """Overwrite the footer's u32 length word with garbage."""
+    m = len(encode.MAGIC_TILED)
+    return tiled[: -m - 4] + struct.pack("<I", 2**31 - 1) + tiled[-m:]
+
+
+def run_matrix(mono: bytes, tiled: bytes, hdr: dict):
+    """The corrupt-container matrix; raises SystemExit on any miss."""
+    CE = encode.ContainerError
+    m = len(encode.MAGIC_TILED)
+
+    # unknown codec tag is refused, never silently routed through zlib
+    expect(ValueError, lambda: encode.codec_decompress(b"\x00" * 8, "lzma"),
+           "unknown codec tag")
+    expect(ValueError, lambda: encode.codec_decompress(b"", "huffman0"),
+           "forged codec tag")
+
+    # monolithic container: bad magic / corrupted frame / bad length word
+    expect(CE, lambda: encode.unpack(b"NOPE!" + mono[5:]), "bad magic")
+    expect(CE, lambda: encode.unpack(mono[:5] + b"\x00\x01\x02\x03"),
+           "corrupt codec frame")
+    payload = encode.codec_decompress(mono[5:],
+                                      "zstd" if mono[:5] == encode.MAGIC
+                                      else "zlib")
+    forged = mono[:5] + encode.codec_compress(
+        struct.pack("<I", len(payload) + 999) + payload[4:])
+    expect(CE, lambda: encode.unpack(forged), "oversized header length")
+
+    # forged header structure: sections as a list / entries missing keys
+    import msgpack
+
+    def forge_header(header):
+        hdr = msgpack.packb(header, use_bin_type=True)
+        return mono[:5] + encode.codec_compress(
+            struct.pack("<I", len(hdr)) + hdr)
+
+    expect(CE, lambda: encode.unpack(forge_header({"sections": [1, 2]})),
+           "sections index not a map")
+    expect(CE, lambda: encode.unpack(
+        forge_header({"sections": {"a": {"off": 0}}})),
+        "section entry missing keys")
+    expect(CE, lambda: encode.unpack(
+        forge_header({"sections": {"a": {"off": "0", "len": 4,
+                                         "dtype": "u1", "shape": [4]}}})),
+        "section entry non-integer off/len")
+    # forged tiled footer: units directory malformed
+    def forge_footer(units):
+        import zlib as _zlib
+        raw = _zlib.compress(msgpack.packb({"units": units},
+                                           use_bin_type=True), 6)
+        m = encode.MAGIC_TILED
+        return m + raw + struct.pack("<I", len(raw)) + m
+    expect(CE, lambda: encode.tiled_header(forge_footer("nope")),
+           "units directory not a list")
+    expect(CE, lambda: encode.tiled_header(forge_footer([{"off": 3}])),
+           "unit entry missing keys")
+    expect(CE, lambda: encode.tiled_header(forge_footer(
+        [{"key": [0, 0, 0], "box": [0, 1, 0, 1, 0, 1],
+          "off": -100, "len": 50}])), "negative unit offset")
+    expect(CE, lambda: encode.tiled_header(forge_footer(
+        [{"key": [0, 0, 0], "box": [0, 1, 0, 1, 0, 1],
+          "off": 5, "len": 10**9}])), "unit length beyond container")
+
+    # tiled container: truncated footer / corrupt length word / short unit
+    expect(CE, lambda: encode.tiled_header(tiled[:-3]), "truncated footer")
+    expect(CE, lambda: encode.tiled_header(tiled[: m + 7]),
+           "tiny truncated container")
+    expect(CE, lambda: encode.tiled_header(corrupt_footer_length(tiled)),
+           "corrupt footer length word")
+    entry = hdr["units"][-1]
+    cut = tiled[: entry["off"] + entry["len"] // 2]
+    expect(CE, lambda: encode.read_tiled_unit(cut, entry),
+           "short read mid-unit")
+    # unit frame bytes flipped: the inner unpack must raise, not decode
+    pos = entry["off"] + entry["len"] // 2
+    flipped = (tiled[:pos] + bytes([tiled[pos] ^ 0xFF])
+               + tiled[pos + 1:])
+    expect(CE, lambda: encode.read_tiled_unit(flipped, entry),
+           "bit-flipped unit frame")
+
+    # decode paths surface the same typed errors end to end
+    from repro import analysis
+    from repro.core import decompress_region, tiling
+
+    expect(CE, lambda: tiling.decompress_tiled(tiled[:-3]),
+           "decompress of truncated container")
+    expect(CE, lambda: analysis.decode_for_track(corrupt_footer_length(tiled),
+                                                 0),
+           "track decode on corrupt footer")
+    expect(ValueError, lambda: decompress_region(tiled, (0, 99, 0, 4, 0, 4)),
+           "out-of-bounds region")
+    expect(ValueError,
+           lambda: compress(np.zeros((4, 4)), np.zeros((4, 4))),
+           "bad field shape")
+    expect(ValueError, lambda: TileGrid(halo=0).validate(), "halo=0 grid")
+    return True

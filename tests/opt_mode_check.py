@@ -1,0 +1,37 @@
+"""Container-error validation under ``python -O`` (CI leg).
+
+Run as:  PYTHONPATH=src python -O tests/opt_mode_check.py
+
+Under ``-O`` every ``assert`` in the codebase is stripped, so any
+integrity check still written as an assert silently vanishes -- which
+is exactly how truncated/corrupt containers used to decode to garbage.
+This script replays the full corrupt-container matrix with real raises
+only (see container_corruptions.py) and exits non-zero on any miss, so
+assert-stripped validation can never regress unnoticed.
+
+It intentionally does NOT use pytest: pytest's assertion rewriting is
+disabled under -O, which would turn the test bodies themselves into
+no-ops.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import container_corruptions as cc  # noqa: E402
+
+
+def main() -> int:
+    if sys.flags.optimize < 1:
+        print("opt_mode_check: warning: not running under python -O; "
+              "the assert-stripping scenario is not being exercised",
+              file=sys.stderr)
+    mono, tiled, hdr = cc.build_blobs()
+    cc.run_matrix(mono, tiled, hdr)
+    print(f"opt_mode_check: typed container errors hold "
+          f"(optimize={sys.flags.optimize})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -79,9 +79,10 @@ def test_metrics_suite(small_field):
 
 
 def test_rejects_bad_shapes():
-    with pytest.raises(AssertionError):
+    # typed errors (not asserts): must hold under python -O
+    with pytest.raises(ValueError, match=r"\(T, H, W\)"):
         compress(np.zeros((4, 4)), np.zeros((4, 4)))
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="2x2x2"):
         compress(np.zeros((1, 4, 4)), np.zeros((1, 4, 4)))
 
 

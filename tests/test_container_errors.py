@@ -1,0 +1,66 @@
+"""Corrupt-container matrix: typed errors on every read path.
+
+Truncated footers, forged length words, unknown codec tags, short reads
+mid-unit and bit flips must all raise ContainerError (a ValueError
+subclass) from ``unpack``, ``tiled_header_ranged`` and
+``decode_for_track`` -- on both the zstd and the zlib-fallback
+container.  The same matrix runs under ``python -O`` in CI via
+tests/opt_mode_check.py (see container_corruptions.py).
+"""
+import pytest
+
+from repro.core import encode
+
+import container_corruptions as cc
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    return cc.build_blobs()
+
+
+def test_matrix_default_codec(blobs):
+    assert cc.run_matrix(*blobs)
+
+
+def test_matrix_zlib_codec(monkeypatch):
+    """Same matrix with zstandard hidden: the CPTL1 fallback container
+    must fail just as loudly."""
+    monkeypatch.setattr(encode, "zstandard", None)
+    encode_state = encode.backend_codec()
+    assert encode_state == "zlib"
+    mono, tiled, hdr = cc.build_blobs()
+    assert mono[:5] == encode.MAGIC_ZLIB
+    assert cc.run_matrix(mono, tiled, hdr)
+
+
+def test_unknown_codec_regression():
+    """encode.codec_decompress used to route ANY unknown codec string
+    through zlib, decoding forged headers to garbage."""
+    with pytest.raises(ValueError, match="unknown container codec"):
+        encode.codec_decompress(b"\x78\x9c\x03\x00\x00\x00\x00\x01",
+                                "lzma")
+    # the valid names still work / still raise their own typed errors
+    with pytest.raises(encode.ContainerError, match="corrupt zlib frame"):
+        encode.codec_decompress(b"not-a-zlib-frame", "zlib")
+
+
+def test_container_error_is_value_error():
+    assert issubclass(encode.ContainerError, ValueError)
+
+
+def test_short_read_raises_typed_error(tmp_path, blobs):
+    """Path sources: a file truncated mid-unit raises ContainerError
+    from the persistent-handle source (length-checked pread)."""
+    from repro.analysis.query import ContainerSource
+
+    _, tiled, hdr = blobs
+    entry = hdr["units"][-1]
+    p = tmp_path / "trunc.cptt1"
+    p.write_bytes(tiled[: entry["off"] + entry["len"] // 2])
+    src = ContainerSource(str(p))
+    with pytest.raises(encode.ContainerError, match="short read"):
+        src.read(entry["off"], entry["len"])
+    src.close()
+    with pytest.raises(ValueError, match="closed"):
+        src.read(0, 1)

@@ -1,0 +1,176 @@
+"""Async streaming engine: byte identity, overlap bookkeeping, errors.
+
+The engine's core guarantee (DESIGN.md #11): ``compress_stream(...,
+async_engine=True)`` moves WHEN work happens across three threads but
+never WHAT is computed, so the container bytes equal the serial stream
+-- which equal ``compress_tiled`` -- unit for unit, offset for offset.
+"""
+import io
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompressionConfig,
+    TileGrid,
+    compress_stream,
+    compress_tiled,
+    decompress_tiled,
+)
+from repro.data import synthetic
+
+
+GRID = TileGrid(tile_h=8, tile_w=12, window_t=3)
+
+
+@pytest.fixture(scope="module")
+def field():
+    return synthetic.double_gyre(T=10, H=16, W=24)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return CompressionConfig(eb=1e-2, mode="rel", predictor="mop",
+                             dt=0.1, dx=2.0 / 23, dy=1.0 / 15, fused=True)
+
+
+def _frames(u, v):
+    return ((u[t], v[t]) for t in range(u.shape[0]))
+
+
+def _vrange(u, v):
+    return (float(min(u.min(), v.min())), float(max(u.max(), v.max())))
+
+
+@pytest.fixture(scope="module")
+def tiled_blob(field, cfg):
+    u, v = field
+    return compress_tiled(u, v, cfg, GRID)
+
+
+def test_async_bytes_equal_tiled(field, cfg, tiled_blob):
+    """Acceptance: async_engine=True produces bytes identical to
+    compress_tiled (and the serial stream)."""
+    u, v = field
+    blob_a, stats = compress_stream(_frames(u, v), cfg, GRID,
+                                    value_range=_vrange(u, v),
+                                    async_engine=True)
+    assert stats["async_engine"] is True
+    assert blob_a == tiled_blob[0]
+    blob_s, stats_s = compress_stream(_frames(u, v), cfg, GRID,
+                                      value_range=_vrange(u, v))
+    assert stats_s["async_engine"] is False
+    assert blob_s == blob_a
+
+
+def test_async_without_value_range(field, cfg, tiled_blob):
+    """No value_range: the stream is materialized for the exact global
+    range, but async_engine=True still runs the engine (not a silent
+    serial downgrade) and still matches compress_tiled bytes."""
+    u, v = field
+    blob, stats = compress_stream(_frames(u, v), cfg, GRID,
+                                  async_engine=True)
+    assert stats["async_engine"] is True
+    assert blob == tiled_blob[0]
+
+
+def test_async_writes_to_sink(field, cfg, tiled_blob):
+    u, v = field
+    sink = io.BytesIO()
+    blob, _ = compress_stream(_frames(u, v), cfg, GRID,
+                              value_range=_vrange(u, v), sink=sink,
+                              async_engine=True)
+    assert blob is None
+    assert sink.getvalue() == tiled_blob[0]
+
+
+def test_async_with_track_index(field):
+    """The sidecar index rides through the writer thread unchanged."""
+    u, v = field
+    cfg_i = CompressionConfig(eb=1e-2, mode="rel", predictor="mop",
+                              dt=0.1, dx=2.0 / 23, dy=1.0 / 15,
+                              fused=True, track_index=True)
+    blob_t, _ = compress_tiled(u, v, cfg_i, GRID)
+    blob_a, _ = compress_stream(_frames(u, v), cfg_i, GRID,
+                                value_range=_vrange(u, v),
+                                async_engine=True)
+    assert blob_a == blob_t
+
+
+def test_async_organic_forcing_bitwise():
+    """Verify-loop cascades (rounds >= 1) still produce identical bytes
+    when the stages overlap -- the fixpoint stays on the compute
+    thread, so seam agreement is untouched."""
+    rng = np.random.default_rng(3)
+    T = 6
+    base = 1.0e8
+    u = (base + rng.normal(0, 100.0, (T, 16, 16))).astype(np.float32)
+    v = (base + rng.normal(0, 100.0, (T, 16, 16))).astype(np.float32)
+    cfg_f = CompressionConfig(eb=6.0, mode="abs", predictor="mop",
+                              backend="xla", fused=True)
+    grid = TileGrid(tile_h=7, tile_w=9, window_t=2)
+    blob_t, st = compress_tiled(u, v, cfg_f, grid)
+    assert st["verify_rounds"] >= 1
+    blob_a, _ = compress_stream(_frames(u, v), cfg_f, grid,
+                                value_range=_vrange(u, v),
+                                async_engine=True)
+    assert blob_a == blob_t
+    um, vm = decompress_tiled(blob_t)
+    ua, va = decompress_tiled(blob_a)
+    assert np.array_equal(um, ua) and np.array_equal(vm, va)
+
+
+def test_async_source_error_propagates(cfg):
+    """An exception in the frame iterable surfaces on the caller thread
+    and shuts the stage threads down instead of hanging."""
+    u, v = synthetic.double_gyre(T=6, H=16, W=24)
+
+    def bad_frames():
+        for t in range(4):
+            yield u[t], v[t]
+        raise OSError("simulated source failure")
+
+    with pytest.raises(OSError, match="simulated source failure"):
+        compress_stream(bad_frames(), cfg, GRID,
+                        value_range=_vrange(u, v), async_engine=True)
+
+
+def test_async_sink_error_propagates(field, cfg):
+    """A failing sink (disk full, closed socket) surfaces instead of
+    silently dropping units."""
+    u, v = field
+
+    class BadSink:
+        def __init__(self):
+            self.n = 0
+
+        def write(self, data):
+            self.n += len(data)
+            if self.n > 4096:
+                raise OSError("simulated sink failure")
+
+    with pytest.raises(OSError, match="simulated sink failure"):
+        compress_stream(_frames(u, v), cfg, GRID,
+                        value_range=_vrange(u, v), sink=BadSink(),
+                        async_engine=True)
+
+
+def test_async_too_few_frames(cfg):
+    u, v = synthetic.double_gyre(T=2, H=16, W=24)
+    with pytest.raises(ValueError, match="at least 2 frames"):
+        compress_stream(iter([(u[0], v[0])]), cfg, GRID,
+                        value_range=(-1.0, 1.0), async_engine=True)
+    with pytest.raises(ValueError, match="at least 2 frames"):
+        compress_stream(iter([(u[0], v[0])]), cfg, GRID,
+                        value_range=(-1.0, 1.0))
+
+
+def test_async_single_frame_tail_window(cfg):
+    """T that leaves a 1-frame tail window: scheduler parity holds."""
+    u, v = synthetic.double_gyre(T=7, H=16, W=24)
+    grid = TileGrid(tile_h=16, tile_w=24, window_t=3)
+    blob_t, _ = compress_tiled(u, v, cfg, grid)
+    blob_a, _ = compress_stream(_frames(u, v), cfg, grid,
+                                value_range=_vrange(u, v),
+                                async_engine=True)
+    assert blob_a == blob_t

@@ -177,6 +177,93 @@ def test_path_source_uses_range_reads(tmp_path, indexed):
     assert a.bytes_read == b.bytes_read < len(blob)
 
 
+def test_repeated_query_hits_unit_cache(tmp_path, indexed):
+    """Acceptance: the second identical query is served from the
+    decoded-unit cache -- STRICTLY fewer range reads (only the three
+    footer reads), every covering unit a cache hit, same polyline."""
+    from repro.analysis import query as query_mod
+
+    _, _, blob, _ = indexed
+    p = tmp_path / "field.cptt1"
+    p.write_bytes(blob)
+    query_mod.unit_cache.clear()
+    cold = analysis.decode_for_track(str(p), 0)
+    warm = analysis.decode_for_track(str(p), 0)
+    assert warm.range_reads < cold.range_reads
+    assert warm.bytes_fetched < cold.bytes_fetched
+    assert cold.cache_hits == 0
+    assert warm.cache_hits == warm.units_read > 0
+    # the logical plan accounting is unchanged by caching
+    assert warm.bytes_read == cold.bytes_read
+    assert warm.entries == cold.entries
+    assert np.array_equal(warm.track.nodes, cold.track.nodes)
+    # the cache is content-addressed: the same container as BYTES hits
+    # the entries populated through the path source
+    from_bytes = analysis.decode_for_track(blob, 0)
+    assert from_bytes.cache_hits == from_bytes.units_read
+
+
+def test_overlapping_queries_share_units(indexed):
+    """Tracks with overlapping covering sets re-decode nothing for the
+    shared units."""
+    from repro.analysis import query as query_mod
+
+    _, _, blob, _ = indexed
+    query_mod.unit_cache.clear()
+    plans = {s["track_id"]: analysis.track_read_plan(blob, s["track_id"])
+             for s in analysis.track_summaries(blob)}
+    ids = sorted(plans)
+    offs = [{e["off"] for e in plans[k]} for k in ids]
+    shared = offs[0].intersection(*offs[1:]) if len(offs) > 1 else set()
+    seen = set()
+    for k in ids:
+        res = analysis.decode_for_track(blob, k)
+        expected_hits = len({e["off"] for e in plans[k]} & seen)
+        assert res.cache_hits == expected_hits
+        seen |= {e["off"] for e in plans[k]}
+    if shared:  # double-gyre tracks do share covering units
+        assert any(res.cache_hits for k in ids[1:]
+                   for res in [analysis.decode_for_track(blob, k)])
+
+
+def test_unit_cache_bounded_and_disablable(indexed):
+    from repro.analysis import query as query_mod
+
+    _, _, blob, _ = indexed
+    cache = query_mod.configure_unit_cache(0)     # disabled
+    try:
+        a = analysis.decode_for_track(blob, 0)
+        b = analysis.decode_for_track(blob, 0)
+        assert a.cache_hits == 0 and b.cache_hits == 0
+        assert cache.stats()["entries"] == 0
+        # tiny budget: the cache must stay within max_bytes
+        query_mod.configure_unit_cache(0.02)      # ~20 KB
+        analysis.decode_for_track(blob, 0)
+        st = cache.stats()
+        assert st["bytes"] <= st["max_bytes"]
+    finally:
+        query_mod.configure_unit_cache(256)
+
+
+def test_region_decode_uses_cache(indexed):
+    """decompress_region stops re-reading/re-decoding covering units on
+    repeated queries (served through the same unit cache)."""
+    from repro.core import decompress_region
+
+    from repro.analysis import query as query_mod
+
+    _, _, blob, _ = indexed
+    query_mod.unit_cache.clear()
+    region = (0, 2, 0, 8, 0, 8)
+    r1 = decompress_region(blob, region)
+    s1 = query_mod.unit_cache.stats()
+    r2 = decompress_region(blob, region)
+    s2 = query_mod.unit_cache.stats()
+    assert s2["misses"] == s1["misses"]       # nothing re-decoded
+    assert s2["hits"] > s1["hits"]
+    assert np.array_equal(r1[0], r2[0]) and np.array_equal(r1[1], r2[1])
+
+
 def test_lorenzo_predictor_roundtrip():
     """Same guarantee under the pure-Lorenzo predictor."""
     u, v, blob, stats = _make_blob(predictor="lorenzo")
