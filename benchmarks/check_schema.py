@@ -50,6 +50,20 @@ def check(payload: dict) -> list:
     need({"lorenzo", "mop"} <= preds,
          f"batched_vs_sequential must cover both predictors, got {preds}")
 
+    rec = payload.get("recovery")
+    need(isinstance(rec, dict), "recovery section missing")
+    need(rec.get("byte_identical") is True,
+         "recovery.byte_identical is not true: a crash-and-resume run "
+         f"must match the uninterrupted container, got "
+         f"{rec.get('byte_identical')}")
+    need(rec.get("salvage_units_recovered", 0) > 0,
+         "recovery salvage recovered no units")
+    need(rec.get("salvage_MBps", 0) > 0,
+         f"recovery.salvage_MBps not positive: {rec.get('salvage_MBps')}")
+    need(rec.get("salvaged_degraded_complete") is True,
+         "degraded decode of the salvaged container reported holes")
+    checked.append("recovery")
+
     traj = payload.get("trajectory_analysis")
     need(isinstance(traj, dict) and traj.get("rows"),
          "trajectory_analysis section missing or empty")

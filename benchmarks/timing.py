@@ -307,6 +307,117 @@ def _bench_async(eb, shape, repeat, log, frame_latency=0.02):
     return out
 
 
+def _bench_recovery(eb, shape, log):
+    """Crash-recovery + salvage cost (core/stream_engine.py journal,
+    encode.salvage_container -- DESIGN.md #12).
+
+    * ``overhead_pct``: wall-time cost of journaling + fsync relative
+      to the pre-journal streaming path (stream-to-BytesIO, which
+      never journals), on the same frames.
+    * crash-and-resume: a fault kills the run at ~2/3 of the stream;
+      ``byte_identical`` asserts the resumed container equals the
+      uninterrupted one (the tentpole guarantee, gated in CI).
+    * ``salvage_MBps``: directory-rebuild throughput on a footerless
+      archive, with every intact unit recovered and the salvaged
+      container decoding clean in degraded mode.
+    """
+    import io
+    import os
+    import tempfile
+
+    from repro.core import TileGrid, compress_stream, encode
+    from repro.core import faults as faults_mod
+    from repro.data import synthetic
+
+    T, H, W = shape
+    u, v = synthetic.advected_turbulence(T=T, H=H, W=W)
+    mb = (u.nbytes + v.nbytes) / 2**20
+    grid = TileGrid(tile_h=max(H // 2, 1), tile_w=max(W // 2, 1),
+                    window_t=max(T // 4, 1))
+    cfg = CompressionConfig(eb=eb, mode="rel", predictor="mop",
+                            backend="xla", verify=True, fused=True,
+                            track_index=True)
+    vr = (float(min(u.min(), v.min())), float(max(u.max(), v.max())))
+    pairs = list(zip(u, v))
+
+    def feed(t0):
+        return iter(pairs[t0:])
+
+    with tempfile.TemporaryDirectory() as td:
+        ref_path = os.path.join(td, "ref.cptt")
+        t0 = time.perf_counter()
+        compress_stream(feed, cfg, grid, value_range=vr, sink=ref_path)
+        t_journaled = time.perf_counter() - t0
+        with open(ref_path, "rb") as f:
+            ref = f.read()
+        t0 = time.perf_counter()
+        compress_stream(feed, cfg, grid, value_range=vr,
+                        sink=io.BytesIO())
+        t_plain = time.perf_counter() - t0
+
+        crash_path = os.path.join(td, "crash.cptt")
+        plan = faults_mod.FaultPlan().io_error("stream.compute",
+                                               nth=max(2 * T // 3, 2))
+        t_crashed = time.perf_counter()
+        try:
+            compress_stream(feed, cfg, grid, value_range=vr,
+                            sink=crash_path, faults=plan)
+            raise SystemExit("recovery bench: fault did not fire")
+        except faults_mod.InjectedFault:
+            t_crashed = time.perf_counter() - t_crashed
+        from repro.core import stream_engine
+
+        info = stream_engine.resume_info(crash_path)
+        t0 = time.perf_counter()
+        _, stats = compress_stream(feed, cfg, grid, value_range=vr,
+                                   sink=crash_path, resume=True)
+        t_resume = time.perf_counter() - t0
+        with open(crash_path, "rb") as f:
+            identical = f.read() == ref
+        assert identical, "resumed container diverged from uninterrupted"
+
+        # salvage throughput on a footerless archive
+        hdr = encode.tiled_header(ref)
+        last = max(hdr["units"], key=lambda e: e["off"])
+        cut = ref[: last["off"] + last["len"]]
+        t0 = time.perf_counter()
+        blob, rep = encode.salvage_container(cut)
+        t_salvage = time.perf_counter() - t0
+        assert rep["units_recovered"] == len(hdr["units"]), \
+            "salvage lost intact units"
+        from repro.core import tiling as tiling_mod
+
+        _, _, drep = tiling_mod.decompress_tiled(blob, degraded=True)
+        assert drep.complete, "salvaged container failed degraded decode"
+
+    out = {
+        "field": f"advected_turbulence {T}x{H}x{W}",
+        "predictor": "mop", "backend": "xla",
+        "MB": round(mb, 2),
+        "n_units": len(hdr["units"]),
+        "t_encode_unjournaled": round(t_plain, 3),
+        "t_encode_journaled": round(t_journaled, 3),
+        "overhead_pct": round(100.0 * (t_journaled - t_plain)
+                              / max(t_plain, 1e-9), 2),
+        "resume_from": int(info["resume_from"]),
+        "t_crashed_run": round(t_crashed, 3),
+        "t_resume": round(t_resume, 3),
+        "resumed_units": int(stats["n_units"]),
+        "byte_identical": bool(identical),
+        "salvage_bytes": len(cut),
+        "t_salvage": round(t_salvage, 4),
+        "salvage_MBps": round(len(cut) / 2**20 / max(t_salvage, 1e-9),
+                              2),
+        "salvage_units_recovered": int(rep["units_recovered"]),
+        "salvaged_degraded_complete": bool(drep.complete),
+    }
+    log(f"[bench] recovery {T}x{H}x{W} ({out['n_units']} units): "
+        f"journal overhead {out['overhead_pct']}%, resume from frame "
+        f"{out['resume_from']} in {out['t_resume']}s, byte_identical="
+        f"{identical}, salvage {out['salvage_MBps']} MB/s")
+    return out
+
+
 def _bench_trajectory_analysis(eb, shape, log, field="turbulence"):
     """Track-level metric rows: ours vs the non-trajectory-preserving
     baselines (broken vs preserved tracks), with per-type CP counts,
@@ -371,7 +482,8 @@ def bench_compress(small=True, eb=1e-2, backends=("xla",),
                    data=None, tiled_shape=(64, 256, 256),
                    analysis_shape=(16, 48, 48),
                    batched_shape=(16, 64, 64),
-                   async_shape=(32, 64, 64)):
+                   async_shape=(32, 64, 64),
+                   recovery_shape=(24, 64, 64)):
     """Emit the BENCH_compress.json payload.
 
     Each (dataset, predictor, backend) cell reports best-of-``repeat``
@@ -441,6 +553,9 @@ def bench_compress(small=True, eb=1e-2, backends=("xla",),
     async_section = None
     if async_shape is not None:
         async_section = _bench_async(eb, async_shape, repeat, log)
+    recovery = None
+    if recovery_shape is not None:
+        recovery = _bench_recovery(eb, recovery_shape, log)
     traj = None
     if analysis_shape is not None:
         traj = _bench_trajectory_analysis(eb, analysis_shape, log)
@@ -448,6 +563,7 @@ def bench_compress(small=True, eb=1e-2, backends=("xla",),
             "tiled_vs_monolithic": tiled,
             "batched_vs_sequential": batched,
             "async_vs_serial": async_section,
+            "recovery": recovery,
             "trajectory_analysis": traj,
             "eb": eb, "small": small}
 
@@ -476,7 +592,8 @@ if __name__ == "__main__":
             eb=args.eb, backends=backends, data=tiny,
             predictors=("mop",), speedup_shape=(6, 32, 32), repeat=1,
             tiled_shape=(6, 32, 32), analysis_shape=(6, 24, 24),
-            batched_shape=(6, 32, 32), async_shape=(8, 32, 32))
+            batched_shape=(6, 32, 32), async_shape=(8, 32, 32),
+            recovery_shape=(9, 32, 32))
     else:
         payload = bench_compress(
             small=not args.large, eb=args.eb, backends=backends,

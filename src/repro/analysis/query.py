@@ -29,11 +29,16 @@ import os
 import threading
 from collections import OrderedDict
 
+from typing import Optional
+
 import numpy as np
 
+from ..core import backend as backend_mod
 from ..core import encode, fixedpoint
+from ..core import faults as faults_mod
 from . import classify as classify_mod
 from . import extraction, model
+from . import index as index_mod
 from .index import TrackIndex, parse_track_index
 
 
@@ -47,12 +52,20 @@ class ContainerSource:
     truncated short reads).  Every read is length-checked: a truncated
     container raises ContainerError instead of decoding garbage.
 
+    ``retries``/``backoff`` give TRANSIENT I/O errors (flaky NFS,
+    interrupted reads -- raised as OSError) a bounded number of
+    re-attempts with exponential backoff before the error escapes;
+    ContainerError (corrupt bytes) is never retried -- re-reading
+    cannot un-corrupt a frame.  ``faults`` accepts a core.faults
+    FaultPlan probed at site ``"source.read"`` on every raw read.
+
     ``reads``/``bytes_fetched`` count the range reads actually issued --
     the observable the decoded-unit cache is benchmarked and tested
-    against.
+    against; ``retried`` counts recovered transient failures.
     """
 
-    def __init__(self, src):
+    def __init__(self, src, faults=None, retries: int = 0,
+                 backoff: float = 0.01):
         if isinstance(src, (bytes, bytearray, memoryview)):
             self._blob = bytes(src)
             self._fd = None
@@ -65,11 +78,16 @@ class ContainerSource:
             self.size = os.fstat(self._fd).st_size
         self.reads = 0
         self.bytes_fetched = 0
+        self.retried = 0
+        self.retries = int(retries)
+        self.backoff = float(backoff)
+        self.faults = faults_mod.FaultPoint(faults)
         self._lock = threading.Lock()
         self._hdr = None
         self._container_id = None
 
-    def read(self, off: int, ln: int) -> bytes:
+    def _read_once(self, off: int, ln: int) -> bytes:
+        self.faults.check("source.read")
         if self._blob is not None:
             data = self._blob[off : off + ln]
         else:
@@ -96,17 +114,39 @@ class ContainerSource:
             self.bytes_fetched += len(data)
         return data
 
-    def read_many(self, entries: list) -> list:
+    def read(self, off: int, ln: int) -> bytes:
+        def _note(attempt, exc):
+            with self._lock:
+                self.retried += 1
+        return faults_mod.retry_transient(
+            lambda: self._read_once(off, ln), retries=self.retries,
+            backoff=self.backoff, on_retry=_note)
+
+    def read_many(self, entries: list, failures: list = None) -> list:
         """Concurrent range reads for a list of directory entries.
         Bytes sources read serially -- a memory slice has no I/O
-        latency to hide, so pool handoff would be pure overhead."""
-        if len(entries) <= 1 or self._blob is not None:
-            return [self.read(e["off"], e["len"]) for e in entries]
-        from ..parallel.sharding import host_pool
+        latency to hide, so pool handoff would be pure overhead.
 
-        pool = host_pool("range-read")
-        return list(pool.map(lambda e: self.read(e["off"], e["len"]),
-                             entries))
+        Worker exceptions ALWAYS surface: every future is awaited and
+        the first failure re-raises on the caller's thread (typed --
+        a truncated frame arrives as ContainerError, an I/O fault as
+        OSError).  With ``failures`` given (degraded mode), per-entry
+        errors are appended as ``(entry, exc)`` and the result list
+        carries None at the failed positions instead of raising."""
+        def one(e):
+            try:
+                return self.read(e["off"], e["len"])
+            except (encode.ContainerError, OSError) as exc:
+                if failures is None:
+                    raise
+                with self._lock:
+                    failures.append((e, exc))
+                return None
+        if len(entries) <= 1 or self._blob is not None:
+            return [one(e) for e in entries]
+        from ..parallel.sharding import host_map, host_pool
+
+        return host_map(host_pool("range-read"), one, entries)
 
     def close(self):
         if self._fd is not None:
@@ -240,11 +280,18 @@ def configure_unit_cache(max_mb: float) -> UnitCache:
     return unit_cache
 
 
-def fetch_decoded_units(source: ContainerSource, ex, entries: list):
+def fetch_decoded_units(source: ContainerSource, ex, entries: list,
+                        failures: list = None):
     """Decoded ``(box, u_rec, v_rec)`` patches for directory entries,
     served from the unit cache; missing unit frames are range-read
-    CONCURRENTLY, decoded once through the shared executor, and cached.
-    Returns (patches in entry order, cache hit count)."""
+    CONCURRENTLY, checksum-verified, decoded once through the shared
+    executor, and cached.  Returns (patches in entry order, cache hit
+    count).
+
+    With ``failures`` given (degraded mode), units that fail the range
+    read, the CRC check, or decode are appended as ``(entry, exc)`` and
+    SKIPPED -- the patch list then holds only the surviving units, in
+    entry order.  Without it, the first damaged unit raises."""
     cid = source.container_id
     out = {}
     missing = []
@@ -256,14 +303,23 @@ def fetch_decoded_units(source: ContainerSource, ex, entries: list):
             out[e["off"]] = got
     n_hits = len(entries) - len(missing)
     if missing:
-        frames = source.read_many(missing)
+        frames = source.read_many(missing, failures=failures)
         for e, frame in zip(missing, frames):
-            uh, secs = encode.unpack(frame)
-            u_rec, v_rec = ex.decode_unit(uh, secs)
+            if frame is None:       # read failed (already in failures)
+                continue
+            try:
+                encode.check_unit_frame(frame, e)
+                uh, secs = encode.unpack(frame)
+                u_rec, v_rec = ex.decode_unit(uh, secs)
+            except encode.ContainerError as exc:
+                if failures is None:
+                    raise
+                failures.append((e, exc))
+                continue
             val = (tuple(uh["box"]), u_rec, v_rec)
             unit_cache.put((cid, e["off"]), val)
             out[e["off"]] = val
-    return [out[e["off"]] for e in entries], n_hits
+    return [out[e["off"]] for e in entries if e["off"] in out], n_hits
 
 
 def load_track_index(src):
@@ -382,9 +438,17 @@ class TrackDecode:
     ``range_reads``/``bytes_fetched`` count the range reads actually
     issued this call, and shrink to the three footer reads when every
     covering unit is served from the decoded-unit cache.
+
+    Degraded decodes (``degraded=True`` over a damaged container)
+    additionally report what was lost: ``missing_units`` lists the
+    covering units that failed to read or verify, ``segments_dropped``
+    counts track segments whose reconstruction would have gathered
+    into a missing unit, and ``pieces`` holds the surviving connected
+    sub-polylines; ``track`` is then the largest piece (or None when
+    nothing survives).
     """
 
-    track: model.Track
+    track: Optional[model.Track]
     units_read: int
     units_total: int
     bytes_read: int
@@ -392,15 +456,51 @@ class TrackDecode:
     range_reads: int = 0
     bytes_fetched: int = 0
     cache_hits: int = 0
+    missing_units: list = dataclasses.field(default_factory=list)
+    segments_dropped: int = 0
+    pieces: tuple = ()
+
+    @property
+    def complete(self) -> bool:
+        return not self.missing_units
 
 
-def decode_for_track(src, track_id: int, backend=None) -> TrackDecode:
+def _segment_survivors(seg_cell, missing_boxes, shape):
+    """Keep mask over segments whose gather footprint avoids every
+    missing unit's owned box.
+
+    The footprint is the same +2-clamped point cover the track index
+    uses to compute covering units (index._cover_points) -- so a kept
+    segment's node position and Jacobian classification gather ONLY
+    points owned by units that decoded, and are bit-identical to a
+    full, undamaged decode of that segment.
+    """
+    pts = index_mod._cover_points(seg_cell, shape)        # (S, P, 3)
+    bad = np.zeros(pts.shape[:2], dtype=bool)
+    for t0, t1, i0, i1, j0, j1 in missing_boxes:
+        bad |= ((pts[..., 0] >= t0) & (pts[..., 0] < t1)
+                & (pts[..., 1] >= i0) & (pts[..., 1] < i1)
+                & (pts[..., 2] >= j0) & (pts[..., 2] < j1))
+    return ~bad.any(axis=1)
+
+
+def decode_for_track(src, track_id: int, backend=None,
+                     degraded: bool = False) -> TrackDecode:
     """Decode ONLY the units covering ``track_id`` and rebuild its
     polyline exactly (bit-identical to full-decode extraction).  Unit
     decode goes through the shared pipeline executor -- the same
     decode_payload implementation full decode and region decode use --
     and repeated or overlapping queries are served from the
-    decoded-unit cache instead of re-reading and re-decoding."""
+    decoded-unit cache instead of re-reading and re-decoding.
+
+    ``degraded=True``: units that fail to read or checksum-verify are
+    reported in ``missing_units`` instead of raising, segments that
+    would gather into them are dropped, and the surviving connected
+    sub-polylines come back in ``pieces`` (assembled through the same
+    build_tracks path, so each piece is exact on the points it keeps).
+    Structural damage -- an unreadable footer -- still raises; run
+    ``encode.salvage_container`` first for that.
+    """
     from ..core import pipeline as pipeline_mod
 
     source, hdr, idx = load_track_index(src)
@@ -409,7 +509,9 @@ def decode_for_track(src, track_id: int, backend=None) -> TrackDecode:
         T, H, W = hdr["shape"]
         entries = _cover_entries(hdr, idx, track_id)
         ex = pipeline_mod.executor_from_header(hdr, backend)
-        decoded, n_hits = fetch_decoded_units(source, ex, entries)
+        failures = [] if degraded else None
+        decoded, n_hits = fetch_decoded_units(source, ex, entries,
+                                              failures=failures)
         patches_u, patches_v = [], []
         for box, u_rec, v_rec in decoded:
             ufp, vfp = fixedpoint.refix(u_rec, v_rec, hdr["scale"])
@@ -418,24 +520,52 @@ def decode_for_track(src, track_id: int, backend=None) -> TrackDecode:
         up = _PatchField((T, H, W), patches_u)
         vp = _PatchField((T, H, W), patches_v)
 
-        seg_fid, _ = idx.track_segments(track_id)
-        node_fid = np.unique(seg_fid)
-        local_edges = np.searchsorted(node_fid, seg_fid).astype(np.int64)
-        pos = extraction.node_positions(node_fid, up, vp, (T, H, W))
-        types = classify_mod.classify_nodes(up, vp, pos,
-                                            spiral_tol=idx.spiral_tol)
-        # single-component assembly through the same code path as full
-        # extraction, so ordering / loop detection can never diverge
-        (track,) = model.build_tracks(
-            pos, node_fid, types,
-            np.zeros(len(node_fid), dtype=np.int32), local_edges)
-        return TrackDecode(
-            track=dataclasses.replace(track, track_id=track_id),
-            units_read=len(entries),
+        seg_fid, seg_cell = idx.track_segments(track_id)
+        n_dropped = 0
+        if failures:
+            keep = _segment_survivors(
+                seg_cell, [tuple(e["box"]) for e, _ in failures],
+                (T, H, W))
+            n_dropped = int(len(seg_fid) - keep.sum())
+            seg_fid = seg_fid[keep]
+        missing = [{"key": tuple(e["key"]), "box": tuple(e["box"]),
+                    "error": str(err)} for e, err in (failures or ())]
+        acct = dict(
+            units_read=len(entries) - len(missing),
             units_total=len(hdr["units"]),
             bytes_read=int(sum(e["len"] for e in entries)),
             entries=entries,
             range_reads=source.reads,
             bytes_fetched=source.bytes_fetched,
             cache_hits=n_hits,
+            missing_units=missing,
+            segments_dropped=n_dropped,
         )
+        if len(seg_fid) == 0:
+            return TrackDecode(track=None, **acct)
+        node_fid = np.unique(seg_fid)
+        local_edges = np.searchsorted(node_fid, seg_fid).astype(np.int64)
+        pos = extraction.node_positions(node_fid, up, vp, (T, H, W))
+        types = classify_mod.classify_nodes(up, vp, pos,
+                                            spiral_tol=idx.spiral_tol)
+        if n_dropped == 0:
+            # single-component assembly through the same code path as
+            # full extraction, so ordering / loop detection can never
+            # diverge
+            (track,) = model.build_tracks(
+                pos, node_fid, types,
+                np.zeros(len(node_fid), dtype=np.int32), local_edges)
+            return TrackDecode(
+                track=dataclasses.replace(track, track_id=track_id),
+                **acct)
+        # dropped segments can split the survivors into several
+        # connected pieces; label them and assemble each one
+        labels = np.asarray(backend_mod.connected_labels(
+            len(node_fid), local_edges, backend="numpy"))
+        track_of = extraction.dense_track_ids(node_fid, labels)
+        pieces = model.build_tracks(pos, node_fid, types,
+                                    track_of, local_edges)
+        pieces = tuple(sorted(pieces, key=lambda p: -len(p.face_ids)))
+        return TrackDecode(
+            track=dataclasses.replace(pieces[0], track_id=track_id),
+            pieces=pieces, **acct)

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import heapq
 import io
+import os
 import struct
 import zlib
 
@@ -43,6 +44,29 @@ class ContainerError(ValueError):
     subclasses ValueError so pre-existing ``except ValueError`` callers
     keep working.
     """
+
+
+class ChecksumError(ContainerError):
+    """A unit frame's stored checksum does not match its bytes.
+
+    Distinct from generic ContainerError so degraded-mode readers can
+    skip exactly the bit-rotted units while still refusing structural
+    corruption (a forged directory is not salvageable; a flipped bit
+    in one unit is)."""
+
+
+# Per-unit checksum.  The design calls for CRC32C; no C-speed CRC32C
+# implementation ships with CPython and this project adds no
+# dependencies, so the container stores IEEE CRC32 (zlib.crc32, also
+# C speed) and self-describes the algorithm in the footer under
+# ``checksum`` -- a future reader/writer can switch algorithms without
+# a layout change.
+CHECKSUM_ALGO = "crc32"
+
+
+def frame_crc(frame: bytes) -> int:
+    """Checksum of one container frame (footer ``checksum`` algo)."""
+    return zlib.crc32(frame) & 0xFFFFFFFF
 
 
 def have_zstd() -> bool:
@@ -424,18 +448,34 @@ def unpack(blob: bytes):
 # tiled container: random-access unit frames + directory footer
 # ----------------------------------------------------------------------
 #
-# Layout (streaming-writable: units are emitted before the directory is
-# known, so the directory lives in a FOOTER, not a preamble):
+# Layout, version 4 (streaming-writable: units are emitted before the
+# directory is known, so the directory lives in a FOOTER, not a
+# preamble):
 #
-#     MAGIC_TILED | unit frame | unit frame | ... | zlib(msgpack header)
-#     | u32 header_len | MAGIC_TILED
+#     MAGIC_TILED
+#     | "CPPR" u32 len u32 crc | prologue frame          (version >= 4)
+#     | "CPUN" u32 len u32 crc | unit frame              (repeated)
+#     | zlib(msgpack header) | u32 header_len | MAGIC_TILED
 #
 # Each unit frame is a fully self-describing pack() container (magic +
 # codec payload), so random access to one (tile, window) unit is a byte
 # slice at the directory's (off, len) followed by one unpack() -- no
 # other unit is touched.  The footer header carries the global stream
 # parameters plus a ``units`` directory: one entry per unit with its
-# grid key, owned space-time box, byte offset and length.
+# grid key, owned space-time box, byte offset, length and (v4) CRC.
+#
+# The 12-byte frame preambles added in v4 make the body WALKABLE
+# without the footer: ``salvage_container`` rebuilds the directory of
+# a truncated/footerless archive by scanning preambles, checking each
+# frame's CRC, and resynchronizing on the "CPUN" mark across damaged
+# spans.  The prologue frame repeats the global decode parameters that
+# normally live only in the footer, so a salvaged archive is fully
+# decodable.  Directory offsets keep pointing at the FRAME (past the
+# preamble), so every pre-existing (off, len) reader works unchanged;
+# version-3 archives (no preambles, no CRCs) stay readable because
+# nothing on the directory-driven read path looks between frames and
+# checksum verification keys off the entry's ``crc`` field being
+# present.
 #
 # Forward compatibility: the footer header is a msgpack map and readers
 # only look up the keys they know, so OPTIONAL sections ride along as
@@ -446,6 +486,15 @@ def unpack(blob: bytes):
 # byte offsets (tests/test_container_golden.py pins both properties).
 
 TRACK_INDEX_KEY = "track_index"
+
+UNIT_MARK = b"CPUN"       # v4 per-unit frame preamble mark
+PROLOGUE_MARK = b"CPPR"   # v4 prologue frame preamble mark
+_PREAMBLE = struct.Struct("<II")          # (frame_len, frame_crc)
+PREAMBLE_LEN = len(UNIT_MARK) + _PREAMBLE.size
+
+
+def _preamble(mark: bytes, frame: bytes) -> bytes:
+    return mark + _PREAMBLE.pack(len(frame), frame_crc(frame))
 
 
 def pack_ndarray(arr) -> dict:
@@ -477,27 +526,59 @@ class TiledWriter:
     compress_stream's memory footprint independent of the field length.
     """
 
-    def __init__(self, sink=None, level: int = 12):
+    def __init__(self, sink=None, level: int = 12, prologue: dict = None):
         self._own = sink is None
         self._sink = io.BytesIO() if sink is None else sink
         self._level = level
         self._sink.write(MAGIC_TILED)
         self._pos = len(MAGIC_TILED)
         self.units = []
+        if prologue is not None:
+            frame = pack(dict(prologue), {}, self._level)
+            self._sink.write(_preamble(PROLOGUE_MARK, frame))
+            self._sink.write(frame)
+            self._pos += PREAMBLE_LEN + len(frame)
+
+    @classmethod
+    def resumed(cls, sink, pos: int, units: list,
+                level: int = 12) -> "TiledWriter":
+        """Reattach to a partially written container for crash resume.
+
+        ``sink`` must already be positioned at byte ``pos`` (the caller
+        truncates the file to the journal's durable frontier first);
+        ``units`` is the directory recovered from the journal.  Nothing
+        is written here -- the next ``add_unit`` appends exactly where
+        the interrupted run would have.
+        """
+        w = cls.__new__(cls)
+        w._own = False
+        w._sink = sink
+        w._level = level
+        w._pos = int(pos)
+        w.units = [dict(u) for u in units]
+        return w
 
     def add_unit(self, key, box, header: dict, sections: dict) -> None:
         """Append one (window, tile) unit; records its directory entry.
 
         key: (wi, ti, tj) grid coordinates; box: (t0, t1, i0, i1, j0, j1)
         half-open owned ranges (duplicated into the directory so read
-        planning never needs to decode a unit).
+        planning never needs to decode a unit).  The key is also stamped
+        into the unit's own header and the frame is preceded by a
+        "CPUN" length+CRC preamble, which together make the body
+        walkable by ``salvage_container`` with no footer at all.
         """
+        header = dict(header)
+        header["key"] = [int(k) for k in key]
         frame = pack(header, sections, self._level)
+        self._sink.write(_preamble(UNIT_MARK, frame))
+        self._pos += PREAMBLE_LEN
         self.units.append({
             "key": [int(k) for k in key],
             "box": [int(b) for b in box],
             "off": self._pos,
             "len": len(frame),
+            "crc": frame_crc(frame),
         })
         self._sink.write(frame)
         self._pos += len(frame)
@@ -506,6 +587,7 @@ class TiledWriter:
         """Write the directory footer.  Returns the blob when buffering."""
         header = dict(header)
         header["units"] = self.units
+        header.setdefault("checksum", CHECKSUM_ALGO)
         hdr = zlib.compress(msgpack.packb(header, use_bin_type=True), 6)
         self._sink.write(hdr)
         self._sink.write(struct.pack("<I", len(hdr)))
@@ -577,6 +659,24 @@ def tiled_header(blob: bytes) -> dict:
                                len(blob))
 
 
+def check_unit_frame(frame: bytes, entry: dict) -> None:
+    """Verify one unit frame against its directory entry's CRC.
+
+    No-op for pre-v4 entries (no ``crc`` key): old containers carry no
+    per-unit checksum and stay readable.  Raises :class:`ChecksumError`
+    on mismatch so degraded readers can skip exactly this unit.
+    """
+    want = entry.get("crc")
+    if want is None:
+        return
+    got = frame_crc(frame)
+    if got != int(want):
+        raise ChecksumError(
+            f"unit {entry.get('key')} checksum mismatch: stored "
+            f"{int(want):#010x}, frame bytes hash to {got:#010x} "
+            f"(bit rot or torn write)")
+
+
 def read_tiled_unit_ranged(read, entry: dict):
     """Decode ONE unit frame via an (offset, length) range reader."""
     frame = read(entry["off"], entry["len"])
@@ -585,6 +685,7 @@ def read_tiled_unit_ranged(read, entry: dict):
             f"short read: unit frame at [{entry['off']}, "
             f"{entry['off'] + entry['len']}) returned {len(frame)} bytes "
             f"(truncated container?)")
+    check_unit_frame(frame, entry)
     return unpack(frame)
 
 
@@ -592,5 +693,227 @@ def read_tiled_unit(blob: bytes, entry: dict):
     """Decode ONE unit frame by directory entry -- touches only its bytes."""
     return read_tiled_unit_ranged(lambda off, ln: blob[off : off + ln],
                                   entry)
+
+
+# ----------------------------------------------------------------------
+# salvage: rebuild the directory of a truncated / footerless archive
+# ----------------------------------------------------------------------
+
+def _scan_frames(data: bytes):
+    """Walk v4 frame preambles.  Yields dicts per recovered frame:
+    {"mark", "off" (frame start), "len", "crc", "header"} -- only frames
+    whose CRC matches and whose header msgpack-decodes are yielded;
+    damaged spans are skipped by resynchronizing on the "CPUN" mark.
+    Returns (frames, n_dropped, legacy) where legacy=True means no v4
+    preambles were found at all (pre-v4 archive)."""
+    m = len(MAGIC_TILED)
+    frames, n_dropped = [], 0
+    pos = m
+    if data[pos: pos + len(PROLOGUE_MARK)] not in (PROLOGUE_MARK, UNIT_MARK):
+        return frames, n_dropped, True
+    while True:
+        mark = data[pos: pos + 4]
+        if mark not in (PROLOGUE_MARK, UNIT_MARK):
+            nxt = data.find(UNIT_MARK, pos + 1)
+            if nxt < 0:
+                break
+            n_dropped += 1
+            pos = nxt
+            continue
+        body = pos + PREAMBLE_LEN
+        if body > len(data):
+            break                      # torn preamble at EOF
+        ln, crc = _PREAMBLE.unpack(data[pos + 4: body])
+        frame = data[body: body + ln]
+        ok = len(frame) == ln and frame_crc(frame) == crc
+        header = None
+        if ok:
+            try:
+                header, _ = unpack(frame)
+            except ContainerError:
+                ok = False             # false mark hit inside a payload
+        if not ok:
+            nxt = data.find(UNIT_MARK, pos + 1)
+            if nxt < 0:
+                break
+            n_dropped += 1
+            pos = nxt
+            continue
+        frames.append({"mark": bytes(mark), "off": body, "len": ln,
+                       "crc": crc, "header": header})
+        pos = body + ln
+    return frames, n_dropped, False
+
+
+def salvage_container(data, out=None, fallback_header: dict = None):
+    """Rebuild a readable tiled container from a damaged archive.
+
+    ``data`` is the raw bytes (or a path) of a tiled container whose
+    footer is missing/corrupt or whose body has damaged spans.  The v4
+    body is walked via the per-frame preambles; every unit whose CRC
+    verifies is copied into a fresh container and a new directory
+    footer is synthesized from the prologue frame's global parameters
+    (or ``fallback_header`` when the prologue itself was destroyed).
+
+    Returns ``(blob, report)``; when ``out`` is a path the blob is
+    written there and ``blob`` is None.  ``report`` counts recovered /
+    dropped units and scanned bytes.  Pre-v4 archives have no frame
+    preambles to walk and are refused with ContainerError.
+    """
+    if isinstance(data, (str, bytes)) and not isinstance(data, bytes):
+        with open(data, "rb") as f:
+            data = f.read()
+    if data[: len(MAGIC_TILED)] != MAGIC_TILED:
+        raise ContainerError("not a CPTT tiled container (bad magic)")
+    frames, n_dropped, legacy = _scan_frames(data)
+    if legacy:
+        raise ContainerError(
+            "archive has no v4 frame preambles (pre-v4 container); "
+            "nothing to walk -- salvage needs the footer, which is "
+            "the only directory a version<=3 archive has")
+    prologue = None
+    prologue_found = False
+    units = []
+    for fr in frames:
+        if fr["mark"] == PROLOGUE_MARK:
+            if prologue is None:
+                prologue = fr["header"]
+                prologue_found = True
+            continue
+        hdr = fr["header"]
+        if "key" not in hdr or "box" not in hdr:
+            n_dropped += 1
+            continue
+        units.append(fr)
+    if prologue is None:
+        if fallback_header is None:
+            raise ContainerError(
+                "prologue frame unrecoverable and no fallback_header "
+                "given; cannot synthesize decode parameters")
+        prologue = dict(fallback_header)
+    header = {k: v for k, v in prologue.items() if k != "prologue"}
+    shape = list(header.get("shape", [0, 0, 0]))
+    if units:
+        shape[0] = max(int(fr["header"]["box"][1]) for fr in units)
+    header["shape"] = shape
+    header["salvaged"] = True
+    header.setdefault("checksum", CHECKSUM_ALGO)
+
+    buf = io.BytesIO()
+    buf.write(MAGIC_TILED)
+    pframe = pack(dict(prologue), {})
+    buf.write(_preamble(PROLOGUE_MARK, pframe))
+    buf.write(pframe)
+    directory = []
+    for fr in sorted(units, key=lambda f: tuple(f["header"]["key"])):
+        frame = data[fr["off"]: fr["off"] + fr["len"]]
+        buf.write(_preamble(UNIT_MARK, frame))
+        directory.append({
+            "key": [int(k) for k in fr["header"]["key"]],
+            "box": [int(b) for b in fr["header"]["box"]],
+            "off": buf.tell(),
+            "len": fr["len"],
+            "crc": fr["crc"],
+        })
+        buf.write(frame)
+    header["units"] = directory
+    raw = zlib.compress(msgpack.packb(header, use_bin_type=True), 6)
+    buf.write(raw)
+    buf.write(struct.pack("<I", len(raw)))
+    buf.write(MAGIC_TILED)
+    blob = buf.getvalue()
+    report = {
+        "units_recovered": len(directory),
+        "units_dropped": n_dropped,
+        "bytes_scanned": len(data),
+        "bytes_recovered": len(blob),
+        "prologue_recovered": prologue_found,
+    }
+    if out is not None:
+        with open(out, "wb") as f:
+            f.write(blob)
+        return None, report
+    return blob, report
+
+
+# ----------------------------------------------------------------------
+# write-ahead journal (sidecar of a streaming compression run)
+# ----------------------------------------------------------------------
+#
+# The journal is an append-only sidecar file next to the container
+# being streamed (``<container>.journal``).  Records are length- and
+# CRC-framed msgpack maps:
+#
+#     "CPTJ1" | u32 len | u32 crc | msgpack(record) | ...
+#
+# Record types (record["t"]):
+#   "begin"  run fingerprint (grid/config/shape) + data_start offset
+#   "unit"   one emitted unit: directory entry + sidecar-index rows
+#   "ckpt"   a durable frontier: everything needed to resume --
+#            container byte position, scheduler counters, and the
+#            zlib-packed eb/forced planes of every still-resident frame
+#
+# A crash can tear at most the final record; the reader stops at the
+# first length/CRC mismatch and resumes from the last intact "ckpt".
+# fsync ordering: the DATA file is flushed+fsynced before the "ckpt"
+# record is appended and fsynced, so a checkpoint never claims bytes
+# the container does not durably have.
+
+JOURNAL_MAGIC = b"CPTJ1"
+
+
+class JournalWriter:
+    """Append-only, CRC-framed journal for crash-recoverable streaming."""
+
+    def __init__(self, path: str, fresh: bool = True):
+        self.path = path
+        self._f = open(path, "wb" if fresh else "ab")
+        if fresh:
+            self._f.write(JOURNAL_MAGIC)
+            self._f.flush()
+
+    def append(self, record: dict, sync: bool = False) -> None:
+        raw = msgpack.packb(record, use_bin_type=True)
+        self._f.write(struct.pack("<II", len(raw), frame_crc(raw)))
+        self._f.write(raw)
+        if sync:
+            self._f.flush()
+            os.fsync(self._f.fileno())
+
+    def close(self) -> None:
+        self._f.flush()
+        self._f.close()
+
+
+def read_journal(path: str):
+    """All intact records of a journal; a torn tail is tolerated.
+
+    Returns [] for an empty/absent journal.  Raises ContainerError only
+    when the file exists but is not a journal at all (bad magic) --
+    a half-written final record is the EXPECTED crash artifact and
+    simply ends the scan.
+    """
+    try:
+        with open(path, "rb") as f:
+            data = f.read()
+    except FileNotFoundError:
+        return []
+    if not data:
+        return []
+    if data[: len(JOURNAL_MAGIC)] != JOURNAL_MAGIC:
+        raise ContainerError(f"{path}: not a CPTJ1 journal")
+    records = []
+    pos = len(JOURNAL_MAGIC)
+    while pos + 8 <= len(data):
+        ln, crc = struct.unpack("<II", data[pos: pos + 8])
+        raw = data[pos + 8: pos + 8 + ln]
+        if len(raw) != ln or frame_crc(raw) != crc:
+            break                      # torn tail: stop at last intact
+        try:
+            records.append(msgpack.unpackb(raw, raw=False))
+        except Exception:
+            break
+        pos += 8 + ln
+    return records
 
 

@@ -69,7 +69,13 @@ from . import backend as backend_mod
 from . import compressor, ebound, encode, fixedpoint, pipeline, sos
 from . import grid as mesh
 
-TILED_FORMAT_VERSION = 3
+# v4: prologue frame + per-frame "CPUN"/"CPPR" preambles (walkable body,
+# salvageable without a footer) + per-unit CRC in the directory.
+# Version-3 and older archives stay readable: the directory-driven read
+# path never looks between frames and checksum verification keys off
+# the entry's ``crc`` field (tests/test_container_golden.py pins this
+# against a checked-in v3 blob).
+TILED_FORMAT_VERSION = 4
 _EB_BIG = np.int64(2**62)
 # batched unit execution: cap the stacked batch (with pow2 padding this
 # bounds both peak memory and the number of compiled batch sizes)
@@ -250,6 +256,7 @@ class _State:
     preds: dict = dataclasses.field(default_factory=dict)
     seen: dict = dataclasses.field(default_factory=dict)
     writer: object = None
+    prologue: dict = None           # global decode params (v4 prologue)
     tindex: object = None           # analysis.index.TrackIndexBuilder | None
     n_frames: int = 0
     bad_counts: list = dataclasses.field(default_factory=list)
@@ -289,7 +296,7 @@ def _init_state(cfg, grid: TileGrid, H, W, vrange, sink):
         from ..analysis.index import TrackIndexBuilder
 
         tindex = TrackIndexBuilder(grid, be)
-    return _State(
+    st = _State(
         tindex=tindex,
         cfg=cfg, grid=grid, ex=ex, be=be, H=H, W=W,
         scale=plan.scale, eb_abs=plan.eb_abs, tau=plan.tau,
@@ -301,8 +308,16 @@ def _init_state(cfg, grid: TileGrid, H, W, vrange, sink):
         vfp=_Planes(H, W, np.int64, 0),
         eb=_Planes(H, W, np.int64, _EB_BIG),
         forced=_Planes(H, W, bool, all_ll),
-        writer=encode.TiledWriter(sink, cfg.zstd_level),
     )
+    # v4 prologue: the global decode parameters, written up front so a
+    # footerless (crashed/truncated) archive remains self-describing
+    # for encode.salvage_container.  shape[0] is 0 here -- the true T
+    # is only known at finish time; salvage recovers it from unit boxes.
+    prologue = _container_header(st, 0)
+    prologue["prologue"] = True
+    st.prologue = prologue
+    st.writer = encode.TiledWriter(sink, cfg.zstd_level, prologue=prologue)
+    return st
 
 
 def _add_frame(st: _State, t, u_t, v_t, ufp_t=None, vfp_t=None):
@@ -1012,7 +1027,8 @@ def compress_tiled(u, v, cfg=None, grid: Optional[TileGrid] = None,
 
 
 def compress_stream(pairs, cfg=None, grid: Optional[TileGrid] = None,
-                    value_range=None, sink=None, async_engine=False):
+                    value_range=None, sink=None, async_engine=False,
+                    resume=False, faults=None, stage_timeout=None):
     """Streaming tiled compression of an iterable of (u_t, v_t) frames.
 
     ``value_range=(lo, hi)`` must be the exact global min/max over both
@@ -1028,6 +1044,22 @@ def compress_stream(pairs, cfg=None, grid: Optional[TileGrid] = None,
     CPU symbolize/pack overlap on three stages, producing bytes
     IDENTICAL to the serial path (and to compress_tiled) -- only the
     scheduling changes, never the emission order or the packed streams.
+
+    Crash recovery: when ``sink`` is a filesystem path the run keeps a
+    write-ahead journal at ``<sink>.journal`` (fsync'd at window
+    boundaries).  After a crash, rerunning with ``resume=True``
+    restarts from the last durable checkpoint: already-final container
+    bytes are kept, the scheduler state is restored, and only frames
+    from the journal's ``resume_from`` onward are consumed from
+    ``pairs`` -- the finished container is byte-identical to an
+    uninterrupted run (DESIGN.md #12).  ``pairs`` may be a callable
+    ``pairs(t_start) -> iterable`` so a source can seek instead of
+    replaying (a plain iterable is skipped forward).
+
+    ``faults`` (core/faults.py FaultPlan) and ``stage_timeout``
+    (seconds; also REPRO_STAGE_TIMEOUT) are the fault-injection /
+    watchdog hooks of the async engine -- test and benchmark plumbing,
+    inert in production use.
     """
     cfg = cfg or compressor.CompressionConfig()
     grid = grid or getattr(cfg, "tiling", None) or TileGrid()
@@ -1035,12 +1067,19 @@ def compress_stream(pairs, cfg=None, grid: Optional[TileGrid] = None,
     from . import stream_engine
 
     if value_range is None:
+        if resume:
+            raise ValueError(
+                "resume=True needs an explicit value_range: the range "
+                "fixes the fixed-point scale, and a resumed run must "
+                "derive bit-identical parameters without re-reading "
+                "already-compressed frames")
         # the stream must be materialized to learn the global range;
         # with the async engine requested, derive the exact range and
         # still run the engine (same bytes either way) rather than
         # silently downgrading to the serial in-memory path
+        src = pairs(0) if callable(pairs) else pairs
         frames = [(np.asarray(uf, np.float32), np.asarray(vf, np.float32))
-                  for uf, vf in pairs]
+                  for uf, vf in src]
         if not async_engine:
             u = np.stack([f[0] for f in frames])
             v = np.stack([f[1] for f in frames])
@@ -1051,7 +1090,8 @@ def compress_stream(pairs, cfg=None, grid: Optional[TileGrid] = None,
         value_range = (lo, hi)
 
     return stream_engine.run(pairs, cfg, grid, value_range, sink,
-                             async_engine=async_engine)
+                             async_engine=async_engine, resume=resume,
+                             faults=faults, stage_timeout=stage_timeout)
 
 
 # ----------------------------------------------------------------------
@@ -1090,7 +1130,37 @@ def read_plan(src, region=None):
     return _plan_entries(hdr, region)
 
 
-def decompress_tiled(src, region=None, backend=None):
+@dataclasses.dataclass
+class DecodeReport:
+    """What a degraded-mode decode could and could not recover.
+
+    ``missing_units`` lists one dict per unit that failed its checksum
+    or could not be read ({"key", "box", "error"}); the corresponding
+    output voxels are holes (left at 0).  A report with no missing
+    units is a complete decode."""
+
+    n_units: int = 0                 # units the region plan touched
+    n_decoded: int = 0
+    missing_units: list = dataclasses.field(default_factory=list)
+
+    @property
+    def complete(self) -> bool:
+        return not self.missing_units
+
+    def hole_mask(self, region):
+        """(T, H, W)-of-region bool mask of voxels lost to missing
+        units (True = hole)."""
+        rt0, rt1, ri0, ri1, rj0, rj1 = region
+        mask = np.zeros((rt1 - rt0, ri1 - ri0, rj1 - rj0), dtype=bool)
+        for m in self.missing_units:
+            t0, t1, i0, i1, j0, j1 = m["box"]
+            mask[max(t0, rt0) - rt0: max(min(t1, rt1) - rt0, 0),
+                 max(i0, ri0) - ri0: max(min(i1, ri1) - ri0, 0),
+                 max(j0, rj0) - rj0: max(min(j1, rj1) - rj0, 0)] = True
+        return mask
+
+
+def decompress_tiled(src, region=None, backend=None, degraded=False):
     """Decode a tiled container (whole field, or just ``region``).
 
     ``src`` is container bytes or a filesystem path (range reads only).
@@ -1099,9 +1169,18 @@ def decompress_tiled(src, region=None, backend=None):
     overlapping decodes are served from the process-wide decoded-unit
     cache (analysis/query.py) instead of re-reading and re-decoding
     covering units.
+
+    ``degraded=True`` turns per-unit damage (checksum mismatch, short
+    read) from a raise into a report: the return becomes
+    ``(u, v, DecodeReport)``, damaged units' voxels are holes (0) and
+    ``report.missing_units`` says exactly which and where.  Structural
+    damage (corrupt footer/directory) still raises -- there is nothing
+    to partially decode without a directory; run
+    ``encode.salvage_container`` first.
     """
     from ..analysis import query as query_mod
 
+    report = DecodeReport()
     with _source_of(src) as source:
         hdr = source.header()
         version = hdr.get("version", 1)
@@ -1122,6 +1201,8 @@ def decompress_tiled(src, region=None, backend=None):
                          dtype=np.float32)
         v_out = np.zeros_like(u_out)
         entries = _plan_entries(hdr, region)
+        report.n_units = len(entries)
+        failures = [] if degraded else None
         full = (rt0, rt1, ri0, ri1, rj0, rj1) == (0, T, 0, H, 0, W)
         if full:
             # full-field decode: stream unit-at-a-time (one compressed
@@ -1130,13 +1211,19 @@ def decompress_tiled(src, region=None, backend=None):
             # entry with real reuse probability for zero future hits
             def decoded_iter():
                 for entry in entries:
-                    uh, secs = source.unit(entry)
-                    u_rec, v_rec = ex.decode_unit(uh, secs)
+                    try:
+                        uh, secs = source.unit(entry)
+                        u_rec, v_rec = ex.decode_unit(uh, secs)
+                    except encode.ContainerError as e:
+                        if failures is None:
+                            raise
+                        failures.append((entry, e))
+                        continue
                     yield tuple(uh["box"]), u_rec, v_rec
             decoded = decoded_iter()
         else:
-            decoded, _ = query_mod.fetch_decoded_units(source, ex,
-                                                       entries)
+            decoded, _ = query_mod.fetch_decoded_units(
+                source, ex, entries, failures=failures)
         for box, u_rec, v_rec in decoded:
             t0, t1, i0, i1, j0, j1 = box
             ct0, ct1 = max(t0, rt0), min(t1, rt1)
@@ -1149,10 +1236,20 @@ def decompress_tiled(src, region=None, backend=None):
                    slice(cj0 - rj0, cj1 - rj0))
             u_out[dst] = u_rec[u_src]
             v_out[dst] = v_rec[u_src]
+            report.n_decoded += 1
+        if failures:
+            report.missing_units = [
+                {"key": tuple(e["key"]), "box": tuple(e["box"]),
+                 "error": str(err)} for e, err in failures]
+    if degraded:
+        return u_out, v_out, report
     return u_out, v_out
 
 
-def decompress_region(src, region, backend=None):
+def decompress_region(src, region, backend=None, degraded=False):
     """Random-access decode of (t0, t1, i0, i1, j0, j1) -- reads only
-    the units covering the region (cached across repeated queries)."""
-    return decompress_tiled(src, region=region, backend=backend)
+    the units covering the region (cached across repeated queries).
+    ``degraded=True`` reports damaged units instead of raising (see
+    decompress_tiled)."""
+    return decompress_tiled(src, region=region, backend=backend,
+                            degraded=degraded)

@@ -290,6 +290,30 @@ def host_pool(name: str, workers: int = DEFAULT_HOST_WORKERS):
                               thread_name_prefix=f"repro-{name}")
 
 
+def host_map(pool, fn, items):
+    """``pool.map`` with STRICT failure surfacing.
+
+    ``Executor.map`` evaluates lazily and tears down mid-iteration on
+    the first worker exception, silently abandoning later results.
+    Here every item is submitted up front, every future is awaited, and
+    the first exception (in submission order) re-raises on the caller's
+    thread with its original type -- a worker can never fail without
+    the caller seeing it.  Returns results in item order.
+    """
+    futures = [pool.submit(fn, it) for it in items]
+    results, first_exc = [], None
+    for f in futures:
+        try:
+            results.append(f.result())
+        except BaseException as e:     # noqa: BLE001 -- re-raised below
+            if first_exc is None:
+                first_exc = e
+            results.append(None)
+    if first_exc is not None:
+        raise first_exc
+    return results
+
+
 def map_tiles_padded(fn, *batched):
     """map_tiles that PADS a ragged batch up to a device-count multiple
     (repeating the last tile) so the shard_mapped path is always taken,

@@ -31,6 +31,13 @@ import jax
 import numpy as np
 
 
+class CheckpointError(RuntimeError):
+    """A checkpoint is absent, incomplete, or inconsistent with the
+    restore template.  A real error class (not ``assert``): restore
+    validation must survive ``python -O``, and callers recovering from
+    a crashed trainer need a typed failure to catch."""
+
+
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
@@ -150,7 +157,8 @@ def restore(directory: str, template_trees: Dict[str, Any],
     mesh-reshape/elastic path.  Returns (trees, manifest)."""
     if step is None:
         step = latest_step(directory)
-        assert step is not None, f"no checkpoint in {directory}"
+        if step is None:
+            raise CheckpointError(f"no checkpoint in {directory}")
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
@@ -171,7 +179,11 @@ def restore(directory: str, template_trees: Dict[str, Any],
             if "lossy_q" in meta_leaf:
                 arr = (arr.astype(np.float64) * meta_leaf["lossy_q"]).astype(
                     np.dtype(meta_leaf["dtype"]))
-            assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise CheckpointError(
+                    f"checkpoint leaf {key} has shape "
+                    f"{tuple(arr.shape)}, template expects "
+                    f"{tuple(leaf.shape)}")
             if shd_leaves is not None:
                 arr = jax.device_put(arr, shd_leaves[i])
             new_leaves.append(arr)

@@ -26,10 +26,22 @@ def main() -> int:
         print("opt_mode_check: warning: not running under python -O; "
               "the assert-stripping scenario is not being exercised",
               file=sys.stderr)
+    import tempfile
+
     mono, tiled, hdr = cc.build_blobs()
     cc.run_matrix(mono, tiled, hdr)
-    print(f"opt_mode_check: typed container errors hold "
-          f"(optimize={sys.flags.optimize})")
+    with tempfile.TemporaryDirectory() as td:
+        cc.run_recovery_matrix(tiled, hdr, td)
+
+    # checkpoint restore validation must be a real raise, not an assert
+    from repro.train import checkpoint
+
+    with tempfile.TemporaryDirectory() as td:
+        cc.expect(checkpoint.CheckpointError,
+                  lambda: checkpoint.restore(td, {}),
+                  "restore from an empty checkpoint dir")
+    print(f"opt_mode_check: typed container errors + recovery matrix "
+          f"hold (optimize={sys.flags.optimize})")
     return 0
 
 

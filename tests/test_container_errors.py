@@ -34,6 +34,19 @@ def test_matrix_zlib_codec(monkeypatch):
     assert cc.run_matrix(mono, tiled, hdr)
 
 
+def test_recovery_matrix_default_codec(blobs, tmp_path):
+    _, tiled, hdr = blobs
+    assert cc.run_recovery_matrix(tiled, hdr, str(tmp_path))
+
+
+def test_recovery_matrix_zlib_codec(monkeypatch, tmp_path):
+    """Salvage and resume must work on the CPTL1 fallback container."""
+    monkeypatch.setattr(encode, "zstandard", None)
+    assert encode.backend_codec() == "zlib"
+    _, tiled, hdr = cc.build_blobs()
+    assert cc.run_recovery_matrix(tiled, hdr, str(tmp_path))
+
+
 def test_unknown_codec_regression():
     """encode.codec_decompress used to route ANY unknown codec string
     through zlib, decoding forged headers to garbage."""

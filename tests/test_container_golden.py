@@ -77,7 +77,7 @@ def test_track_index_rides_without_version_bump():
         u, v, CompressionConfig(eb=1e-2, track_index=True),
         TileGrid(tile_h=5, tile_w=7, window_t=2))
     hdr = encode.tiled_header(blob)
-    assert hdr["version"] == TILED_FORMAT_VERSION == 3
+    assert hdr["version"] == TILED_FORMAT_VERSION == 4
     assert encode.TRACK_INDEX_KEY in hdr
     # the index section is self-versioned instead
     assert hdr[encode.TRACK_INDEX_KEY]["version"] >= 1
@@ -85,6 +85,40 @@ def test_track_index_rides_without_version_bump():
     ur, vr = decompress(blob)
     assert np.abs(ur.astype(np.float64) - u).max() <= stats["eb_abs"]
     assert np.abs(vr.astype(np.float64) - v).max() <= stats["eb_abs"]
+
+
+def test_golden_v3_tiled_blob_decodes_bitwise():
+    """A checked-in pre-CRC (version-3) tiled container: the v4 reader
+    must keep reading it bitwise.  v3 directory entries carry no
+    ``crc`` and v3 frames have no per-unit preamble; the reader only
+    verifies checksums when the entry advertises one, so old blobs
+    decode exactly as before the bump."""
+    from repro.core import decompress_tiled
+    from repro.analysis import query
+
+    with open(os.path.join(_DATA, "golden_v3_tiled.cptt"), "rb") as f:
+        blob = f.read()
+    exp = np.load(os.path.join(_DATA, "golden_v3_expected.npz"))
+    hdr = encode.tiled_header(blob)
+    assert hdr["version"] == 3
+    assert all("crc" not in e for e in hdr["units"])
+    ur, vr = decompress_tiled(blob)
+    assert np.array_equal(ur, exp["ur"])
+    assert np.array_equal(vr, exp["vr"])
+    assert np.abs(ur.astype(np.float64) - exp["u"]).max() <= exp["eb_abs"]
+    assert np.abs(vr.astype(np.float64) - exp["v"]).max() <= exp["eb_abs"]
+    # track queries work across the version boundary too
+    assert query.track_summaries(blob)
+
+
+def test_golden_v3_salvage_refused_not_misparsed():
+    """Pre-v4 containers have no self-describing unit preambles, so
+    salvage must REFUSE them (typed error) rather than resync on
+    accidental byte matches and fabricate units."""
+    with open(os.path.join(_DATA, "golden_v3_tiled.cptt"), "rb") as f:
+        blob = f.read()
+    with pytest.raises(encode.ContainerError, match="pre-v4|version"):
+        encode.salvage_container(blob[: len(blob) - 40])
 
 
 def test_magics_disjoint():

@@ -1,0 +1,240 @@
+"""Deterministic fault-injection harness + the paths it hardens.
+
+core/faults.py is the instrument the recovery tests are built on, so
+its own semantics are pinned first (determinism, transient windows,
+retry/backoff accounting).  Then the consumers: ContainerSource's
+bounded retry, host_map's strict exception surfacing, and the async
+engine's shutdown paths (worker failure with bounded queues at
+capacity, watchdog stalls, thread death).
+"""
+import io
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import CompressionConfig, TileGrid, compress_stream
+from repro.core import encode
+from repro.core import faults as faults_mod
+from repro.core import stream_engine
+from repro.core.faults import (
+    FaultPlan,
+    FaultPoint,
+    InjectedFault,
+    InjectedThreadDeath,
+    retry_transient,
+)
+from repro.data import synthetic
+
+
+GRID = TileGrid(tile_h=8, tile_w=12, window_t=3)
+
+
+def _field(T=10):
+    u, v = synthetic.double_gyre(T=T, H=16, W=24)
+    vr = (float(min(u.min(), v.min())), float(max(u.max(), v.max())))
+    return list(zip(u, v)), vr
+
+
+# ---------------------------------------------------------------- plan
+
+def test_plan_fires_on_exact_call_number():
+    plan = FaultPlan().io_error("x", nth=3)
+    plan.check("x")
+    plan.check("x")
+    with pytest.raises(InjectedFault):
+        plan.check("x")
+    plan.check("x")                        # one-shot: later calls pass
+    assert plan.calls("x") == 4
+    assert plan.fired("x") == 1
+    assert plan.log == [("x", "io_error", 3)]
+
+
+def test_plan_sites_are_independent():
+    plan = FaultPlan().io_error("a", nth=1)
+    plan.check("b")                        # different site: no fire
+    with pytest.raises(InjectedFault):
+        plan.check("a")
+
+
+def test_transient_window_then_success():
+    plan = FaultPlan().io_error("x", nth=2, transient=2)
+    plan.check("x")
+    for _ in range(3):                     # calls 2, 3, 4 raise
+        with pytest.raises(InjectedFault):
+            plan.check("x")
+    plan.check("x")                        # call 5 succeeds
+    assert plan.fired("x") == 3
+
+
+def test_spread_is_seed_deterministic():
+    a = [FaultPlan(seed=7).spread(1, 100) for _ in range(5)]
+    b = [FaultPlan(seed=7).spread(1, 100) for _ in range(5)]
+    assert a == b
+    assert all(1 <= x <= 100 for x in a)
+
+
+def test_thread_death_is_not_an_exception():
+    assert not issubclass(InjectedThreadDeath, Exception)
+    plan = FaultPlan().thread_death("x")
+    with pytest.raises(InjectedThreadDeath):
+        plan.check("x")
+
+
+def test_stall_sleeps():
+    plan = FaultPlan().stall("x", seconds=0.05)
+    t0 = time.monotonic()
+    plan.check("x")
+    assert time.monotonic() - t0 >= 0.05
+
+
+def test_fault_point_nullable():
+    fpt = FaultPoint(None)
+    fpt.check("anything")                  # no-op, no raise
+    assert not fpt
+    assert FaultPoint(FaultPlan())
+
+
+# ------------------------------------------------------------- retry
+
+def test_retry_transient_recovers_and_counts():
+    plan = FaultPlan().io_error("x", nth=1, transient=1)
+    notes = []
+    out = retry_transient(lambda: (plan.check("x"), "ok")[1],
+                          retries=3, backoff=0,
+                          on_retry=lambda n, e: notes.append(n))
+    assert out == "ok"
+    assert notes == [1, 2]
+
+
+def test_retry_transient_bounded_reraises_original():
+    plan = FaultPlan().io_error("x", nth=1, transient=99)
+    with pytest.raises(InjectedFault):
+        retry_transient(lambda: plan.check("x"), retries=2, backoff=0)
+    assert plan.calls("x") == 3            # 1 try + 2 retries, no more
+
+
+def test_retry_never_swallows_thread_death():
+    plan = FaultPlan().thread_death("x")
+    with pytest.raises(InjectedThreadDeath):
+        retry_transient(lambda: plan.check("x"), retries=5, backoff=0)
+    assert plan.calls("x") == 1            # not retried
+
+
+# ------------------------------------------- ContainerSource consumers
+
+@pytest.fixture(scope="module")
+def container():
+    u, v = synthetic.double_gyre(T=6, H=16, W=24)
+    from repro.core import compress_tiled
+
+    blob, _ = compress_tiled(u, v, CompressionConfig(track_index=True),
+                             GRID)
+    return blob
+
+
+def test_source_retries_transient_reads(container, tmp_path):
+    from repro.analysis.query import ContainerSource
+
+    p = tmp_path / "c.cptt"
+    p.write_bytes(container)
+    plan = FaultPlan().io_error("source.read", nth=1, transient=1)
+    src = ContainerSource(str(p), faults=plan, retries=2, backoff=0)
+    hdr = src.header()                     # survives the fault window
+    assert hdr["units"]
+    assert src.retried == 2
+    src.close()
+
+
+def test_source_exhausted_retries_raise_typed(container):
+    from repro.analysis.query import ContainerSource
+
+    plan = FaultPlan().io_error("source.read", nth=1, transient=99)
+    src = ContainerSource(container, faults=plan, retries=1, backoff=0)
+    with pytest.raises(InjectedFault):
+        src.read(0, 5)
+
+
+def test_host_pool_worker_fault_reaches_caller(container, tmp_path):
+    """A read fault on a pool worker thread must propagate to the
+    caller as the original typed error -- pools that swallow worker
+    exceptions turn damaged containers into silent short output."""
+    from repro.analysis.query import ContainerSource
+
+    p = tmp_path / "c.cptt"
+    p.write_bytes(container)
+    hdr = ContainerSource(container).header()
+    assert len(hdr["units"]) > 1           # so read_many takes the pool
+    plan = FaultPlan().io_error("source.read", nth=3)
+    src = ContainerSource(str(p), faults=plan)
+    with pytest.raises(OSError):
+        src.read_many(hdr["units"])
+    src.close()
+
+
+def test_host_map_waits_everyone_raises_first():
+    from repro.parallel.sharding import host_map, host_pool
+
+    done = []
+
+    def work(i):
+        if i == 2:
+            raise KeyError("boom")
+        time.sleep(0.01)
+        done.append(i)
+        return i
+
+    with pytest.raises(KeyError):
+        host_map(host_pool("test-host-map", 4), work, range(6))
+    assert sorted(done) == [0, 1, 3, 4, 5]  # later items still ran
+
+
+# ------------------------------------------------- async engine paths
+
+def test_compute_failure_with_full_writer_queue_no_deadlock():
+    """Regression: an exception on the caller/compute side while the
+    writer queue sits at capacity used to deadlock shutdown.  The
+    engine must drain/poison its bounded queues and re-raise within
+    the watchdog budget."""
+    pairs, vr = _field(T=10)
+    plan = FaultPlan().io_error("stream.compute", nth=8)
+    t0 = time.monotonic()
+    with pytest.raises(InjectedFault):
+        compress_stream(iter(pairs), CompressionConfig(), GRID,
+                        value_range=vr, sink=io.BytesIO(),
+                        async_engine=True, faults=plan,
+                        stage_timeout=30.0)
+    assert time.monotonic() - t0 < 30.0
+
+
+def test_writer_thread_fault_propagates(tmp_path):
+    pairs, vr = _field(T=10)
+    plan = FaultPlan().io_error("stream.write", nth=2)
+    with pytest.raises(InjectedFault):
+        compress_stream(iter(pairs), CompressionConfig(), GRID,
+                        value_range=vr,
+                        sink=str(tmp_path / "w.cptt"),
+                        async_engine=True, faults=plan)
+
+
+def test_ingest_thread_death_propagates():
+    pairs, vr = _field(T=10)
+    plan = FaultPlan().thread_death("stream.ingest", nth=3)
+    with pytest.raises(InjectedThreadDeath):
+        compress_stream(iter(pairs), CompressionConfig(), GRID,
+                        value_range=vr, sink=io.BytesIO(),
+                        async_engine=True, faults=plan)
+
+
+def test_writer_stall_trips_watchdog():
+    pairs, vr = _field(T=10)
+    # the stall must outlive compute even on a loaded machine, or the
+    # writer wakes before the watchdog looks and the run succeeds; the
+    # stalled writer is a daemon thread, so the test itself returns as
+    # soon as the watchdog trips (~stage_timeout), not after 60s
+    plan = FaultPlan().stall("stream.write", seconds=60.0, nth=1)
+    with pytest.raises(stream_engine.EngineStallError):
+        compress_stream(iter(pairs), CompressionConfig(), GRID,
+                        value_range=vr, sink=io.BytesIO(),
+                        async_engine=True, faults=plan,
+                        stage_timeout=0.2)

@@ -1,0 +1,335 @@
+"""Crash-recoverable streaming + self-healing reads (DESIGN.md #12).
+
+The contract under test:
+
+* ``compress_stream(..., sink=path)`` journals its progress; a run
+  killed at ANY point restarts with ``resume=True`` and finishes a
+  container byte-identical to an uninterrupted run (the tentpole
+  guarantee -- resume is invisible in the output bytes);
+* ``encode.salvage_container`` rebuilds a directory for a truncated /
+  footerless v4 archive, recovering every unit whose frame is intact;
+* degraded reads skip checksum-failed units and REPORT the holes
+  instead of raising, and every surviving value is bit-identical to an
+  undamaged decode (the FC=0 preservation argument extends to partial
+  reads).
+"""
+import io
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompressionConfig,
+    TileGrid,
+    compress_stream,
+    compress_tiled,
+    decompress_region,
+    decompress_tiled,
+)
+from repro.core import encode
+from repro.core import faults as faults_mod
+from repro.core import stream_engine
+from repro.analysis import query
+from repro.data import synthetic
+
+
+GRID = TileGrid(tile_h=8, tile_w=12, window_t=3)
+CFG = CompressionConfig(track_index=True)
+
+
+@pytest.fixture(scope="module")
+def field():
+    u, v = synthetic.double_gyre(T=18, H=16, W=24)
+    vr = (float(min(u.min(), v.min())), float(max(u.max(), v.max())))
+    return u, v, list(zip(u, v)), vr
+
+
+@pytest.fixture(scope="module")
+def container(field):
+    u, v, _, _ = field
+    blob, _ = compress_tiled(u, v, CFG, GRID)
+    return blob
+
+
+@pytest.fixture(scope="module")
+def reference(field, tmp_path_factory):
+    _, _, pairs, vr = field
+    p = tmp_path_factory.mktemp("ref") / "ref.cptt"
+    compress_stream(lambda t0: iter(pairs[t0:]), CFG, GRID,
+                    value_range=vr, sink=str(p))
+    return p.read_bytes()
+
+
+# ------------------------------------------------------ journal/resume
+
+def test_stream_to_path_equals_bytesio_and_tiled(field, reference):
+    u, v, pairs, vr = field
+    sink = io.BytesIO()
+    compress_stream(iter(pairs), CFG, GRID, value_range=vr, sink=sink)
+    assert reference == sink.getvalue()
+    blob, _ = compress_tiled(u, v, CFG, GRID)
+    assert reference == blob
+
+
+def test_completed_run_leaves_no_journal(field, tmp_path):
+    _, _, pairs, vr = field
+    p = tmp_path / "c.cptt"
+    compress_stream(iter(pairs), CFG, GRID, value_range=vr, sink=str(p))
+    assert not os.path.exists(str(p) + ".journal")
+
+
+@pytest.mark.parametrize("use_async", [False, True],
+                         ids=["serial", "async"])
+@pytest.mark.parametrize("nth", [2, 9, 14, 17])
+def test_kill_and_resume_byte_identical(field, reference, tmp_path,
+                                        nth, use_async):
+    """Crash at frame `nth` (spanning before-first-checkpoint through
+    last-window), resume, byte-diff against the uninterrupted run."""
+    _, _, pairs, vr = field
+    p = tmp_path / "crash.cptt"
+    plan = faults_mod.FaultPlan().io_error("stream.compute", nth=nth)
+
+    def feed(t0):
+        return iter(pairs[t0:])
+
+    with pytest.raises(faults_mod.InjectedFault):
+        compress_stream(feed, CFG, GRID, value_range=vr, sink=str(p),
+                        async_engine=use_async, faults=plan)
+    info = stream_engine.resume_info(str(p))
+    assert info["resumable"] and not info["complete"]
+    blob, stats = compress_stream(feed, CFG, GRID, value_range=vr,
+                                  sink=str(p), resume=True,
+                                  async_engine=use_async)
+    assert stats["resumed_from"] == info["resume_from"]
+    assert p.read_bytes() == reference
+    assert not os.path.exists(str(p) + ".journal")
+
+
+def test_double_crash_then_resume(field, reference, tmp_path):
+    """Resume runs are themselves resumable: crash, resume-and-crash
+    again, resume to completion."""
+    _, _, pairs, vr = field
+    p = tmp_path / "crash2.cptt"
+
+    def feed(t0):
+        return iter(pairs[t0:])
+
+    with pytest.raises(faults_mod.InjectedFault):
+        compress_stream(feed, CFG, GRID, value_range=vr, sink=str(p),
+                        faults=faults_mod.FaultPlan().io_error(
+                            "stream.compute", nth=16))
+    with pytest.raises(faults_mod.InjectedFault):
+        compress_stream(feed, CFG, GRID, value_range=vr, sink=str(p),
+                        resume=True,
+                        faults=faults_mod.FaultPlan().io_error(
+                            "stream.compute", nth=2))
+    compress_stream(feed, CFG, GRID, value_range=vr, sink=str(p),
+                    resume=True)
+    assert p.read_bytes() == reference
+
+
+def test_resume_of_complete_container_is_noop(field, reference,
+                                              tmp_path):
+    _, _, pairs, vr = field
+    p = tmp_path / "done.cptt"
+    p.write_bytes(reference)
+    blob, stats = compress_stream(lambda t0: iter(pairs[t0:]), CFG,
+                                  GRID, value_range=vr, sink=str(p),
+                                  resume=True)
+    assert stats.get("already_complete")
+    assert p.read_bytes() == reference
+
+
+def test_resume_refuses_mismatched_config(field, tmp_path):
+    """The journal fingerprints (cfg, grid, value_range, H, W); a
+    resume under different settings must fail typed, not splice
+    incompatible units into one container."""
+    _, _, pairs, vr = field
+    p = tmp_path / "fp.cptt"
+    with pytest.raises(faults_mod.InjectedFault):
+        compress_stream(iter(pairs), CFG, GRID, value_range=vr,
+                        sink=str(p),
+                        faults=faults_mod.FaultPlan().io_error(
+                            "stream.compute", nth=14))
+    other = CompressionConfig(eb=3e-3, track_index=True)
+    with pytest.raises(stream_engine.ResumeError):
+        compress_stream(iter(pairs), other, GRID, value_range=vr,
+                        sink=str(p), resume=True)
+
+
+def test_resume_requires_path_sink(field):
+    _, _, pairs, vr = field
+    with pytest.raises(ValueError):
+        compress_stream(iter(pairs), CFG, GRID, value_range=vr,
+                        sink=io.BytesIO(), resume=True)
+
+
+def test_torn_journal_tail_is_tolerated(field, reference, tmp_path):
+    """fsync ordering means a crash can tear the LAST journal record;
+    the reader must fall back to the previous checkpoint, and resume
+    still finishes byte-identical."""
+    _, _, pairs, vr = field
+    p = tmp_path / "torn.cptt"
+
+    def feed(t0):
+        return iter(pairs[t0:])
+
+    with pytest.raises(faults_mod.InjectedFault):
+        compress_stream(feed, CFG, GRID, value_range=vr, sink=str(p),
+                        faults=faults_mod.FaultPlan().io_error(
+                            "stream.compute", nth=17))
+    jp = str(p) + ".journal"
+    raw = open(jp, "rb").read()
+    open(jp, "wb").write(raw[:-7])         # tear mid-record
+    compress_stream(feed, CFG, GRID, value_range=vr, sink=str(p),
+                    resume=True)
+    assert p.read_bytes() == reference
+
+
+def test_resume_info_shapes(field, reference, tmp_path):
+    _, _, pairs, vr = field
+    p = tmp_path / "info.cptt"
+    p.write_bytes(reference)
+    info = stream_engine.resume_info(str(p))
+    assert info["complete"] and not info["resumable"]
+
+
+# ------------------------------------------------------------ salvage
+
+def test_salvage_footerless_recovers_all_units(container):
+    hdr = encode.tiled_header(container)
+    last = max(hdr["units"], key=lambda e: e["off"])
+    cut = container[: last["off"] + last["len"]]   # footer gone entirely
+    blob, rep = encode.salvage_container(cut)
+    assert rep["units_recovered"] == len(hdr["units"])
+    assert rep["prologue_recovered"]
+    h2 = encode.tiled_header(blob)
+    assert h2.get("salvaged") is True
+    ur_s, vr_s = decompress_tiled(blob)
+    ur, vr = decompress_tiled(container)
+    assert np.array_equal(ur_s, ur)
+    assert np.array_equal(vr_s, vr)
+
+
+def test_salvage_to_file(container, tmp_path):
+    last = max(encode.tiled_header(container)["units"],
+               key=lambda e: e["off"])
+    out = tmp_path / "salvaged.cptt"
+    res, rep = encode.salvage_container(
+        container[: last["off"] + last["len"] // 3], out=str(out))
+    assert res is None and rep["units_recovered"] > 0
+    decompress_tiled(out.read_bytes())
+
+
+def test_salvage_refuses_non_container():
+    with pytest.raises(encode.ContainerError):
+        encode.salvage_container(b"not a container at all")
+
+
+# ----------------------------------------------------- degraded reads
+
+def _flip(blob: bytes, entry: dict) -> bytes:
+    ba = bytearray(blob)
+    ba[entry["off"] + entry["len"] // 2] ^= 0x20
+    return bytes(ba)
+
+
+def test_degraded_region_reports_holes(container):
+    hdr = encode.tiled_header(container)
+    entry = hdr["units"][2]
+    bad = _flip(container, entry)
+    with pytest.raises(encode.ChecksumError):
+        decompress_tiled(bad)
+    u_ref, v_ref = decompress_tiled(container)
+    u_d, v_d, rep = decompress_tiled(bad, degraded=True)
+    assert not rep.complete
+    assert [m["key"] for m in rep.missing_units] == [tuple(entry["key"])]
+    t0, t1, i0, i1, j0, j1 = entry["box"]
+    hole = np.zeros(u_ref.shape, bool)
+    hole[t0:t1, i0:i1, j0:j1] = True
+    assert np.array_equal(u_d[~hole], u_ref[~hole])
+    assert not u_d[hole].any() and not v_d[hole].any()
+    mask = rep.hole_mask((0, u_ref.shape[0], 0, u_ref.shape[1],
+                          0, u_ref.shape[2]))
+    assert np.array_equal(mask, hole)
+
+
+def test_degraded_region_decode(container):
+    query.configure_unit_cache(0)
+    try:
+        hdr = encode.tiled_header(container)
+        entry = hdr["units"][0]
+        bad = _flip(container, entry)
+        region = tuple(entry["box"])
+        u_d, v_d, rep = decompress_region(bad, region, degraded=True)
+        assert rep.n_decoded < rep.n_units or rep.n_units == 1
+        assert not rep.complete
+        assert not u_d.any()               # region IS the hole
+    finally:
+        query.configure_unit_cache(256)
+
+
+def test_degraded_track_decode_drops_only_affected(container):
+    """Kill one covering unit: the surviving piece(s) must be
+    node-for-node bit-identical to the full decode (FC=0 on what
+    survives), and every dropped segment must actually touch the
+    missing box."""
+    query.configure_unit_cache(0)
+    try:
+        s = max(query.track_summaries(container),
+                key=lambda s: s["n_nodes"])
+        tid = s["track_id"]
+        full = query.decode_for_track(container, tid)
+        assert full.complete and full.track is not None
+        src = query.ContainerSource(container)
+        idx = query.parse_track_index(src.header())
+        cover = query._cover_entries(src.header(), idx, tid)
+        bad = _flip(container, cover[0])
+        with pytest.raises(encode.ChecksumError):
+            query.decode_for_track(bad, tid)
+        d = query.decode_for_track(bad, tid, degraded=True)
+        assert not d.complete
+        assert [m["key"] for m in d.missing_units] \
+            == [tuple(cover[0]["key"])]
+        assert d.segments_dropped > 0
+        ref = {int(f): tuple(n) for f, n in
+               zip(full.track.face_ids, full.track.nodes)}
+        pieces = d.pieces or ((d.track,) if d.track is not None else ())
+        n_nodes = 0
+        for piece in pieces:
+            for f, n in zip(piece.face_ids, piece.nodes):
+                assert tuple(n) == ref[int(f)]
+                n_nodes += 1
+        assert 0 < n_nodes < len(full.track.face_ids)
+    finally:
+        query.configure_unit_cache(256)
+
+
+def test_degraded_decode_of_salvaged_truncation(container):
+    """End-to-end damaged-archive path: truncate mid-frame, salvage,
+    then degraded-decode the salvaged container -- values on recovered
+    units match the original bit-for-bit."""
+    hdr = encode.tiled_header(container)
+    units = sorted(hdr["units"], key=lambda e: e["off"])
+    e = units[len(units) // 2]
+    blob, rep = encode.salvage_container(container[: e["off"] + 5])
+    assert rep["units_recovered"] == len(units) // 2
+    u_ref, v_ref = decompress_tiled(container)
+    u_d, v_d, drep = decompress_tiled(blob, degraded=True)
+    assert drep.complete                   # salvaged units all verify
+    for ent in encode.tiled_header(blob)["units"]:
+        t0, t1, i0, i1, j0, j1 = ent["box"]
+        assert np.array_equal(u_d[t0:t1, i0:i1, j0:j1],
+                              u_ref[t0:t1, i0:i1, j0:j1])
+
+
+# --------------------------------------------------- checkpoint errors
+
+def test_checkpoint_restore_raises_typed(tmp_path):
+    from repro.train import checkpoint
+
+    with pytest.raises(checkpoint.CheckpointError,
+                       match="no checkpoint"):
+        checkpoint.restore(str(tmp_path), {})
+    assert issubclass(checkpoint.CheckpointError, RuntimeError)
