@@ -49,6 +49,13 @@ def check(payload: dict) -> list:
              for r in payload["batched_vs_sequential"]["rows"]}
     need({"lorenzo", "mop"} <= preds,
          f"batched_vs_sequential must cover both predictors, got {preds}")
+    for r in payload["batched_vs_sequential"]["rows"]:
+        # batching shares one executable across units; anything below
+        # ~parity means the batch path is re-tracing per unit again
+        need(r.get("speedup", 0) >= 0.9,
+             f"batched_vs_sequential {r.get('predictor')} speedup "
+             f"{r.get('speedup')} < 0.9 (batch path slower than the "
+             "sequential loop it replaces)")
 
     rec = payload.get("recovery")
     need(isinstance(rec, dict), "recovery section missing")
@@ -62,7 +69,42 @@ def check(payload: dict) -> list:
          f"recovery.salvage_MBps not positive: {rec.get('salvage_MBps')}")
     need(rec.get("salvaged_degraded_complete") is True,
          "degraded decode of the salvaged container reported holes")
+    need(rec.get("overhead_pct", 1e9) <= 50,
+         f"recovery.overhead_pct {rec.get('overhead_pct')} > 50: "
+         "journaling must batch records and fsync once per checkpoint, "
+         "not once per journal write")
     checked.append("recovery")
+
+    ent = payload.get("entropy_stage")
+    need(isinstance(ent, dict), "entropy_stage section missing")
+    need(ent.get("n_units", 0) >= 8,
+         f"entropy_stage ran on < 8 units: {ent.get('n_units')}")
+    need(ent.get("bytes_equal") is True,
+         "entropy_stage.bytes_equal is not true: device bitstreams "
+         "must decode to the host coder's exact symbols")
+    need(ent.get("MBps_host", 0) > 0 and ent.get("MBps_device", 0) > 0,
+         "entropy_stage throughput missing or zero")
+    need(ent["MBps_device"] >= 3 * ent["MBps_host"],
+         f"entropy_stage device encode {ent['MBps_device']} MB/s is "
+         f"below 3x the per-unit host coder ({ent['MBps_host']} MB/s)")
+    checked.append("entropy_stage")
+
+    def walk_rates(node, path):
+        # a literal 0.0 rate means round() truncated a sub-5 kB/s value
+        # (or a timer returned garbage); either way the number is noise
+        if isinstance(node, dict):
+            for k, val in node.items():
+                if k.startswith("MBps") and isinstance(val, (int, float)):
+                    need(val > 0, f"zero throughput at {path}.{k}: "
+                         "rates must be rounded to significant digits, "
+                         "not truncated to 0.0")
+                walk_rates(val, f"{path}.{k}")
+        elif isinstance(node, list):
+            for i, val in enumerate(node):
+                walk_rates(val, f"{path}[{i}]")
+
+    walk_rates(payload, "$")
+    checked.append("nonzero_rates")
 
     traj = payload.get("trajectory_analysis")
     need(isinstance(traj, dict) and traj.get("rows"),

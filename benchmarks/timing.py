@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import time
 
 import numpy as np
@@ -29,6 +30,19 @@ except ImportError:  # invoked as a script: python benchmarks/timing.py
 
     sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
     import datasets
+
+
+def _mbps(mb, t):
+    """MB/s with 4 significant digits.
+
+    The old ``round(rate, 2)`` truncated any rate below 0.005 MB/s
+    (tiny smoke fields, slow arms) to a literal 0.0, which made the
+    JSON unusable for ratio gates -- check_schema.py now rejects
+    zero throughputs outright."""
+    rate = mb / max(t, 1e-9)
+    if rate <= 0.0:
+        return 0.0
+    return round(rate, max(0, 3 - int(math.floor(math.log10(rate)))))
 
 
 def _time_ours(u, v, cfg):
@@ -51,7 +65,7 @@ def main(small=True, eb=1e-2, log=print):
                 "dataset": name, "method": bname,
                 "t_c": round(res["t_compress"], 3),
                 "t_d": round(res["t_decompress"], 3),
-                "MBps_c": round(mb / max(res["t_compress"], 1e-9), 1),
+                "MBps_c": _mbps(mb, res["t_compress"]),
             })
         for pred in ("lorenzo", "sl", "mop"):
             cfg = CompressionConfig(eb=eb, mode="rel", predictor=pred, **meta)
@@ -59,7 +73,7 @@ def main(small=True, eb=1e-2, log=print):
             rows.append({
                 "dataset": name, "method": f"ours-{pred}",
                 "t_c": round(tc, 3), "t_d": round(td, 3),
-                "MBps_c": round(mb / max(tc, 1e-9), 1),
+                "MBps_c": _mbps(mb, tc),
             })
         for r in rows[-9:]:
             log(f"[timing] {name} {r['method']:12s} tc={r['t_c']}s "
@@ -87,6 +101,11 @@ def _bench_tiled(eb, shape, repeat, log):
                             backend="xla", verify=True, fused=True,
                             track_index=False)
     cfg_idx = _dc.replace(cfg, track_index=True)
+    # untimed warmup per arm: the first call pays every jit compile, and
+    # attributing that to whichever arm happens to run first skews the
+    # A/B (in --smoke, repeat=1, so best-of can't absorb it either)
+    compress(u, v, cfg)
+    compress_tiled(u, v, cfg, grid)
     tc_m, td_m, tc_t, td_t, tc_i = [], [], [], [], []
     blob_m = blob_t = None
     stats_t = None
@@ -130,11 +149,11 @@ def _bench_tiled(eb, shape, repeat, log):
         "t_encode_tiled_indexed": round(min(tc_i), 3),
         "t_decode_monolithic": round(min(td_m), 3),
         "t_decode_tiled": round(min(td_t), 3),
-        "MBps_encode_monolithic": round(mb / max(min(tc_m), 1e-9), 2),
-        "MBps_encode_tiled": round(mb / max(min(tc_t), 1e-9), 2),
-        "MBps_encode_tiled_indexed": round(mb / max(min(tc_i), 1e-9), 2),
-        "MBps_decode_monolithic": round(mb / max(min(td_m), 1e-9), 2),
-        "MBps_decode_tiled": round(mb / max(min(td_t), 1e-9), 2),
+        "MBps_encode_monolithic": _mbps(mb, min(tc_m)),
+        "MBps_encode_tiled": _mbps(mb, min(tc_t)),
+        "MBps_encode_tiled_indexed": _mbps(mb, min(tc_i)),
+        "MBps_decode_monolithic": _mbps(mb, min(td_m)),
+        "MBps_decode_tiled": _mbps(mb, min(td_t)),
         "bit_identical": identical,
         "region_decode_units_read": n_read,
         "t_region_decode": round(t_region, 4),
@@ -171,6 +190,12 @@ def _bench_batched(eb, shape, repeat, log):
                                   backend="xla", verify=True, fused=True,
                                   track_index=False, batch_units=True)
         cfg_s = _dc.replace(cfg_b, batch_units=False)
+        # untimed warmup per arm: the batched arm runs first and used to
+        # eat the whole cold-jit compile bill, reporting a ~0.1x
+        # "slowdown" that vanished on the second call (executables are
+        # cached across calls -- pipeline._BATCH_STAGES/_UNIT_FNS)
+        compress_tiled(u, v, cfg_b, grid)
+        compress_tiled(u, v, cfg_s, grid)
         tb, ts = [], []
         blob_b = blob_s = None
         for _ in range(repeat):
@@ -189,8 +214,8 @@ def _bench_batched(eb, shape, repeat, log):
             "n_units": stats_b["n_units"],
             "t_encode_sequential": round(min(ts), 3),
             "t_encode_batched": round(min(tb), 3),
-            "MBps_encode_sequential": round(mb / max(min(ts), 1e-9), 2),
-            "MBps_encode_batched": round(mb / max(min(tb), 1e-9), 2),
+            "MBps_encode_sequential": _mbps(mb, min(ts)),
+            "MBps_encode_batched": _mbps(mb, min(tb)),
             "speedup": round(min(ts) / max(min(tb), 1e-9), 3),
             "bytes_equal": same,
         })
@@ -288,8 +313,8 @@ def _bench_async(eb, shape, repeat, log, frame_latency=0.02):
         "frame_latency_s": frame_latency,
         "t_encode_serial": round(min(t_ser), 3),
         "t_encode_async": round(min(t_asy), 3),
-        "MBps_encode_serial": round(mb / max(min(t_ser), 1e-9), 2),
-        "MBps_encode_async": round(mb / max(min(t_asy), 1e-9), 2),
+        "MBps_encode_serial": _mbps(mb, min(t_ser)),
+        "MBps_encode_async": _mbps(mb, min(t_asy)),
         "speedup": round(min(t_ser) / max(min(t_asy), 1e-9), 3),
         "t_encode_serial_unpaced": round(min(t_ser0), 3),
         "t_encode_async_unpaced": round(min(t_asy0), 3),
@@ -304,6 +329,108 @@ def _bench_async(eb, shape, repeat, log, frame_latency=0.02):
         f"{out['MBps_encode_async']} MB/s ({out['speedup']}x paced, "
         f"{out['speedup_unpaced']}x unpaced), bit_identical={identical}, "
         f"track reads {cold.range_reads} -> {warm.range_reads}")
+    return out
+
+
+def _bench_entropy(eb, shape, repeat, log, n_units=16):
+    """Stage-level host-vs-device entropy coder A/B (core/entropy.py).
+
+    Collects genuine residual streams by running the fused pipeline on
+    ``n_units`` same-shape time slabs of one field, then times the two
+    entropy-stage shapes over the SAME streams -- exactly the host-loop
+    vs batched-call gap the device codec exists to close:
+
+    * host: per-unit ``encode.to_symbols`` + ``encode.huffman_encode``
+      loop (the reference host entropy coder: symbolize, heap-built
+      canonical table, bit-pack -- one pass per unit per stream)
+    * device: ONE batched ``entropy.encode_streams`` call over the
+      stacked units (all 2*n_units streams through shared
+      symbolize/histogram/table/bit-pack passes)
+
+    ``bytes_equal`` asserts decode parity: every device bitstream
+    decodes (``entropy.decode_symbols``) to the exact symbol array the
+    host coder consumed, and the escape arrays match element-wise."""
+    from repro.core import encode, entropy, fixedpoint, pipeline
+    from repro.core.compressor import _abs_eb, _as_fields
+    from repro.data import synthetic
+
+    T, H, W = shape
+    u, v = synthetic.advected_turbulence(T=T * n_units, H=H, W=W)
+    cfg = CompressionConfig(eb=eb, mode="rel", predictor="mop",
+                            backend="xla", verify=True, fused=True)
+    units = []
+    for i in range(n_units):
+        uu, vv = _as_fields(u[i * T:(i + 1) * T], v[i * T:(i + 1) * T])
+        eb_abs = _abs_eb(uu, vv, cfg)
+        scale, ufp, vfp = fixedpoint.to_fixed(uu, vv, cfg.fixed_bits)
+        plan = pipeline.plan_from_cfg(cfg, "xla", scale, eb_abs, "fused")
+        enc = pipeline.compress_field(
+            pipeline.PlanExecutor(plan), uu, vv, ufp, vfp)
+        units.append((np.asarray(enc.res_u), np.asarray(enc.res_v)))
+    # rate basis: the float32 u+v field bytes the streams encode
+    mb = n_units * T * H * W * 2 * 4 / 2**20
+    ru = np.stack([x[0] for x in units])
+    rv = np.stack([x[1] for x in units])
+
+    def host_arm():
+        out = []
+        for res_u, res_v in units:
+            su, eu = encode.to_symbols(res_u)
+            sv, ev = encode.to_symbols(res_v)
+            out.append((encode.huffman_encode(su),
+                        encode.huffman_encode(sv), eu, ev))
+        return out
+
+    def device_arm():
+        return entropy.encode_streams(ru, rv)
+
+    # untimed warmup per arm (the device arm pays any jit compiles and
+    # executable-registry fills here, not on the clock)
+    host_arm()
+    device_arm()
+    th, td = [], []
+    host_out = dev_out = None
+    for _ in range(max(repeat, 2)):
+        t0 = time.perf_counter()
+        host_out = host_arm()
+        th.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        dev_out = device_arm()
+        td.append(time.perf_counter() - t0)
+
+    equal = True
+    for (hu, hv, eu, ev), frag in zip(host_out, dev_out):
+        for host_enc, esc, key, ekey in ((hu, eu, "sym_u", "esc_u"),
+                                         (hv, ev, "sym_v", "esc_v")):
+            sec = frag[key]
+            dec = entropy.decode_symbols(sec.lengths, sec.data, sec.n)
+            h_sym = encode.huffman_decode(*host_enc)
+            equal = equal and np.array_equal(dec, h_sym)
+            equal = equal and np.array_equal(
+                np.asarray(frag[ekey]), np.asarray(esc))
+    assert equal, "device entropy streams diverged from host decode"
+
+    host_bytes = sum(len(h[0][1]) + len(h[1][1]) for h in host_out)
+    dev_bytes = sum(len(f["sym_u"].data) + len(f["sym_v"].data)
+                    for f in dev_out)
+    out = {
+        "field": f"advected_turbulence {T * n_units}x{H}x{W}",
+        "n_units": n_units,
+        "unit_shape": [T, H, W],
+        "backend": "xla",
+        "MB": round(mb, 2),
+        "host_bytes": host_bytes,
+        "device_bytes": dev_bytes,
+        "t_encode_host": round(min(th), 4),
+        "t_encode_device": round(min(td), 4),
+        "MBps_host": _mbps(mb, min(th)),
+        "MBps_device": _mbps(mb, min(td)),
+        "speedup": round(min(th) / max(min(td), 1e-9), 3),
+        "bytes_equal": bool(equal),
+    }
+    log(f"[bench] entropy_stage {n_units}x{T}x{H}x{W}: host "
+        f"{out['MBps_host']} -> device {out['MBps_device']} MB/s "
+        f"({out['speedup']}x), bytes_equal={equal}")
     return out
 
 
@@ -344,6 +471,10 @@ def _bench_recovery(eb, shape, log):
         return iter(pairs[t0:])
 
     with tempfile.TemporaryDirectory() as td:
+        # untimed warmup: the journaled run used to be the first compress
+        # in the process and absorbed every jit compile, so overhead_pct
+        # reported compile time (>1000%) instead of journal+fsync cost
+        compress_stream(feed, cfg, grid, value_range=vr, sink=io.BytesIO())
         ref_path = os.path.join(td, "ref.cptt")
         t0 = time.perf_counter()
         compress_stream(feed, cfg, grid, value_range=vr, sink=ref_path)
@@ -406,8 +537,7 @@ def _bench_recovery(eb, shape, log):
         "byte_identical": bool(identical),
         "salvage_bytes": len(cut),
         "t_salvage": round(t_salvage, 4),
-        "salvage_MBps": round(len(cut) / 2**20 / max(t_salvage, 1e-9),
-                              2),
+        "salvage_MBps": _mbps(len(cut) / 2**20, t_salvage),
         "salvage_units_recovered": int(rep["units_recovered"]),
         "salvaged_degraded_complete": bool(drep.complete),
     }
@@ -456,7 +586,7 @@ def _bench_trajectory_analysis(eb, shape, log, field="turbulence"):
             "FC_s": fc["FC_s"],
             "type_counts": ts.type_counts(),
             "t_analysis": round(dt, 4),
-            "MBps_analysis": round(mb / max(dt, 1e-9), 2),
+            "MBps_analysis": _mbps(mb, dt),
         }
         log(f"[bench] trajectory_analysis {name:10s} "
             f"tracks {ts.n_tracks}/{ref.n_tracks} "
@@ -483,7 +613,8 @@ def bench_compress(small=True, eb=1e-2, backends=("xla",),
                    analysis_shape=(16, 48, 48),
                    batched_shape=(16, 64, 64),
                    async_shape=(32, 64, 64),
-                   recovery_shape=(24, 64, 64)):
+                   recovery_shape=(24, 64, 64),
+                   entropy_shape=(2, 16, 16)):
     """Emit the BENCH_compress.json payload.
 
     Each (dataset, predictor, backend) cell reports best-of-``repeat``
@@ -511,8 +642,8 @@ def bench_compress(small=True, eb=1e-2, backends=("xla",),
                     "MB": round(mb, 2),
                     "t_encode": round(min(tcs), 4),
                     "t_decode": round(min(tds), 4),
-                    "MBps_encode": round(mb / max(min(tcs), 1e-9), 2),
-                    "MBps_decode": round(mb / max(min(tds), 1e-9), 2),
+                    "MBps_encode": _mbps(mb, min(tcs)),
+                    "MBps_decode": _mbps(mb, min(tds)),
                     "ratio": round(stats["ratio"], 3),
                     "verify_rounds": stats["verify_rounds"],
                 })
@@ -556,6 +687,9 @@ def bench_compress(small=True, eb=1e-2, backends=("xla",),
     recovery = None
     if recovery_shape is not None:
         recovery = _bench_recovery(eb, recovery_shape, log)
+    entropy_stage = None
+    if entropy_shape is not None:
+        entropy_stage = _bench_entropy(eb, entropy_shape, repeat, log)
     traj = None
     if analysis_shape is not None:
         traj = _bench_trajectory_analysis(eb, analysis_shape, log)
@@ -564,6 +698,7 @@ def bench_compress(small=True, eb=1e-2, backends=("xla",),
             "batched_vs_sequential": batched,
             "async_vs_serial": async_section,
             "recovery": recovery,
+            "entropy_stage": entropy_stage,
             "trajectory_analysis": traj,
             "eb": eb, "small": small}
 
@@ -593,7 +728,7 @@ if __name__ == "__main__":
             predictors=("mop",), speedup_shape=(6, 32, 32), repeat=1,
             tiled_shape=(6, 32, 32), analysis_shape=(6, 24, 24),
             batched_shape=(6, 32, 32), async_shape=(8, 32, 32),
-            recovery_shape=(9, 32, 32))
+            recovery_shape=(9, 32, 32), entropy_shape=(2, 16, 16))
     else:
         payload = bench_compress(
             small=not args.large, eb=args.eb, backends=backends,

@@ -36,6 +36,7 @@ import numpy as np
 
 from .. import perfflags
 from ..kernels.cptest import ops as _cp_ops
+from ..kernels.entropy import ops as _ent_ops
 from ..kernels.lorenzo import ops as _lz_ops
 from ..kernels.semilagrange import kernel as _sl_kernel
 from . import predictors, quantize, sos
@@ -360,3 +361,32 @@ def face_crossed(fu, fv, fidx, backend="xla", n_verts=None):
         return sos.face_crossed_vals(np, np.asarray(fu), np.asarray(fv),
                                      np.asarray(fidx))
     return sos.face_crossed_vals(jnp, fu, fv, fidx)
+
+
+# ----------------------------------------------------------------------
+# op 4: batched symbol histogram (device entropy stage, core/entropy.py)
+# ----------------------------------------------------------------------
+
+def _symbol_histogram_np(sym):
+    # one flat bincount over row-offset keys (row i -> bins [256i, 256i+256))
+    # instead of a per-row loop: one C pass regardless of B
+    sym = np.asarray(sym)
+    B, n = sym.shape
+    keys = sym.astype(np.int32) + (np.arange(B, dtype=np.int32)[:, None] << 8)
+    counts = np.bincount(keys.reshape(-1), minlength=B * 256)
+    return counts.reshape(B, 256).astype(np.int32)
+
+
+def symbol_histogram(sym, backend="xla"):
+    """Per-row 256-bin histogram of a (B, n) uint8 symbol stack.
+
+    Integer counts: exact and bit-identical across all three backends.
+    The pallas path routes through kernels/entropy (compare-and-sum
+    kernel on TPU, interpret mode elsewhere); xla uses the vmapped
+    scatter-add reference; numpy is the host bincount loop.
+    """
+    if backend == "numpy":
+        return _symbol_histogram_np(sym)
+    if backend == "pallas":
+        return _ent_ops.symbol_histogram(sym, force_pallas=True)
+    return _ent_ops.symbol_histogram(sym, force_ref=True)

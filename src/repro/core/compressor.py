@@ -74,6 +74,10 @@ class CompressionConfig:
     batch_units: bool = True          # tiled: stack same-signature units
                                       # through the vmapped batched stages
                                       # (pipeline.py; False = per-unit loop)
+    codec: str = "host"               # entropy stage: 'host' (per-unit
+                                      # CPU Huffman + zstd/zlib) |
+                                      # 'device' (batched accelerator
+                                      # entropy stage, core/entropy.py)
 
 
 def _as_fields(u, v):

@@ -32,6 +32,9 @@ except ImportError:  # pragma: no cover - exercised by the CI minimal-env job
 MAGIC = b"CPTZ1"          # zstd-backed container
 MAGIC_ZLIB = b"CPTL1"     # zlib fallback container (same layout inside)
 MAGIC_TILED = b"CPTT1"    # tiled container (unit frames + directory footer)
+MAGIC_HUF = b"CPTH1"      # device-entropy container: symbol sections are
+                          # pre-packed canonical-Huffman bitstreams, the
+                          # payload is NOT wrapped in an outer codec frame
 ESC = 255
 
 
@@ -235,6 +238,24 @@ def canonical_codes(lengths):
     return codes, lengths
 
 
+def length_limited_lengths(freq, limit: int) -> np.ndarray:
+    """Huffman code lengths clamped to ``limit`` bits.
+
+    The clamp halves frequencies until the deepest leaf fits -- each
+    iteration is still a valid Huffman tree (Kraft holds), and repeated
+    halving drives the distribution toward uniform, whose depth for a
+    256-symbol alphabet is 8, so the loop terminates for any limit >= 8.
+    Used by the device entropy stage (core/entropy.py), whose bit-packer
+    sizes its worst-case output buffer as n_symbols * limit bits.
+    """
+    freq = np.asarray(freq, dtype=np.int64)
+    lengths = huffman_code_lengths(freq)
+    while lengths.max() > limit:
+        freq = np.where(freq > 0, (freq + 1) // 2, 0)
+        lengths = huffman_code_lengths(freq)
+    return lengths
+
+
 def huffman_encode(sym):
     """uint8 symbols -> (lengths table, packed bits, n_symbols)."""
     freq = np.bincount(sym, minlength=256)
@@ -374,7 +395,45 @@ def huffman_stream_size_bits(sym):
 # container
 # ----------------------------------------------------------------------
 
+class HuffSection:
+    """A section whose bytes are already entropy-coded (device stage).
+
+    ``data`` is a canonical-Huffman bitstream over ``n`` uint8 symbols,
+    packed MSB-first; ``lengths`` is the 256-entry code-length table
+    (uint8, max ``entropy.L_MAX`` bits).  ``pack`` stores the table in
+    the section index so ``unpack`` can rebuild the exact uint8 symbol
+    array -- downstream parsing (``parse_field_sections``) never sees
+    the difference between the host and device codecs.
+    """
+
+    __slots__ = ("data", "lengths", "n")
+
+    def __init__(self, data: bytes, lengths, n: int):
+        self.data = bytes(data)
+        self.lengths = np.ascontiguousarray(lengths, dtype=np.uint8)
+        self.n = int(n)
+
+
+# small non-symbol sections inside a CPTH1 frame (escapes, lossless
+# bitmaps, raw float values) get an individual zlib pass; below this
+# size the 11-byte zlib framing is pure overhead
+_HUF_ZLIB_MIN = 64
+
+
 def pack(header: dict, sections: dict, level: int = 12) -> bytes:
+    """Assemble one container frame.
+
+    Two framings share the section-index layout: the host codecs wrap
+    the whole payload in one zstd/zlib frame (magic CPTZ1/CPTL1), while
+    a sections dict containing ``HuffSection`` values produces a CPTH1
+    frame -- symbol sections stay as their packed Huffman bitstreams
+    (re-compressing them would buy nothing), other sections are
+    zlib-compressed individually, and the payload is stored raw.  Every
+    frame self-describes its codec (magic + header ``codec`` tag), so
+    readers never guess.
+    """
+    if any(isinstance(a, HuffSection) for a in sections.values()):
+        return _pack_huf(header, sections)
     body = io.BytesIO()
     sec_index = {}
     for name, arr in sections.items():
@@ -395,12 +454,88 @@ def pack(header: dict, sections: dict, level: int = 12) -> bytes:
     return magic + codec_compress(payload, level)
 
 
+def _pack_huf(header: dict, sections: dict) -> bytes:
+    body = io.BytesIO()
+    sec_index = {}
+    for name, arr in sections.items():
+        if isinstance(arr, HuffSection):
+            sec_index[name] = {
+                "off": body.tell(),
+                "len": len(arr.data),
+                "dtype": "uint8",
+                "shape": [arr.n],
+                "enc": "huff",
+                "lengths": arr.lengths.tobytes(),
+            }
+            body.write(arr.data)
+            continue
+        raw = np.ascontiguousarray(arr).tobytes()
+        meta = {
+            "off": body.tell(),
+            "len": len(raw),
+            "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+        }
+        if len(raw) >= _HUF_ZLIB_MIN:
+            comp = zlib.compress(raw, 6)
+            if len(comp) < len(raw):
+                meta["len"] = len(comp)
+                meta["enc"] = "zlib"
+                raw = comp
+        sec_index[name] = meta
+        body.write(raw)
+    header = dict(header)
+    header["sections"] = sec_index
+    header["codec"] = "huffman"
+    hdr = msgpack.packb(header, use_bin_type=True)
+    return (MAGIC_HUF + struct.pack("<I", len(hdr)) + hdr
+            + body.getvalue())
+
+
+def _decode_section(name: str, meta: dict, raw: bytes) -> np.ndarray:
+    """One section's bytes -> array, honoring its per-section ``enc``."""
+    enc = meta.get("enc")
+    try:
+        dtype, shape = meta["dtype"], meta["shape"]
+        if enc == "huff":
+            lengths = np.frombuffer(meta["lengths"], np.uint8)
+            if lengths.size != 256:
+                raise ContainerError(
+                    f"section {name!r}: huffman table has {lengths.size} "
+                    f"entries, expected 256")
+            n = int(np.prod(shape, dtype=np.int64))
+            from . import entropy
+            arr = entropy.decode_symbols(lengths, raw, n)
+        elif enc == "zlib":
+            arr = np.frombuffer(zlib.decompress(raw), dtype=np.dtype(dtype))
+        elif enc is None:
+            arr = np.frombuffer(raw, dtype=np.dtype(dtype))
+        else:
+            raise ContainerError(
+                f"section {name!r}: unknown encoding {enc!r}")
+        return arr.reshape(shape)
+    except ContainerError:
+        raise
+    except (TypeError, ValueError, zlib.error) as e:
+        raise ContainerError(f"corrupt section {name!r}: {e}") from e
+
+
 def unpack(blob: bytes):
     magic = blob[: len(MAGIC)]
+    if magic == MAGIC_HUF:
+        return _unpack_huf(blob)
     if magic not in (MAGIC, MAGIC_ZLIB):
         raise ContainerError("not a CPTZ/CPTL container (bad magic)")
     codec = "zstd" if magic == MAGIC else "zlib"
     payload = codec_decompress(blob[len(MAGIC):], codec)
+    return _parse_payload(payload)
+
+
+def _unpack_huf(blob: bytes):
+    return _parse_payload(bytes(blob[len(MAGIC_HUF):]))
+
+
+def _parse_payload(payload: bytes):
     if len(payload) < 4:
         raise ContainerError("truncated container: missing header length")
     (hlen,) = struct.unpack("<I", payload[:4])
@@ -422,7 +557,6 @@ def unpack(blob: bytes):
     for name, meta in sec_index.items():
         try:
             off, ln = meta["off"], meta["len"]
-            dtype, shape = meta["dtype"], meta["shape"]
         except (TypeError, KeyError) as e:
             raise ContainerError(
                 f"malformed section entry {name!r}: {e}") from e
@@ -436,11 +570,10 @@ def unpack(blob: bytes):
             raise ContainerError(
                 f"section {name!r} byte range [{lo}, {hi}) outside "
                 f"{len(payload)}-byte payload")
-        try:
-            arr = np.frombuffer(payload[lo:hi], dtype=np.dtype(dtype))
-            sections[name] = arr.reshape(shape)
-        except (TypeError, ValueError) as e:
-            raise ContainerError(f"corrupt section {name!r}: {e}") from e
+        if "dtype" not in meta or "shape" not in meta:
+            raise ContainerError(
+                f"malformed section entry {name!r}: missing dtype/shape")
+        sections[name] = _decode_section(name, meta, payload[lo:hi])
     return header, sections
 
 

@@ -1,0 +1,392 @@
+"""Device-resident batched entropy stage (the ``device`` codec).
+
+The host codec (encode.py) symbolizes and Huffman-packs residual
+streams one unit at a time on the CPU, which leaves every upstream
+device win stranded behind a host loop.  This module keeps the entropy
+stage on the accelerator for a whole batch of same-shape units at once:
+
+  1. **symbolize** (device): zigzag-fold the int64 residual rows of a
+     (B, n) stack, clamp to the ESC escape symbol, count a per-row
+     256-bin histogram (``backend.symbol_histogram`` -- pallas kernel
+     on TPU), and compact the escaped residuals with an exclusive
+     cumulative-sum scatter so each row's escapes are contiguous.
+  2. **code build** (host, tiny): per-row canonical code tables from
+     the device histograms, length-limited to ``L_MAX`` bits and built
+     for the whole batch in one vectorized pass
+     (``build_tables_batch``) -- 256 counts per row is the only data
+     that crosses to the host before packing.
+  3. **bitpack** (device): gather per-symbol (code, length), compute
+     every symbol's bit offset with a parallel prefix sum, and
+     scatter-add the MSB-first code windows into a byte buffer in 3
+     collision-free lane passes -- the same packing arithmetic as
+     ``encode.huffman_encode``, vmapped over rows.
+
+Per-row tables make each unit's bitstream independent of the batch it
+rode in, so batched and sequential encodes stay byte-identical -- the
+repo-wide invariant.  Decode needs no device: ``pack`` stores the
+length table in the section index (encode.HuffSection) and
+``decode_symbols`` replays the stream through the existing host
+``huffman_decode``; ``L_MAX`` = 16 <= the decoder's vectorized-peek
+limit, and the worst-case pack buffer is a static 2 bytes/symbol.
+
+The numpy rows of ``EntropyFns`` mirror the jax math operation for
+operation (integer-exact), so the numpy backend produces bit-identical
+containers -- tests/test_entropy_device.py pins all of this.
+"""
+from __future__ import annotations
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import backend as backend_mod
+from . import encode as encode_mod
+from .encode import ESC, ContainerError, HuffSection
+
+L_MAX = 16           # length limit for device tables (static buffer bound)
+
+
+# ----------------------------------------------------------------------
+# host side: table build + decode
+# ----------------------------------------------------------------------
+
+def build_tables(hist) -> tuple[np.ndarray, np.ndarray]:
+    """256-bin counts -> (lengths int32[256], codes uint32[256]).
+
+    Per-row *optimal* (heap-built, length-limited) Huffman tables --
+    the reference construction, kept for single-stream callers and the
+    parity tests.  The batched stage uses ``build_tables_batch``."""
+    lengths = encode_mod.length_limited_lengths(
+        np.asarray(hist, np.int64), L_MAX)
+    codes, _ = encode_mod.canonical_codes(lengths)
+    return lengths.astype(np.int32), codes.astype(np.uint32)
+
+
+def build_tables_batch(hist) -> tuple[np.ndarray, np.ndarray]:
+    """(R, 256) counts -> (lengths int32 (R, 256), codes uint32 (R, 256)).
+
+    Canonical code construction for a whole batch of rows at once.  A
+    per-row heap-built Huffman tree is a Python loop per unit -- the
+    exact host-loop shape the batched stage exists to remove -- so batch
+    rows use Shannon-style lengths, ``ceil(log2(n/count))`` clamped to
+    ``[1, L_MAX]``: Kraft-valid by construction (each 2^-len <= p, so
+    the row sums to <= 1), within one bit per symbol of optimal, and
+    decoded by the exact same canonical machinery (the code words are
+    ``canonical_codes(lengths)``, vectorized over rows).  A row whose
+    clamp breaks Kraft (> 2^L_MAX-fold skew) falls back to flat 8-bit
+    codes.  Each row's table depends only on that row's counts, which
+    keeps batched == sequential bytes."""
+    hist = np.asarray(hist, np.int64)
+    R = hist.shape[0]
+    present = hist > 0
+    n = hist.sum(axis=1, keepdims=True)
+    with np.errstate(divide="ignore"):
+        ln = np.ceil(np.log2(np.maximum(n, 1)
+                             / np.maximum(hist, 1))).astype(np.int32)
+    ln = np.where(present, np.clip(ln, 1, L_MAX), 0)
+    kraft = np.where(present, np.int64(1) << (L_MAX - ln), 0).sum(axis=1)
+    bad = kraft > (np.int64(1) << L_MAX)
+    if bad.any():
+        ln[bad] = np.where(present[bad], 8, 0)
+    # canonical assignment (same convention as encode.canonical_codes):
+    # first code of length l = (first of l-1 + count of l-1) << 1, and
+    # same-length symbols take codes in symbol order
+    onehot = ln[:, :, None] == np.arange(1, L_MAX + 1, dtype=np.int32)
+    # one narrow cumsum serves both the per-length counts (last slice)
+    # and the within-length ranks; int16 holds <= 256 and halves the
+    # pass cost vs the default int64 promotion
+    csum = np.cumsum(onehot, axis=1, dtype=np.int16)     # (R, 256, L_MAX)
+    cnt = csum[:, -1, :].astype(np.int64)                # (R, L_MAX)
+    first = np.zeros((R, L_MAX + 1), np.int64)           # first[l] for len l
+    for l in range(2, L_MAX + 1):
+        first[:, l] = (first[:, l - 1] + cnt[:, l - 2]) << 1
+    rank_s = np.take_along_axis(
+        csum - 1, np.maximum(ln - 1, 0)[:, :, None], axis=2)[:, :, 0]
+    codes = np.take_along_axis(first, ln.astype(np.int64), axis=1) + rank_s
+    codes = np.where(present, codes, 0)
+    return ln, codes.astype(np.uint32)
+
+
+def decode_symbols(lengths, data, n) -> np.ndarray:
+    """Inverse of the device bitpack: lengths uint8[256] (from the
+    section index) + packed bits -> uint8 symbols.  Host-only; used by
+    ``encode._decode_section`` for ``enc: "huff"`` sections."""
+    if n == 0:
+        return np.empty(0, dtype=np.uint8)
+    ln = np.asarray(lengths, np.uint8).astype(np.int32)
+    ml = int(ln.max())
+    if ml == 0 or ml > L_MAX:
+        raise ContainerError(
+            f"invalid huffman table: max code length {ml} "
+            f"(expected 1..{L_MAX})")
+    # Kraft inequality: a corrupt table would overflow the peek tables
+    kraft = int((np.int64(1) << (ml - ln[ln > 0])).sum())
+    if kraft > (1 << ml):
+        raise ContainerError("invalid huffman table: Kraft sum exceeds 1")
+    return encode_mod.huffman_decode(ln, data, n)
+
+
+# ----------------------------------------------------------------------
+# device side: symbolize + bitpack (jax) and their numpy mirrors
+# ----------------------------------------------------------------------
+
+def _pack_cap(n: int) -> int:
+    # worst-case packed bytes per row, plus the 8-byte scatter skirt
+    return (n * L_MAX) // 8 + 8
+
+
+def _symbolize_core(res, backend):
+    """(B, n) int64 residuals -> (sym uint8 (B, n), hist int32 (B, 256),
+    escbuf int64 (B, n) escape-compacted rows, n_esc int32 (B,))."""
+    n = res.shape[1]
+    z = jnp.where(res >= 0, 2 * res, -2 * res - 1)
+    esc = z >= ESC
+    sym = jnp.where(esc, ESC, z).astype(jnp.uint8)
+    hist = backend_mod.symbol_histogram(sym, backend)
+    # exclusive-cumsum compaction: escape i of a row lands at slot
+    # (number of escapes before it); non-escapes are parked on a dump
+    # slot past the row end and sliced away
+    idx = jnp.cumsum(esc.astype(jnp.int32), axis=1) - 1
+    scat = jnp.where(esc, idx, n)
+
+    def compact(s, r):
+        return jnp.zeros((n + 1,), jnp.int64).at[s].set(r)
+
+    escbuf = jax.vmap(compact)(scat, res)
+    return sym, hist, escbuf[:, :n], esc.sum(axis=1).astype(jnp.int32)
+
+
+def _bitpack_core(sym, lengths, codes):
+    """(B, n) uint8 symbols + per-row tables -> (buf uint8 (B, cap),
+    nbits int64 (B,)).  Same arithmetic as encode.huffman_encode: each
+    symbol's canonical code is placed in a 64-bit MSB-first window at
+    its prefix-summed bit offset and scattered byte-wise per lane.
+    With L_MAX + 7 <= 23 the code occupies bits 41..63 of the window,
+    so only the top 3 big-endian byte lanes can be nonzero -- 3 scatter
+    passes instead of encode.huffman_encode's 8 (whose codes run to 56
+    bits)."""
+    n = sym.shape[1]
+    cap = _pack_cap(n)
+    s = sym.astype(jnp.int32)
+    ln = jnp.take_along_axis(lengths, s, axis=1)
+    cd = jnp.take_along_axis(codes, s, axis=1).astype(jnp.uint64)
+    ends = jnp.cumsum(ln, axis=1)
+    starts = ends - ln
+    byte_off = starts // 8
+    # clip only guards padding rows whose borrowed table may assign
+    # length 0; live rows always have 41 <= shift <= 63
+    shift = jnp.clip(64 - (starts % 8) - ln, 0, 63).astype(jnp.uint64)
+    val = cd << shift
+
+    def pack_row(bo, v):
+        buf = jnp.zeros((cap,), jnp.uint8)
+        # lanes 3..7 are zero for any live row (shift >= 41); padding
+        # rows may put garbage in low bits, but their buffers are
+        # sliced away after the fetch, so skipping the lanes is exact
+        for b in range(3):
+            lane = ((v >> jnp.uint64(56 - 8 * b))
+                    & jnp.uint64(0xFF)).astype(jnp.uint8)
+            buf = buf.at[bo + b].add(lane)
+        return buf
+
+    return jax.vmap(pack_row)(byte_off, val), ends[:, -1].astype(jnp.int64)
+
+
+def _symbolize_np(res):
+    res = np.asarray(res, np.int64)
+    z = np.where(res >= 0, 2 * res, -2 * res - 1)
+    esc = z >= ESC
+    sym = np.where(esc, ESC, z).astype(np.uint8)
+    B, n = sym.shape
+    hist = backend_mod.symbol_histogram(sym, "numpy")
+    escbuf = np.zeros((B, n), np.int64)
+    n_esc = esc.sum(axis=1).astype(np.int32)
+    for i in range(B):
+        escbuf[i, : n_esc[i]] = res[i][esc[i]]
+    return sym, hist, escbuf, n_esc
+
+
+def _bitpack_np(sym, lengths, codes):
+    """Host mirror of ``_bitpack_core``, vectorized flat across rows.
+
+    Uses a 32-bit MSB-first window instead of the core's 64-bit one:
+    with L_MAX + 7 <= 23 the code sits in bits 9..31, so the top 3
+    big-endian byte lanes carry exactly the bytes the 64-bit window
+    puts in its own top 3 lanes -- identical placement, half the
+    intermediate bytes.  One ``np.add.at`` per lane over all rows at
+    once (rows offset into one flat buffer) instead of a per-row loop.
+    """
+    B, n = sym.shape
+    cap = _pack_cap(n)
+    rows = np.arange(B, dtype=np.int64)[:, None]
+    # codes are < 2^L_MAX and lengths <= L_MAX = 16, so one uint32 LUT
+    # (length in the high half) turns two table gathers into one
+    lut = ((lengths.astype(np.uint32) << 16)
+           | codes.astype(np.uint32)).reshape(-1)
+    g = lut[sym.astype(np.int32) + (rows * 256).astype(np.int32)]
+    ln = (g >> 16).astype(np.int64)
+    cd = g & np.uint32(0xFFFF)
+    ends = np.cumsum(ln, axis=1, dtype=np.int64)
+    starts = ends - ln
+    shift = (32 - (starts & 7) - ln).astype(np.uint32)
+    vals = (cd << shift).astype(">u4")
+    view = vals.reshape(-1).view(np.uint8).reshape(B * n, 4)
+    flat_off = ((starts >> 3) + rows * cap).reshape(-1)
+    out = np.zeros(B * cap, np.uint8)
+    for b in range(3):     # lane 3 (bits 0..7) is zero: shift >= 9
+        np.add.at(out, flat_off + b, view[:, b])
+    return out.reshape(B, cap), ends[:, -1].astype(np.int64)
+
+
+# ----------------------------------------------------------------------
+# per-backend executable registry
+# ----------------------------------------------------------------------
+
+class EntropyFns:
+    """Persistent symbolize/bitpack executables for one backend.
+
+    jax backends get jitted, shape-polymorphic (retrace-per-shape)
+    wrappers; the numpy backend runs the host mirrors directly.  One
+    instance per backend lives in the registry so executables survive
+    across calls (no per-call recompiles).
+
+    The ``xla`` binding additionally gates on the actual jax platform:
+    both hot loops here are scatter-shaped (histogram, escape
+    compaction, byte-lane bit packing), and XLA's CPU scatter lowers to
+    a serial update loop (~25 M updates/s measured) while the
+    vectorized host mirrors run ``np.add.at``/``np.bincount`` at
+    ~500 M/s -- a ~20x gap that would invert the whole point of the
+    batched stage.  Off-accelerator, ``xla`` therefore routes to the
+    mirrors, which are bit-identical by construction (the parity tests
+    assert it); on TPU/GPU the jitted path keeps the streams resident.
+    ``pallas`` always jits: off-TPU it exists for interpret-mode kernel
+    parity, not throughput."""
+
+    def __init__(self, backend: str):
+        self.backend = backend
+        on_accel = jax.default_backend() != "cpu"
+        self.jitted = backend != "numpy" and (on_accel
+                                              or backend == "pallas")
+        if self.jitted:
+            self.symbolize = jax.jit(
+                lambda res: _symbolize_core(res, backend))
+            self.bitpack = jax.jit(_bitpack_core)
+        else:
+            self.symbolize = _symbolize_np
+            self.bitpack = _bitpack_np
+
+
+_ENTROPY_FNS: dict[str, EntropyFns] = {}
+_REGISTRY_LOCK = threading.Lock()
+
+
+def entropy_fns(backend: str) -> EntropyFns:
+    with _REGISTRY_LOCK:
+        ef = _ENTROPY_FNS.get(backend)
+        if ef is None:
+            ef = _ENTROPY_FNS[backend] = EntropyFns(backend)
+        return ef
+
+
+def clear_registry() -> None:
+    with _REGISTRY_LOCK:
+        _ENTROPY_FNS.clear()
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(x - 1, 0).bit_length() if x > 1 else 1
+
+
+# ----------------------------------------------------------------------
+# drivers
+# ----------------------------------------------------------------------
+
+def encode_streams(res_u, res_v, backend: str = "xla") -> list[dict]:
+    """Batched device entropy encode of (B, ...) residual stacks.
+
+    Stacks the u and v streams as 2B rows through one symbolize and one
+    bitpack executable; returns one section fragment per unit:
+    ``{"sym_u": HuffSection, "esc_u": int64[...], "sym_v": ...,
+    "esc_v": ...}`` -- drop-in for the same keys of
+    ``encode.field_sections``.  Tables are per-row, so the fragments
+    are independent of B (batched == sequential bytes)."""
+    B = int(res_u.shape[0])
+    n = int(np.prod(res_u.shape[1:], dtype=np.int64))
+    live = 2 * B
+    ef = entropy_fns(backend)
+    if not ef.jitted:
+        # host mirrors: no executable cache to protect, so no padding
+        rows = np.concatenate([
+            np.asarray(res_u, np.int64).reshape(B, n),
+            np.asarray(res_v, np.int64).reshape(B, n)])
+    else:
+        rows = jnp.concatenate([
+            jnp.asarray(res_u).reshape(B, n),
+            jnp.asarray(res_v).reshape(B, n)]).astype(jnp.int64)
+        pad = _next_pow2(live) - live
+        if pad:
+            # pad the row axis to a power of 2 (bounds the executable
+            # count per n); pad rows are discarded after the fetch
+            rows = jnp.concatenate([rows, jnp.repeat(rows[-1:], pad, 0)])
+    sym, hist, escbuf, n_esc = ef.symbolize(rows)
+
+    # padding rows repeat the last live row, so building their tables
+    # is the same arithmetic as repeating the live tables
+    lengths, codes = build_tables_batch(np.asarray(hist))
+    buf, nbits = ef.bitpack(sym, lengths, codes)
+
+    buf_np = np.asarray(buf[:live])
+    nbits_np = np.asarray(nbits[:live])
+    n_esc_np = np.asarray(n_esc[:live])
+    lengths_u8 = lengths[:live].astype(np.uint8)
+
+    def esc_row(i):
+        k = int(n_esc_np[i])
+        if k == 0:
+            return np.empty(0, dtype=np.int64)
+        # device-side slice first: only the escapes cross to the host
+        return np.asarray(escbuf[i, :k], dtype=np.int64)
+
+    out = []
+    for i in range(B):
+        iu, iv = i, B + i
+        out.append({
+            "sym_u": HuffSection(
+                buf_np[iu, : (int(nbits_np[iu]) + 7) // 8].tobytes(),
+                lengths_u8[iu], n),
+            "sym_v": HuffSection(
+                buf_np[iv, : (int(nbits_np[iv]) + 7) // 8].tobytes(),
+                lengths_u8[iv], n),
+            "esc_u": esc_row(iu),
+            "esc_v": esc_row(iv),
+        })
+    return out
+
+
+def merge_sections(frag: dict, lossless_np, u_ll, v_ll, bm) -> dict:
+    """One unit's entropy fragment + host-side metadata -> the full
+    section dict, in ``encode.field_sections`` key order (the order
+    fixes the frame's byte layout)."""
+    bm = np.asarray(bm)
+    return {
+        "sym_u": frag["sym_u"],
+        "sym_v": frag["sym_v"],
+        "esc_u": frag["esc_u"],
+        "esc_v": frag["esc_v"],
+        "lossless": np.packbits(lossless_np),
+        "u_ll": np.asarray(u_ll),
+        "v_ll": np.asarray(v_ll),
+        "blockmap": np.packbits(bm),
+        "bm_shape": np.asarray(bm.shape, dtype=np.int32),
+    }
+
+
+def field_sections_device(res_u, res_v, lossless_np, u_ll, v_ll, bm,
+                          backend: str = "xla") -> dict:
+    """Device-codec twin of ``encode.field_sections`` (one unit)."""
+    stack = (np.asarray if backend == "numpy" else jnp.asarray)
+    frag = encode_streams(stack(res_u)[None], stack(res_v)[None],
+                          backend)[0]
+    return merge_sections(frag, lossless_np, u_ll, v_ll, bm)

@@ -79,6 +79,20 @@ FUSED_BINDINGS = (("encode", "fused"), ("decode", "parallel"),
                   ("verify", "screened"))
 LEGACY_BINDINGS = (("encode", "legacy"), ("decode", "scan"),
                    ("verify", "full"))
+# alternate symbolize/pack binding: the device-resident batched entropy
+# stage (core/entropy.py) -- per-unit canonical Huffman bitstreams
+# packed on the accelerator, emitted as self-describing CPTH1 frames.
+# The default host binding keeps the zstd/zlib whole-payload codecs.
+DEVICE_ENTROPY_BINDINGS = (("symbolize", "device"), ("pack", "device"))
+HOST_ENTROPY_BINDINGS = (("symbolize", "host"), ("pack", "host"))
+CODECS = ("host", "device")
+
+
+def _codec_bindings(base: tuple, codec: str) -> tuple:
+    if codec not in CODECS:
+        raise ValueError(f"unknown codec {codec!r}; expected one of {CODECS}")
+    return base + (DEVICE_ENTROPY_BINDINGS if codec == "device"
+                   else HOST_ENTROPY_BINDINGS)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,7 +122,8 @@ class PipelinePlan:
     verify: bool = True
     max_rounds: int = 12
     batch_units: bool = True
-    bindings: tuple = FUSED_BINDINGS
+    codec: str = "host"
+    bindings: tuple = FUSED_BINDINGS + HOST_ENTROPY_BINDINGS
 
     @property
     def g2f(self) -> float:
@@ -146,7 +161,10 @@ def plan_from_cfg(cfg, be: str, scale: float, eb_abs: float,
         verify=cfg.verify,
         max_rounds=cfg.max_rounds,
         batch_units=getattr(cfg, "batch_units", True),
-        bindings=LEGACY_BINDINGS if name == "legacy" else FUSED_BINDINGS,
+        codec=getattr(cfg, "codec", "host"),
+        bindings=_codec_bindings(
+            LEGACY_BINDINGS if name == "legacy" else FUSED_BINDINGS,
+            getattr(cfg, "codec", "host")),
     )
 
 
@@ -177,7 +195,12 @@ def plan_from_header(header: dict, backend: Optional[str] = None
         cfl_y=float(header["cfl_y"]),
         d_max=float(header["d_max"]),
         n_max=int(header["n_max"]),
-        bindings=LEGACY_BINDINGS if name == "legacy" else FUSED_BINDINGS,
+        # decode is host-side either way (the section ``enc`` tags carry
+        # the per-section codec); record which entropy stage encoded it
+        codec="device" if header.get("codec") == "huffman" else "host",
+        bindings=_codec_bindings(
+            LEGACY_BINDINGS if name == "legacy" else FUSED_BINDINGS,
+            "device" if header.get("codec") == "huffman" else "host"),
     )
 
 
@@ -438,6 +461,7 @@ class UnitFns:
 # could construct the same UnitFns twice concurrently.
 _UNIT_FNS: dict = {}
 _BATCH_FNS: dict = {}
+_BATCH_STAGES: dict = {}
 _REGISTRY_LOCK = threading.Lock()
 
 
@@ -453,9 +477,12 @@ def unit_fns(shape, block, n_levels, predictor, be, be_lorenzo=None
 
 
 def clear_registries():
+    from . import entropy
     with _REGISTRY_LOCK:
         _UNIT_FNS.clear()
         _BATCH_FNS.clear()
+        _BATCH_STAGES.clear()
+    entropy.clear_registry()
 
 
 # ----------------------------------------------------------------------
@@ -468,27 +495,21 @@ def unit_signature(ext_shape, owned_shape, owned_offset):
     return (tuple(ext_shape), tuple(owned_shape), tuple(owned_offset))
 
 
-class BatchFns:
-    """Vmapped + tiles-mesh-sharded stages for one unit signature.
+class _BatchStages:
+    """The signature-offset-INDEPENDENT stage executables of BatchFns.
 
-    Per-unit scalars (xi_unit, scale, eb_abs) travel as (B,) arrays so
-    one compiled executable serves every plan with this geometry.  Only
-    exact integer/boolean and elementwise-f64 work lives here; the SL
-    predictor and the MoP rate model are routed through the same
-    executables as the sequential path (module doc).
+    Every stage here depends only on (ext_shape, block, n_levels) --
+    NOT on the owned box -- so units whose signatures differ only in
+    owned shape/offset (e.g. the four corner tiles of a window, or
+    interior vs edge tiles) share ONE compiled executable set instead
+    of recompiling identical programs per signature.  Only ``paste``
+    (BatchFns) closes over the owned slice.
     """
 
-    def __init__(self, sig, block, n_levels):
+    def __init__(self, ext_shape, block, n_levels):
         from ..parallel import sharding
 
-        (Te, he, we), (To, ho, wo), (dt0, di0, dj0) = sig
-        self.sig = sig
-        self.block = block
-        self.n_levels = n_levels
-        self.ext_shape = (Te, he, we)
-        self.owned_shape = (To, ho, wo)
-        self.owned = (slice(dt0, dt0 + To), slice(di0, di0 + ho),
-                      slice(dj0, dj0 + wo))
+        Te, he, we = ext_shape
         slice_tab, slab_tab = _face_tables(he, we)
         slice_tab = jnp.asarray(slice_tab)
         slab_tab = jnp.asarray(slab_tab)
@@ -543,6 +564,38 @@ class BatchFns:
         self.decode_cumsum = mt(_decode_cumsum1)
         self.check_pt = mt(_check_pt1)
         self.screen = mt(_screen1)
+
+
+class BatchFns:
+    """Vmapped + tiles-mesh-sharded stages for one unit signature.
+
+    Per-unit scalars (xi_unit, scale, eb_abs) travel as (B,) arrays so
+    one compiled executable serves every plan with this geometry.  Only
+    exact integer/boolean and elementwise-f64 work lives here; the SL
+    predictor and the MoP rate model are routed through the same
+    executables as the sequential path (module doc).  All stages except
+    ``paste`` are borrowed from the shared per-ext-shape _BatchStages
+    entry (same registry lifetime), so same-geometry signatures never
+    compile twice.
+    """
+
+    def __init__(self, sig, block, n_levels, stages: _BatchStages):
+        (Te, he, we), (To, ho, wo), (dt0, di0, dj0) = sig
+        self.sig = sig
+        self.block = block
+        self.n_levels = n_levels
+        self.ext_shape = (Te, he, we)
+        self.owned_shape = (To, ho, wo)
+        self.owned = (slice(dt0, dt0 + To), slice(di0, di0 + ho),
+                      slice(dj0, dj0 + wo))
+        self.quant = stages.quant
+        self.res_lorenzo = stages.res_lorenzo
+        self.res_sl = stages.res_sl
+        self.res_mop = stages.res_mop
+        self.assemble = stages.assemble
+        self.decode_cumsum = stages.decode_cumsum
+        self.check_pt = stages.check_pt
+        self.screen = stages.screen
         o = (slice(None),) + self.owned
         self.paste = jax.jit(
             lambda xe, ve, xd, vd: (xe.at[o].set(xd), ve.at[o].set(vd)))
@@ -553,7 +606,12 @@ def batch_fns(sig, block, n_levels) -> BatchFns:
     with _REGISTRY_LOCK:
         fns = _BATCH_FNS.get(key)
         if fns is None:
-            fns = _BATCH_FNS[key] = BatchFns(sig, block, n_levels)
+            skey = (sig[0], block, n_levels)
+            stages = _BATCH_STAGES.get(skey)
+            if stages is None:
+                stages = _BATCH_STAGES[skey] = _BatchStages(
+                    sig[0], block, n_levels)
+            fns = _BATCH_FNS[key] = BatchFns(sig, block, n_levels, stages)
     return fns
 
 
@@ -833,6 +891,33 @@ class PlanExecutor:
     def decode_unit(self, unit_header, sections):
         t0, t1, i0, i1, j0, j1 = unit_header["box"]
         return self.decode_payload((t1 - t0, i1 - i0, j1 - j0), sections)
+
+    # ---- symbolize/pack stage (host codec vs device entropy stage) ------
+
+    @property
+    def codec(self) -> str:
+        return self._impl.get("symbolize", "host")
+
+    def encode_sections(self, res_u, res_v, ll, u_ll, v_ll, bm) -> dict:
+        """One unit's streams -> container section dict, routed through
+        the plan's symbolize/pack binding: the host codec symbolizes on
+        CPU (encode.field_sections), the device codec entropy-encodes
+        the residual streams on the accelerator (core/entropy.py)."""
+        if self.codec == "device":
+            from . import entropy
+            return entropy.field_sections_device(
+                res_u, res_v, np.asarray(ll), u_ll, v_ll, np.asarray(bm),
+                self.plan.backend)
+        return encode.field_sections(res_u, res_v, np.asarray(ll),
+                                     u_ll, v_ll, np.asarray(bm))
+
+    def entropy_fragments(self, res_u_stack, res_v_stack) -> list:
+        """Batched device entropy encode of stacked same-shape residual
+        streams; returns one section fragment per unit (device codec
+        only -- callers gate on ``codec``)."""
+        from . import entropy
+        return entropy.encode_streams(res_u_stack, res_v_stack,
+                                      self.plan.backend)
 
     # ---- per-unit encode (tiled paths; ext-quantize + owned streams) ----
 
@@ -1160,7 +1245,7 @@ def pack_field(ex: PlanExecutor, u, v, enc: FieldEncode, t0: float):
     p = ex.plan
     lossless_np = np.asarray(enc.lossless)
     bm_np = np.asarray(enc.bm)
-    sections = encode.field_sections(
+    sections = ex.encode_sections(
         enc.res_u, enc.res_v, lossless_np, u[lossless_np], v[lossless_np],
         bm_np)
     blob = encode.pack(field_header(p, u.shape), sections, p.zstd_level)

@@ -266,6 +266,13 @@ class _Session:
         self._begin = None
         self._ckpt = None
         self._unit_recs = []
+        # per-unit journal records buffered in memory between
+        # checkpoints: a record is only durable (or even written) once
+        # the checkpoint that claims its bytes lands, so writing them
+        # earlier buys no recovery -- units past the last checkpoint
+        # are replayed from the source either way.  One batched write +
+        # one fsync per window checkpoint instead of a write per unit.
+        self._pending_recs = []
 
     # -- resume inspection -------------------------------------------------
     def finished_stats(self):
@@ -394,7 +401,7 @@ class _Session:
         st = self.st
         tiling._write_unit(st, p)
         bm = np.asarray(p.bm)
-        self.journal.append({
+        self._pending_recs.append({
             "t": "unit",
             "entry": st.writer.units[-1],
             "counts": {"ll": int(p.ll.sum()), "verts": int(p.ll.size),
@@ -406,10 +413,17 @@ class _Session:
     def checkpoint(self, snap: dict) -> None:
         """Durable frontier: the data file is flushed+fsynced BEFORE
         the journal record that claims its byte count, so a checkpoint
-        never promises bytes the container does not have."""
+        never promises bytes the container does not have.  The buffered
+        unit records drain here, ahead of the claiming ckpt record (a
+        reader requires every claimed unit record to precede its ckpt),
+        and the sync=True on the ckpt append flushes + fsyncs the whole
+        batch once."""
         snap["bytes"] = int(self.st.writer.bytes_written)
         self.file.flush()
         os.fsync(self.file.fileno())
+        for rec in self._pending_recs:
+            self.journal.append(rec)
+        self._pending_recs.clear()
         self.journal.append(snap, sync=True)
 
     # -- teardown -------------------------------------------------------------

@@ -76,6 +76,10 @@ from . import grid as mesh
 # the entry's ``crc`` field (tests/test_container_golden.py pins this
 # against a checked-in v3 blob).
 TILED_FORMAT_VERSION = 4
+# v5: unit frames may be CPTH1 (device entropy stage, core/entropy.py)
+# instead of CPTZ1/CPTL1.  Host-codec archives keep writing v4 -- the
+# bump applies only where an old reader would actually fail.
+TILED_FORMAT_VERSION_DEVICE = 5
 _EB_BIG = np.int64(2**62)
 # batched unit execution: cap the stacked batch (with pow2 padding this
 # bounds both peak memory and the number of compiled batch sizes)
@@ -831,6 +835,9 @@ class _UnitPayload:
     res_v: object
     bm: object          # blockmap (np bool)
     seg: object         # segment records tuple | None
+    frag: object = None  # device-codec entropy fragment (HuffSections +
+                        # escapes, core/entropy.py); res_u/res_v are
+                        # released once it exists
 
 
 def _unit_payloads(st: _State, w):
@@ -881,8 +888,30 @@ def _unit_payloads(st: _State, w):
         # original-predicate tables and seam snapshots are dead now
         st.preds.pop(spec.key, None)
         st.seen.pop(spec.key, None)
+    if st.ex.codec == "device":
+        _attach_entropy_fragments(st, payloads)
     w.emitted = True
     return payloads
+
+
+def _attach_entropy_fragments(st: _State, payloads):
+    """Device entropy stage over one window's payloads: stack the
+    residual streams by owned shape and entropy-encode each stack in
+    one batched device pass (per-unit tables keep the bytes independent
+    of the grouping -- pipeline module doc).  The raw residual arrays
+    are dropped once their fragment exists, so the async writer thread
+    hands off pre-packed bitstreams instead of full streams."""
+    stack = np.stack if st.ex.plan.backend == "numpy" else jnp.stack
+    groups = {}
+    for i, p in enumerate(payloads):
+        groups.setdefault(tuple(p.res_u.shape), []).append(i)
+    for idxs in groups.values():
+        frags = st.ex.entropy_fragments(
+            stack([payloads[i].res_u for i in idxs]),
+            stack([payloads[i].res_v for i in idxs]))
+        for i, frag in zip(idxs, frags):
+            payloads[i].frag = frag
+            payloads[i].res_u = payloads[i].res_v = None
 
 
 def _write_unit(st: _State, p: _UnitPayload):
@@ -891,8 +920,13 @@ def _write_unit(st: _State, p: _UnitPayload):
     engine runs this on its writer thread while the device encodes the
     next window."""
     header = {"box": [int(x) for x in p.box]}
-    sections = encode.field_sections(
-        p.res_u, p.res_v, p.ll, p.u_ll, p.v_ll, p.bm)
+    if p.frag is not None:
+        from . import entropy
+        sections = entropy.merge_sections(
+            p.frag, p.ll, p.u_ll, p.v_ll, p.bm)
+    else:
+        sections = encode.field_sections(
+            p.res_u, p.res_v, p.ll, p.u_ll, p.v_ll, p.bm)
     st.writer.add_unit(p.key, p.box, header, sections)
     if p.seg is not None:
         st.tindex.add_unit(p.key, *p.seg)
@@ -926,7 +960,12 @@ def _finish_header(st: _State, T: int):
 def _container_header(st: _State, T: int):
     cfg = st.cfg
     return {
-        "version": TILED_FORMAT_VERSION,
+        # device-codec containers hold CPTH1 unit frames an older
+        # reader cannot parse, so only THEY bump the version; host-codec
+        # containers stay at v4 (old readers keep working, and the v4
+        # golden pin in tests/test_container_golden.py stays exact)
+        "version": (TILED_FORMAT_VERSION_DEVICE
+                    if st.ex.codec == "device" else TILED_FORMAT_VERSION),
         "pipeline": "tiled",
         "predictor": cfg.predictor,
         "sl_backend": st.be,
@@ -1184,10 +1223,10 @@ def decompress_tiled(src, region=None, backend=None, degraded=False):
     with _source_of(src) as source:
         hdr = source.header()
         version = hdr.get("version", 1)
-        if version > TILED_FORMAT_VERSION:
+        if version > TILED_FORMAT_VERSION_DEVICE:
             raise ValueError(
                 f"container format version {version} is newer than this "
-                f"decoder (supports <= {TILED_FORMAT_VERSION})")
+                f"decoder (supports <= {TILED_FORMAT_VERSION_DEVICE})")
         T, H, W = hdr["shape"]
         if region is None:
             region = (0, T, 0, H, 0, W)

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: batched 256-bin symbol histogram.
+
+The device entropy stage (core/entropy.py) needs one histogram per
+symbol row of a (B, n) uint8 stack -- the only data the host ever sees
+before bit-packing (the canonical code tables are built from it).  TPUs
+have no scatter-add fast path, so the kernel takes the compare-and-sum
+form instead: each grid step loads a (1, CHUNK) slice of one row,
+compares it against a broadcasted 256-bin iota and reduces along the
+chunk -- pure VPU integer work, exact by construction.  The n axis is
+the inner grid dimension, so partial counts accumulate into the same
+(1, 256) output block across sequential grid steps.
+
+Symbols arrive as int32 (the ops wrapper widens uint8) to keep VMEM
+tiling on the friendly (8, 128) int32 granularity rather than the
+(32, 128) int8 one.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NBINS = 256
+CHUNK = 512          # n-axis slice per grid step (multiple of 128 lanes)
+
+
+def _kernel(sym_ref, out_ref):
+    j = pl.program_id(1)
+    s = sym_ref[0]                                   # (CHUNK,) int32
+    bins = jax.lax.broadcasted_iota(jnp.int32, (NBINS, s.shape[0]), 0)
+    counts = jnp.sum((s[None, :] == bins).astype(jnp.int32), axis=1,
+                     dtype=jnp.int32)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[0] = counts
+
+    @pl.when(j != 0)
+    def _acc():
+        out_ref[0] = out_ref[0] + counts
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def symbol_histogram_pallas(sym, interpret=True):
+    """sym (B, n) int32 with values in [0, 255]; n a multiple of CHUNK
+    (the ops wrapper zero-pads and corrects bin 0).  Returns (B, 256)
+    int32 counts."""
+    B, n = sym.shape
+    grid = (B, n // CHUNK)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, CHUNK), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, NBINS), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, NBINS), jnp.int32),
+        interpret=interpret,
+    )(sym)

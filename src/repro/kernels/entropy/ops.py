@@ -1,0 +1,29 @@
+"""Dispatch wrapper: TPU -> pallas kernel, CPU/other -> jnp ref."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def symbol_histogram(sym, force_ref=False, force_pallas=False):
+    """Per-row 256-bin histogram of a (B, n) uint8 symbol stack.
+
+    Integer counts are exact, so the pallas and ref paths are
+    bit-identical; off-TPU the ref path is the default (the interpreted
+    kernel exists for parity testing via ``force_pallas``).
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    if force_ref or (not force_pallas and not on_tpu):
+        return ref.symbol_histogram(sym)
+    n = sym.shape[1]
+    pad = (-n) % kernel.CHUNK
+    s32 = sym.astype(jnp.int32)
+    if pad:
+        s32 = jnp.pad(s32, ((0, 0), (0, pad)))
+    hist = kernel.symbol_histogram_pallas(s32, interpret=not on_tpu)
+    if pad:
+        # zero-padding lands in bin 0; subtract it back out
+        hist = hist.at[:, 0].add(-pad)
+    return hist

@@ -1,0 +1,13 @@
+"""Pure-jnp reference for the batched symbol histogram (exact)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def symbol_histogram(sym):
+    """sym (B, n) uint8 -> (B, 256) int32 per-row counts."""
+    def one(row):
+        return jnp.zeros((256,), jnp.int32).at[row.astype(jnp.int32)].add(1)
+
+    return jax.vmap(one)(sym)

@@ -1,0 +1,224 @@
+"""Device entropy stage guarantees (core/entropy.py, DESIGN.md).
+
+The batched symbolize/table/bit-pack stage is an alternate *encoding*
+of the exact same streams the host coder ships, so every property here
+is bit-level: device containers must decode identically to host
+containers, batched fragments must equal sequential fragments byte for
+byte, the numpy mirrors must match the jax path, and the vectorized
+batch table construction must emit the same canonical code space as
+``encode.canonical_codes``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import CompressionConfig, compress, decompress, encode
+from repro.core import entropy, tiling
+from repro.data import synthetic
+
+
+def _cfg(**kw):
+    base = dict(eb=1e-3, mode="rel", predictor="mop", backend="xla",
+                verify=True, fused=True)
+    base.update(kw)
+    return CompressionConfig(**base)
+
+
+def _residual_stacks(n_units=4, shape=(2, 12, 16), seed=0, spikes=False):
+    rng = np.random.default_rng(seed)
+    ru = np.round(rng.standard_normal((n_units,) + shape) * 7)
+    rv = np.round(rng.standard_normal((n_units,) + shape) * 7)
+    if spikes:
+        # force the escape path (|residual| beyond the symbol range)
+        ru.reshape(n_units, -1)[:, ::61] = 10 ** 7
+    return ru.astype(np.int64), rv.astype(np.int64)
+
+
+# ------------------------------------------------- end-to-end codec A/B
+
+@pytest.mark.parametrize("predictor", ["mop", "lorenzo"])
+def test_device_codec_decode_parity(small_field, predictor):
+    """codec='device' ships a CPTH1 container whose decode is
+    bit-identical to the host-codec decode of the same field."""
+    u, v = small_field
+    host_blob, host_stats = compress(u, v, _cfg(predictor=predictor))
+    dev_blob, dev_stats = compress(
+        u, v, _cfg(predictor=predictor, codec="device"))
+    assert dev_blob[:5] == encode.MAGIC_HUF
+    assert host_blob[:5] != encode.MAGIC_HUF
+    uh, vh = decompress(host_blob)
+    ud, vd = decompress(dev_blob)
+    assert np.array_equal(uh, ud) and np.array_equal(vh, vd)
+    assert host_stats["eb_abs"] == dev_stats["eb_abs"]
+
+
+def test_device_codec_container_self_describing(small_field):
+    """The reader dispatches on the container, not the config: a CPTH1
+    blob decodes without being told which codec wrote it."""
+    u, v = small_field
+    blob, _ = compress(u, v, _cfg(codec="device"))
+    header, _ = encode.unpack(blob)
+    assert header["codec"] == "huffman"
+    ur, _ = decompress(blob)          # no codec hint anywhere
+    assert ur.shape == u.shape
+
+
+@pytest.mark.parametrize("batch_units", [True, False])
+def test_tiled_device_codec_bytes(small_field, batch_units):
+    """Tiled archives under codec='device': the batched and per-unit
+    paths produce byte-identical containers, and both decode to the
+    host-codec tiled decode."""
+    u, v = small_field
+    grid = tiling.TileGrid(2, 10, 14)
+    cfg = _cfg(codec="device", tiling=grid, batch_units=batch_units)
+    blob, _ = tiling.compress_tiled(u, v, cfg, grid)
+    ref_blob, _ = tiling.compress_tiled(
+        u, v, dataclasses.replace(cfg, batch_units=not batch_units), grid)
+    assert blob == ref_blob
+    ut, vt = tiling.decompress_tiled(blob)
+    uh, vh = tiling.decompress_tiled(
+        tiling.compress_tiled(
+            u, v, dataclasses.replace(cfg, codec="host"), grid)[0])
+    assert np.array_equal(ut, uh) and np.array_equal(vt, vh)
+
+
+# ------------------------------------------- stage-level bit identities
+
+def test_batched_equals_sequential_fragments():
+    """Per-row tables make fragments independent of batch size: the
+    B-unit call and B single-unit calls emit identical bytes, lengths
+    and escapes."""
+    ru, rv = _residual_stacks(n_units=5, spikes=True)
+    batched = entropy.encode_streams(ru, rv)
+    for i, frag in enumerate(batched):
+        solo = entropy.encode_streams(ru[i:i + 1], rv[i:i + 1])[0]
+        for key in ("sym_u", "sym_v"):
+            assert frag[key].data == solo[key].data
+            assert np.array_equal(frag[key].lengths, solo[key].lengths)
+            assert frag[key].n == solo[key].n
+        for key in ("esc_u", "esc_v"):
+            assert np.array_equal(np.asarray(frag[key]),
+                                  np.asarray(solo[key]))
+
+
+def test_numpy_backend_matches_xla():
+    """The numpy mirrors are a backend, not an approximation: both
+    bindings emit the same bitstreams on the same residuals."""
+    ru, rv = _residual_stacks(n_units=3, spikes=True)
+    fx = entropy.encode_streams(ru, rv, "xla")
+    fn = entropy.encode_streams(ru, rv, "numpy")
+    for a, b in zip(fx, fn):
+        for key in ("sym_u", "sym_v"):
+            assert a[key].data == b[key].data
+            assert np.array_equal(a[key].lengths, b[key].lengths)
+        for key in ("esc_u", "esc_v"):
+            assert np.array_equal(np.asarray(a[key]), np.asarray(b[key]))
+
+
+def test_decode_matches_host_symbolize():
+    """Device bitstreams decode to the exact symbol arrays the host
+    coder produces, and the escape values round-trip."""
+    ru, rv = _residual_stacks(n_units=3, spikes=True)
+    frags = entropy.encode_streams(ru, rv)
+    for i, frag in enumerate(frags):
+        for key, ekey, res in (("sym_u", "esc_u", ru[i]),
+                               ("sym_v", "esc_v", rv[i])):
+            sym, esc = encode.to_symbols(res)
+            sec = frag[key]
+            assert np.array_equal(
+                entropy.decode_symbols(sec.lengths, sec.data, sec.n), sym)
+            assert np.array_equal(np.asarray(frag[ekey]), esc)
+
+
+def test_pallas_histogram_parity():
+    """The pallas histogram kernel (interpret mode off-TPU) is
+    bit-identical to the jnp ref and the numpy mirror, including on a
+    non-CHUNK-aligned row length (exercises the pad-correction)."""
+    from repro.kernels.entropy import ops
+
+    rng = np.random.default_rng(3)
+    for n in (128, 1000):             # aligned and ragged
+        sym = rng.integers(0, 256, (4, n)).astype(np.uint8)
+        ref = np.asarray(ops.symbol_histogram(sym, force_ref=True))
+        pal = np.asarray(ops.symbol_histogram(sym, force_pallas=True))
+        npy = np.stack([np.bincount(row, minlength=256) for row in sym])
+        assert np.array_equal(ref, pal)
+        assert np.array_equal(ref, npy)
+
+
+# ------------------------------------------------ batch table validity
+
+def test_build_tables_batch_canonical_and_kraft():
+    """Fuzzed histograms: batch-built lengths are always decodable
+    (1..L_MAX, Kraft holds) and the code words are exactly
+    ``encode.canonical_codes`` of those lengths, row by row."""
+    rng = np.random.default_rng(7)
+    hists = []
+    for _ in range(40):
+        hist = np.zeros(256, np.int64)
+        k = int(rng.integers(1, 200))
+        idx = rng.choice(256, k, replace=False)
+        hist[idx] = rng.zipf(1.6, k).clip(1, 10 ** 6)
+        hists.append(hist)
+    hists.append(np.eye(256, dtype=np.int64)[17] * 999)   # single symbol
+    hist = np.stack(hists)
+    lengths, codes = entropy.build_tables_batch(hist)
+    for r in range(hist.shape[0]):
+        ln = lengths[r]
+        present = hist[r] > 0
+        assert (ln[present] >= 1).all() and (ln[present] <= entropy.L_MAX).all()
+        assert (ln[~present] == 0).all()
+        kraft = (np.int64(1) << (entropy.L_MAX - ln[present])).sum()
+        assert kraft <= (np.int64(1) << entropy.L_MAX)
+        ref_codes, _ = encode.canonical_codes(ln.astype(np.uint8))
+        assert np.array_equal(codes[r][present],
+                              ref_codes[present].astype(np.uint32))
+
+
+def test_build_tables_batch_rows_independent():
+    """A row's table depends only on that row's counts -- the property
+    that makes batched == sequential bytes."""
+    rng = np.random.default_rng(11)
+    hist = rng.integers(0, 50, (6, 256)).astype(np.int64)
+    full_l, full_c = entropy.build_tables_batch(hist)
+    solo_l, solo_c = entropy.build_tables_batch(hist[2:3])
+    assert np.array_equal(full_l[2], solo_l[0])
+    assert np.array_equal(full_c[2], solo_c[0])
+
+
+# ------------------------------------------------------- failure paths
+
+def test_cpth1_corruption_raises(small_field):
+    """Corrupt CPTH1 containers fail with ContainerError, never decode
+    garbage: truncation, a mangled header, and a Kraft-breaking huffman
+    table are all typed failures."""
+    u, v = small_field
+    blob, _ = compress(u, v, _cfg(codec="device"))
+
+    with pytest.raises(encode.ContainerError):
+        encode.unpack(blob[:7])
+    corrupt_hdr = bytearray(blob)
+    corrupt_hdr[12] ^= 0xFF           # inside the msgpack header
+    with pytest.raises(encode.ContainerError):
+        encode.unpack(bytes(corrupt_hdr))
+
+    ru, rv = _residual_stacks(n_units=1)
+    sec = entropy.encode_streams(ru, rv)[0]["sym_u"]
+    bad = np.zeros(256, np.uint8)
+    bad[:4] = 1                       # four 1-bit codes: Kraft sum 2 > 1
+    with pytest.raises(encode.ContainerError, match="Kraft"):
+        entropy.decode_symbols(bad, sec.data, sec.n)
+    with pytest.raises(encode.ContainerError, match="max code length"):
+        entropy.decode_symbols(np.full(256, 31, np.uint8), sec.data, sec.n)
+
+
+def test_magics_disjoint():
+    """No container tag is a prefix of another (the reader dispatches
+    on a fixed-length magic read)."""
+    magics = (encode.MAGIC, encode.MAGIC_ZLIB, encode.MAGIC_TILED,
+              encode.MAGIC_HUF)
+    assert len(set(magics)) == len(magics)
+    for a in magics:
+        for b in magics:
+            assert a == b or not b.startswith(a[:4])

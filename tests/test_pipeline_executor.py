@@ -103,7 +103,11 @@ def test_tiled_header_recovers_fused_bindings(field):
     hdr = encode.tiled_header(blob)
     plan = pipeline.plan_from_header(hdr)
     assert plan.name == "tiled"
-    assert plan.bindings == pipeline.FUSED_BINDINGS
+    # a host-codec header recovers the fused bindings plus the host
+    # symbolize/pack pair (the codec is part of the plan since PR 7)
+    assert plan.bindings == pipeline._codec_bindings(
+        pipeline.FUSED_BINDINGS, "host")
+    assert dict(plan.bindings)["symbolize"] == "host"
 
 
 def test_registry_is_keyed_and_never_evicts():
