@@ -106,6 +106,51 @@ def check(payload: dict) -> list:
     walk_rates(payload, "$")
     checked.append("nonzero_rates")
 
+    ovh = payload.get("obs_overhead")
+    need(isinstance(ovh, dict), "obs_overhead section missing")
+    for k in ("disabled_pct", "enabled_pct", "trace_events_per_encode",
+              "noop_call_ns", "t_encode_obs_off", "t_encode_obs_on"):
+        need(k in ovh, f"obs_overhead.{k} missing")
+    need(ovh["disabled_pct"] <= 2.0,
+         f"obs_overhead.disabled_pct {ovh['disabled_pct']} > 2: the "
+         "disabled instrumentation path must stay a near-zero-cost "
+         "no-op (span construction got expensive?)")
+    need(ovh["enabled_pct"] <= 10.0,
+         f"obs_overhead.enabled_pct {ovh['enabled_pct']} > 10: enabled "
+         "tracing must not distort the workload it observes")
+    need(ovh["trace_events_per_encode"] >= 1,
+         "obs_overhead saw no trace events on an enabled encode")
+    checked.append("obs_overhead")
+
+    rate = payload.get("rate_accounting")
+    need(isinstance(rate, dict) and isinstance(rate.get("codecs"), dict),
+         "rate_accounting section missing")
+    need({"host", "device"} <= set(rate["codecs"]),
+         f"rate_accounting must cover both codecs, got "
+         f"{sorted(rate.get('codecs', {}))}")
+    for codec, row in rate["codecs"].items():
+        kinds = row.get("bytes_by_kind")
+        need(isinstance(kinds, dict) and kinds,
+             f"rate_accounting.{codec}.bytes_by_kind missing")
+        total = sum(kinds.values())
+        need(total == row.get("container_bytes"),
+             f"rate_accounting.{codec}: byte kinds sum to {total}, "
+             f"container is {row.get('container_bytes')} bytes -- the "
+             "decomposition must be exact and disjoint")
+        need(row.get("n_units", 0) >= 1,
+             f"rate_accounting.{codec} covered no units")
+        need(row.get("n_symbols", 0) > 0,
+             f"rate_accounting.{codec} decoded no symbols")
+    dev = rate["codecs"]["device"]
+    # packed canonical-Huffman bitstreams cannot beat the zero-order
+    # Shannon bound of their own histogram (host zstd LZ can, so the
+    # bound is only gated for the device codec)
+    need(dev["achieved_bps"] >= dev["shannon_bps"],
+         f"rate_accounting.device achieved {dev['achieved_bps']} "
+         f"bits/sym beats the Shannon bound {dev['shannon_bps']} -- "
+         "the accounting is decoding the wrong streams")
+    checked.append("rate_accounting")
+
     traj = payload.get("trajectory_analysis")
     need(isinstance(traj, dict) and traj.get("rows"),
          "trajectory_analysis section missing or empty")

@@ -19,6 +19,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.baselines import REGISTRY
 from repro.core import CompressionConfig, compress, decompress
 
@@ -45,13 +46,22 @@ def _mbps(mb, t):
     return round(rate, max(0, 3 - int(math.floor(math.log10(rate)))))
 
 
+def _span_time(name, fn, **attrs):
+    """Run ``fn()`` inside an obs span and return ``(result, seconds)``.
+
+    Section timings derive from the span's own clock (``dur_s``) so the
+    number in BENCH_compress.json is the same one a Perfetto trace of
+    the run shows; the perf_counter fallback only covers obs-disabled
+    runs (where the span is the shared no-op)."""
+    t0 = time.perf_counter()
+    with obs.span(name, **attrs) as sp:
+        out = fn()
+    return out, sp.dur_s or (time.perf_counter() - t0)
+
+
 def _time_ours(u, v, cfg):
-    t0 = time.perf_counter()
-    blob, stats = compress(u, v, cfg)
-    tc = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    decompress(blob)
-    td = time.perf_counter() - t0
+    (blob, stats), tc = _span_time("bench.compress", lambda: compress(u, v, cfg))
+    _, td = _span_time("bench.decompress", lambda: decompress(blob))
     return blob, stats, tc, td
 
 
@@ -110,24 +120,25 @@ def _bench_tiled(eb, shape, repeat, log):
     blob_m = blob_t = None
     stats_t = None
     for _ in range(repeat):
-        t0 = time.perf_counter()
-        blob_m, _ = compress(u, v, cfg)
-        tc_m.append(time.perf_counter() - t0)
-        t0 = time.perf_counter()
-        um, vm = decompress(blob_m)
-        td_m.append(time.perf_counter() - t0)
-        t0 = time.perf_counter()
-        blob_t, stats_t = compress_tiled(u, v, cfg, grid)
-        tc_t.append(time.perf_counter() - t0)
+        (blob_m, _), dt = _span_time(
+            "bench.encode_monolithic", lambda: compress(u, v, cfg))
+        tc_m.append(dt)
+        (um, vm), dt = _span_time(
+            "bench.decode_monolithic", lambda: decompress(blob_m))
+        td_m.append(dt)
+        (blob_t, stats_t), dt = _span_time(
+            "bench.encode_tiled", lambda: compress_tiled(u, v, cfg, grid))
+        tc_t.append(dt)
         # decode times must measure DECODE, not decoded-unit cache hits
         query_mod.unit_cache.clear()
-        t0 = time.perf_counter()
-        ut, vt = decompress_tiled(blob_t)
-        td_t.append(time.perf_counter() - t0)
+        (ut, vt), dt = _span_time(
+            "bench.decode_tiled", lambda: decompress_tiled(blob_t))
+        td_t.append(dt)
         # indexing overhead: same encode with the sidecar track index
-        t0 = time.perf_counter()
-        compress_tiled(u, v, cfg_idx, grid)
-        tc_i.append(time.perf_counter() - t0)
+        _, dt = _span_time(
+            "bench.encode_tiled_indexed",
+            lambda: compress_tiled(u, v, cfg_idx, grid))
+        tc_i.append(dt)
     identical = bool(np.array_equal(um, ut) and np.array_equal(vm, vt))
     assert identical, "tiled decode diverged from monolithic"
     # random-access: decode one tile-interior region, count units read
@@ -135,9 +146,8 @@ def _bench_tiled(eb, shape, repeat, log):
     region = (0, min(2, T), 0, min(8, H), 0, min(8, W))
     n_read = len(tiling_mod.read_plan(blob_t, region))
     query_mod.unit_cache.clear()
-    t0 = time.perf_counter()
-    decompress_region(blob_t, region)
-    t_region = time.perf_counter() - t0
+    _, t_region = _span_time("bench.decode_region",
+                             lambda: decompress_region(blob_t, region))
     out = {
         "field": f"advected_turbulence {T}x{H}x{W}",
         "predictor": "mop", "backend": "xla",
@@ -199,12 +209,14 @@ def _bench_batched(eb, shape, repeat, log):
         tb, ts = [], []
         blob_b = blob_s = None
         for _ in range(repeat):
-            t0 = time.perf_counter()
-            blob_b, stats_b = compress_tiled(u, v, cfg_b, grid)
-            tb.append(time.perf_counter() - t0)
-            t0 = time.perf_counter()
-            blob_s, _ = compress_tiled(u, v, cfg_s, grid)
-            ts.append(time.perf_counter() - t0)
+            (blob_b, stats_b), dt = _span_time(
+                "bench.encode_batched", lambda: compress_tiled(
+                    u, v, cfg_b, grid), predictor=pred)
+            tb.append(dt)
+            (blob_s, _), dt = _span_time(
+                "bench.encode_sequential", lambda: compress_tiled(
+                    u, v, cfg_s, grid), predictor=pred)
+            ts.append(dt)
         same = blob_b == blob_s
         assert same, f"batched {pred} diverged from sequential bytes"
         identical = identical and same
@@ -279,21 +291,23 @@ def _bench_async(eb, shape, repeat, log, frame_latency=0.02):
     t_ser, t_asy, t_ser0, t_asy0 = [], [], [], []
     blob_s = blob_a = None
     for _ in range(repeat):
-        t0 = time.perf_counter()
-        blob_s, _ = compress_stream(frames(frame_latency), cfg, grid,
-                                    value_range=vr)
-        t_ser.append(time.perf_counter() - t0)
-        t0 = time.perf_counter()
-        blob_a, _ = compress_stream(frames(frame_latency), cfg, grid,
-                                    value_range=vr, async_engine=True)
-        t_asy.append(time.perf_counter() - t0)
-        t0 = time.perf_counter()
-        compress_stream(frames(), cfg, grid, value_range=vr)
-        t_ser0.append(time.perf_counter() - t0)
-        t0 = time.perf_counter()
-        compress_stream(frames(), cfg, grid, value_range=vr,
-                        async_engine=True)
-        t_asy0.append(time.perf_counter() - t0)
+        (blob_s, _), dt = _span_time(
+            "bench.stream_serial", lambda: compress_stream(
+                frames(frame_latency), cfg, grid, value_range=vr))
+        t_ser.append(dt)
+        (blob_a, _), dt = _span_time(
+            "bench.stream_async", lambda: compress_stream(
+                frames(frame_latency), cfg, grid, value_range=vr,
+                async_engine=True))
+        t_asy.append(dt)
+        _, dt = _span_time(
+            "bench.stream_serial_unpaced", lambda: compress_stream(
+                frames(), cfg, grid, value_range=vr))
+        t_ser0.append(dt)
+        _, dt = _span_time(
+            "bench.stream_async_unpaced", lambda: compress_stream(
+                frames(), cfg, grid, value_range=vr, async_engine=True))
+        t_asy0.append(dt)
     identical = bool(blob_s == blob_t and blob_a == blob_t)
     assert identical, "async/serial stream diverged from compress_tiled"
 
@@ -391,12 +405,10 @@ def _bench_entropy(eb, shape, repeat, log, n_units=16):
     th, td = [], []
     host_out = dev_out = None
     for _ in range(max(repeat, 2)):
-        t0 = time.perf_counter()
-        host_out = host_arm()
-        th.append(time.perf_counter() - t0)
-        t0 = time.perf_counter()
-        dev_out = device_arm()
-        td.append(time.perf_counter() - t0)
+        host_out, dt = _span_time("bench.entropy_host", host_arm)
+        th.append(dt)
+        dev_out, dt = _span_time("bench.entropy_device", device_arm)
+        td.append(dt)
 
     equal = True
     for (hu, hv, eu, ev), frag in zip(host_out, dev_out):
@@ -476,15 +488,14 @@ def _bench_recovery(eb, shape, log):
         # reported compile time (>1000%) instead of journal+fsync cost
         compress_stream(feed, cfg, grid, value_range=vr, sink=io.BytesIO())
         ref_path = os.path.join(td, "ref.cptt")
-        t0 = time.perf_counter()
-        compress_stream(feed, cfg, grid, value_range=vr, sink=ref_path)
-        t_journaled = time.perf_counter() - t0
+        _, t_journaled = _span_time(
+            "bench.stream_journaled", lambda: compress_stream(
+                feed, cfg, grid, value_range=vr, sink=ref_path))
         with open(ref_path, "rb") as f:
             ref = f.read()
-        t0 = time.perf_counter()
-        compress_stream(feed, cfg, grid, value_range=vr,
-                        sink=io.BytesIO())
-        t_plain = time.perf_counter() - t0
+        _, t_plain = _span_time(
+            "bench.stream_unjournaled", lambda: compress_stream(
+                feed, cfg, grid, value_range=vr, sink=io.BytesIO()))
 
         crash_path = os.path.join(td, "crash.cptt")
         plan = faults_mod.FaultPlan().io_error("stream.compute",
@@ -499,10 +510,10 @@ def _bench_recovery(eb, shape, log):
         from repro.core import stream_engine
 
         info = stream_engine.resume_info(crash_path)
-        t0 = time.perf_counter()
-        _, stats = compress_stream(feed, cfg, grid, value_range=vr,
-                                   sink=crash_path, resume=True)
-        t_resume = time.perf_counter() - t0
+        (_, stats), t_resume = _span_time(
+            "bench.stream_resume", lambda: compress_stream(
+                feed, cfg, grid, value_range=vr, sink=crash_path,
+                resume=True))
         with open(crash_path, "rb") as f:
             identical = f.read() == ref
         assert identical, "resumed container diverged from uninterrupted"
@@ -511,9 +522,8 @@ def _bench_recovery(eb, shape, log):
         hdr = encode.tiled_header(ref)
         last = max(hdr["units"], key=lambda e: e["off"])
         cut = ref[: last["off"] + last["len"]]
-        t0 = time.perf_counter()
-        blob, rep = encode.salvage_container(cut)
-        t_salvage = time.perf_counter() - t0
+        (blob, rep), t_salvage = _span_time(
+            "bench.salvage", lambda: encode.salvage_container(cut))
         assert rep["units_recovered"] == len(hdr["units"]), \
             "salvage lost intact units"
         from repro.core import tiling as tiling_mod
@@ -571,10 +581,13 @@ def _bench_trajectory_analysis(eb, shape, log, field="turbulence"):
 
     def row(name, ur, vr):
         ufp, vfp = fixedpoint.refix(ur, vr, scale)
-        t0 = time.perf_counter()
-        p1 = trajectory.face_predicate_tables(ufp, vfp)
-        ts = analysis.extract(ufp, vfp, tables=p1)
-        dt = time.perf_counter() - t0
+
+        def arm():
+            p1 = trajectory.face_predicate_tables(ufp, vfp)
+            return p1, analysis.extract(ufp, vfp, tables=p1)
+
+        (p1, ts), dt = _span_time("bench.analysis_extract", arm,
+                                  method=name)
         fc = trajectory.false_cases_from_tables(p0, p1)
         out = {
             "method": name,
@@ -606,6 +619,121 @@ def _bench_trajectory_analysis(eb, shape, log, field="turbulence"):
     return {"field": f"{field} {T}x{H}x{W}", "eb": eb, "rows": rows}
 
 
+def _bench_obs_overhead(eb, shape, repeat, log):
+    """Cost of the observability layer on the mop encode (the run the
+    ``obs_overhead`` schema gate bounds).
+
+    * ``enabled_pct``: measured best-of A/B -- same compress with
+      REPRO_OBS tracing off vs on (clamped at 0; on small fields the
+      difference is inside timer noise).
+    * ``disabled_pct``: the disabled path is too cheap to resolve by
+      A/B timing on any field small enough for CI, so it is computed
+      synthetically: (measured ns per no-op instrumentation call) x
+      (the number of trace events the SAME workload emits when
+      enabled) / (the obs-off wall time).  That deliberately
+      overestimates -- every disabled call is priced at the full
+      span-construction cost."""
+    from repro.data import synthetic
+
+    T, H, W = shape
+    u, v = synthetic.advected_turbulence(T=T, H=H, W=W)
+    cfg = CompressionConfig(eb=eb, mode="rel", predictor="mop",
+                            backend="xla", verify=True, fused=True)
+    was_enabled = obs.enabled()
+    compress(u, v, cfg)                     # untimed jit warmup
+    n_rep = max(repeat, 3)
+    try:
+        obs.disable()
+        t_off = min(_time_ours(u, v, cfg)[2] for _ in range(n_rep))
+        obs.enable()
+        n_ev0 = len(obs.trace_events())
+        t_on = min(_time_ours(u, v, cfg)[2] for _ in range(n_rep))
+        # events of ONE enabled run (the n_rep runs all emit the same
+        # workload; dividing keeps the estimate per-compress)
+        n_events = max((len(obs.trace_events()) - n_ev0) // n_rep, 1)
+    finally:
+        obs.enable() if was_enabled else obs.disable()
+
+    # price every would-be event at the cost of a full disabled
+    # span-construction + enter/exit round trip
+    obs.disable()
+    n_loop = 100_000
+    t0 = time.perf_counter_ns()
+    for _ in range(n_loop):
+        with obs.span("noop", x=1):
+            pass
+    noop_ns = (time.perf_counter_ns() - t0) / n_loop
+    if was_enabled:
+        obs.enable()
+
+    enabled_pct = max(0.0, 100.0 * (t_on - t_off) / max(t_off, 1e-9))
+    disabled_pct = 100.0 * (n_events * noop_ns) / max(t_off * 1e9, 1.0)
+    out = {
+        "field": f"advected_turbulence {T}x{H}x{W}",
+        "predictor": "mop", "backend": "xla",
+        "t_encode_obs_off": round(t_off, 4),
+        "t_encode_obs_on": round(t_on, 4),
+        "trace_events_per_encode": int(n_events),
+        "noop_call_ns": round(noop_ns, 1),
+        "disabled_pct": round(disabled_pct, 4),
+        "enabled_pct": round(enabled_pct, 2),
+    }
+    log(f"[bench] obs_overhead {T}x{H}x{W}: off {t_off:.3f}s -> on "
+        f"{t_on:.3f}s (enabled {out['enabled_pct']}%, disabled "
+        f"{out['disabled_pct']}% over {n_events} events at "
+        f"{noop_ns:.0f} ns/noop)")
+    return out
+
+
+def _bench_rate_accounting(eb, shape, log):
+    """Where the container bytes go (obs.run_report): disjoint byte
+    ranges by section kind -- gated to sum EXACTLY to the container
+    size -- plus achieved bits-per-symbol vs the zero-order Shannon
+    bound, for both unit-frame codecs."""
+    import dataclasses as _dc
+
+    from repro.core import TileGrid, compress_tiled
+    from repro.data import synthetic
+
+    T, H, W = shape
+    u, v = synthetic.advected_turbulence(T=T, H=H, W=W)
+    grid = TileGrid(tile_h=max(H // 2, 1), tile_w=max(W // 2, 1),
+                    window_t=max(T // 2, 1))
+    base = CompressionConfig(eb=eb, mode="rel", predictor="mop",
+                             backend="xla", verify=True, fused=True,
+                             track_index=False)
+    codecs = {}
+    for codec in ("host", "device"):
+        cfg = _dc.replace(base, codec=codec)
+        blob, _ = compress_tiled(u, v, cfg, grid)
+        rep = obs.run_report(blob)
+        assert rep["kind_bytes_total"] == rep["container_bytes"], \
+            f"{codec}: byte kinds do not sum to container size"
+        n_sym = sum(r["n_symbols"] for r in rep["units"])
+        ach = sum(r["achieved_bits"] for r in rep["units"])
+        sh = sum(r["shannon_bits"] for r in rep["units"])
+        row = {
+            "codec": rep["codec"],
+            "container_bytes": rep["container_bytes"],
+            "n_units": rep["n_units"],
+            "bytes_by_kind": rep["bytes_by_kind"],
+            "kind_bytes_total": rep["kind_bytes_total"],
+            "n_symbols": int(n_sym),
+            "achieved_bps": round(ach / max(n_sym, 1), 4),
+            "shannon_bps": round(sh / max(n_sym, 1), 4),
+            "units": rep["units"],
+        }
+        if "payload_bytes_by_kind" in rep:
+            row["payload_bytes_by_kind"] = rep["payload_bytes_by_kind"]
+        codecs[codec] = row
+        log(f"[bench] rate_accounting {codec:6s} {T}x{H}x{W}: "
+            f"{rep['container_bytes']} B over {rep['n_units']} units, "
+            f"{row['achieved_bps']} bits/sym achieved vs "
+            f"{row['shannon_bps']} Shannon")
+    return {"field": f"advected_turbulence {T}x{H}x{W}", "eb": eb,
+            "codecs": codecs}
+
+
 def bench_compress(small=True, eb=1e-2, backends=("xla",),
                    predictors=("lorenzo", "sl", "mop"),
                    speedup_shape=(64, 256, 256), repeat=2, log=print,
@@ -614,15 +742,22 @@ def bench_compress(small=True, eb=1e-2, backends=("xla",),
                    batched_shape=(16, 64, 64),
                    async_shape=(32, 64, 64),
                    recovery_shape=(24, 64, 64),
-                   entropy_shape=(2, 16, 16)):
+                   entropy_shape=(2, 16, 16),
+                   obs_shape=(16, 64, 64),
+                   rate_shape=(16, 64, 64)):
     """Emit the BENCH_compress.json payload.
 
     Each (dataset, predictor, backend) cell reports best-of-``repeat``
     encode/decode wall time and MB/s (first call pays jit compilation;
     best-of captures the steady state the roadmap cares about).
+
+    The whole emit runs with obs tracing ENABLED (the section timings
+    derive from obs spans); ``_bench_obs_overhead`` toggles it per arm
+    to measure its own cost.
     """
     from repro.data import synthetic
 
+    obs.enable()
     rows = []
     if data is None:
         data = datasets.load_all(small)
@@ -693,6 +828,12 @@ def bench_compress(small=True, eb=1e-2, backends=("xla",),
     traj = None
     if analysis_shape is not None:
         traj = _bench_trajectory_analysis(eb, analysis_shape, log)
+    obs_overhead = None
+    if obs_shape is not None:
+        obs_overhead = _bench_obs_overhead(eb, obs_shape, repeat, log)
+    rate_accounting = None
+    if rate_shape is not None:
+        rate_accounting = _bench_rate_accounting(eb, rate_shape, log)
     return {"rows": rows, "seed_vs_fused": comparison,
             "tiled_vs_monolithic": tiled,
             "batched_vs_sequential": batched,
@@ -700,6 +841,8 @@ def bench_compress(small=True, eb=1e-2, backends=("xla",),
             "recovery": recovery,
             "entropy_stage": entropy_stage,
             "trajectory_analysis": traj,
+            "obs_overhead": obs_overhead,
+            "rate_accounting": rate_accounting,
             "eb": eb, "small": small}
 
 
@@ -728,7 +871,8 @@ if __name__ == "__main__":
             predictors=("mop",), speedup_shape=(6, 32, 32), repeat=1,
             tiled_shape=(6, 32, 32), analysis_shape=(6, 24, 24),
             batched_shape=(6, 32, 32), async_shape=(8, 32, 32),
-            recovery_shape=(9, 32, 32), entropy_shape=(2, 16, 16))
+            recovery_shape=(9, 32, 32), entropy_shape=(2, 16, 16),
+            obs_shape=(6, 32, 32), rate_shape=(6, 32, 32))
     else:
         payload = bench_compress(
             small=not args.large, eb=args.eb, backends=backends,

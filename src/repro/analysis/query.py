@@ -27,12 +27,14 @@ import dataclasses
 import hashlib
 import os
 import threading
+import time
 from collections import OrderedDict
 
 from typing import Optional
 
 import numpy as np
 
+from .. import obs
 from ..core import backend as backend_mod
 from ..core import encode, fixedpoint
 from ..core import faults as faults_mod
@@ -61,7 +63,10 @@ class ContainerSource:
 
     ``reads``/``bytes_fetched`` count the range reads actually issued --
     the observable the decoded-unit cache is benchmarked and tested
-    against; ``retried`` counts recovered transient failures.
+    against; ``retried`` counts recovered transient failures.  All
+    three are views over per-source obs child counters, so one
+    ``obs.snapshot()`` also sees the process-wide totals under
+    ``query.range_reads`` / ``query.bytes_fetched`` / ``query.retried``.
     """
 
     def __init__(self, src, faults=None, retries: int = 0,
@@ -76,9 +81,9 @@ class ContainerSource:
             self._path = os.fspath(src)
             self._fd = os.open(self._path, os.O_RDONLY)
             self.size = os.fstat(self._fd).st_size
-        self.reads = 0
-        self.bytes_fetched = 0
-        self.retried = 0
+        self._c_reads = obs.child_counter("query.range_reads")
+        self._c_bytes = obs.child_counter("query.bytes_fetched")
+        self._c_retried = obs.child_counter("query.retried")
         self.retries = int(retries)
         self.backoff = float(backoff)
         self.faults = faults_mod.FaultPoint(faults)
@@ -86,8 +91,21 @@ class ContainerSource:
         self._hdr = None
         self._container_id = None
 
+    @property
+    def reads(self) -> int:
+        return self._c_reads.value
+
+    @property
+    def bytes_fetched(self) -> int:
+        return self._c_bytes.value
+
+    @property
+    def retried(self) -> int:
+        return self._c_retried.value
+
     def _read_once(self, off: int, ln: int) -> bytes:
         self.faults.check("source.read")
+        t0 = time.perf_counter_ns() if obs.enabled() else 0
         if self._blob is not None:
             data = self._blob[off : off + ln]
         else:
@@ -105,22 +123,22 @@ class ContainerSource:
                 parts.append(chunk)
                 got += len(chunk)
             data = b"".join(parts)
+        if t0:
+            obs.observe("query.pread_ns", time.perf_counter_ns() - t0)
         if len(data) != ln:
             raise encode.ContainerError(
                 f"short read: [{off}, {off + ln}) of a {self.size}-byte "
                 f"container returned {len(data)} bytes")
-        with self._lock:
-            self.reads += 1
-            self.bytes_fetched += len(data)
+        self._c_reads.add(1)
+        self._c_bytes.add(len(data))
         return data
 
     def read(self, off: int, ln: int) -> bytes:
         def _note(attempt, exc):
-            with self._lock:
-                self.retried += 1
+            self._c_retried.add(1)
         return faults_mod.retry_transient(
             lambda: self._read_once(off, ln), retries=self.retries,
-            backoff=self.backoff, on_retry=_note)
+            backoff=self.backoff, on_retry=_note, site="source.read")
 
     def read_many(self, entries: list, failures: list = None) -> list:
         """Concurrent range reads for a list of directory entries.
@@ -214,17 +232,30 @@ class UnitCache:
         self._d: OrderedDict = OrderedDict()
         self._lock = threading.Lock()
         self.cur_bytes = 0
-        self.hits = 0
-        self.misses = 0
+        # hit/miss/eviction accounting lives in obs child counters (the
+        # process totals appear in obs.snapshot() as cache.hits /
+        # cache.misses / cache.evicted_bytes); the public fields below
+        # are views over them
+        self._c_hits = obs.child_counter("cache.hits")
+        self._c_misses = obs.child_counter("cache.misses")
+        self._c_evicted = obs.child_counter("cache.evicted_bytes")
+
+    @property
+    def hits(self) -> int:
+        return self._c_hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._c_misses.value
 
     def get(self, key):
         with self._lock:
             val = self._d.get(key)
             if val is None:
-                self.misses += 1
+                self._c_misses.add(1)
                 return None
             self._d.move_to_end(key)
-            self.hits += 1
+            self._c_hits.add(1)
             return val
 
     def put(self, key, value):
@@ -240,14 +271,18 @@ class UnitCache:
             self.cur_bytes += cost
             while self.cur_bytes > self.max_bytes:
                 _, (_, u_old, v_old) = self._d.popitem(last=False)
-                self.cur_bytes -= int(u_old.nbytes + v_old.nbytes)
+                dropped = int(u_old.nbytes + v_old.nbytes)
+                self.cur_bytes -= dropped
+                self._c_evicted.add(dropped)
+        obs.gauge_set("cache.bytes", self.cur_bytes)
 
     def clear(self):
         with self._lock:
             self._d.clear()
             self.cur_bytes = 0
-            self.hits = 0
-            self.misses = 0
+            self._c_hits.set_local(0)
+            self._c_misses.set_local(0)
+        obs.gauge_set("cache.bytes", 0)
 
     def stats(self) -> dict:
         with self._lock:
@@ -303,6 +338,7 @@ def fetch_decoded_units(source: ContainerSource, ex, entries: list,
             out[e["off"]] = got
     n_hits = len(entries) - len(missing)
     if missing:
+        obs.count("query.units_decoded", len(missing))
         frames = source.read_many(missing, failures=failures)
         for e, frame in zip(missing, frames):
             if frame is None:       # read failed (already in failures)
@@ -504,7 +540,8 @@ def decode_for_track(src, track_id: int, backend=None,
     from ..core import pipeline as pipeline_mod
 
     source, hdr, idx = load_track_index(src)
-    with source:
+    with obs.span("query.decode_for_track",
+                  track_id=int(track_id)) as sp, source:
         idx._check(track_id)
         T, H, W = hdr["shape"]
         entries = _cover_entries(hdr, idx, track_id)
@@ -541,6 +578,9 @@ def decode_for_track(src, track_id: int, backend=None,
             missing_units=missing,
             segments_dropped=n_dropped,
         )
+        sp.set(units=len(entries), cache_hits=n_hits,
+               range_reads=source.reads,
+               bytes_fetched=source.bytes_fetched)
         if len(seg_fid) == 0:
             return TrackDecode(track=None, **acct)
         node_fid = np.unique(seg_fid)

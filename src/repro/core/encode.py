@@ -19,6 +19,7 @@ import heapq
 import io
 import os
 import struct
+import time
 import zlib
 
 import msgpack
@@ -995,6 +996,23 @@ def salvage_container(data, out=None, fallback_header: dict = None):
 JOURNAL_MAGIC = b"CPTJ1"
 
 
+def fsync_timed(fileno: int) -> None:
+    """``os.fsync`` with obs accounting -- every durability point in
+    the journal/stream path routes through here so fsync count and
+    latency (``journal.fsync`` / ``journal.fsync_ns``) are one
+    snapshot away when diagnosing a slow archive run."""
+    from .. import obs
+
+    obs.counter("journal.fsync").add(1)
+    if obs.enabled():
+        t0 = time.perf_counter_ns()
+        os.fsync(fileno)
+        obs.histogram("journal.fsync_ns").observe(
+            time.perf_counter_ns() - t0)
+    else:
+        os.fsync(fileno)
+
+
 class JournalWriter:
     """Append-only, CRC-framed journal for crash-recoverable streaming."""
 
@@ -1011,7 +1029,7 @@ class JournalWriter:
         self._f.write(raw)
         if sync:
             self._f.flush()
-            os.fsync(self._f.fileno())
+            fsync_timed(self._f.fileno())
 
     def close(self) -> None:
         self._f.flush()

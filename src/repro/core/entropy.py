@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from . import backend as backend_mod
 from . import encode as encode_mod
 from .encode import ESC, ContainerError, HuffSection
@@ -286,6 +287,7 @@ def entropy_fns(backend: str) -> EntropyFns:
     with _REGISTRY_LOCK:
         ef = _ENTROPY_FNS.get(backend)
         if ef is None:
+            obs.counter("pipeline.registry_miss.entropy").add(1)
             ef = _ENTROPY_FNS[backend] = EntropyFns(backend)
         return ef
 
@@ -312,6 +314,14 @@ def encode_streams(res_u, res_v, backend: str = "xla") -> list[dict]:
     "esc_v": ...}`` -- drop-in for the same keys of
     ``encode.field_sections``.  Tables are per-row, so the fragments
     are independent of B (batched == sequential bytes)."""
+    with obs.span("entropy.encode_streams", units=int(res_u.shape[0]),
+                  backend=backend):
+        # the host fetches below (np.asarray) are the device-sync
+        # points: the span closes only after the bitstreams landed
+        return _encode_streams(res_u, res_v, backend)
+
+
+def _encode_streams(res_u, res_v, backend: str = "xla") -> list[dict]:
     B = int(res_u.shape[0])
     n = int(np.prod(res_u.shape[1:], dtype=np.int64))
     live = 2 * B

@@ -167,27 +167,91 @@ class FaultPoint:
         return self.plan is not None
 
 
+# ----------------------------------------------------------------------
+# bounded retry with per-site visibility
+# ----------------------------------------------------------------------
+#
+# A retry that succeeds used to be invisible: only the final failure
+# surfaced, so a flaky disk retrying on every read looked identical to
+# a healthy one.  Every retry_transient site now records its attempt
+# accounting here (and into the obs registry), and debugging surfaces
+# (stream_engine.resume_info, tiling.DecodeReport) report it.
+
+_RETRY_LOCK = threading.Lock()
+_RETRY_STATS: Dict[str, Dict[str, object]] = {}
+
+
+def _record_retry(site: str, attempts: int, retried: int, ok: bool,
+                  error: Optional[BaseException]) -> None:
+    from .. import obs
+
+    with _RETRY_LOCK:
+        st = _RETRY_STATS.setdefault(site, {
+            "calls": 0, "attempts": 0, "retries": 0,
+            "failures": 0, "last_outcome": None, "last_error": None,
+        })
+        st["calls"] += 1
+        st["attempts"] += attempts
+        st["retries"] += retried
+        if ok:
+            st["last_outcome"] = "ok"
+        else:
+            st["failures"] += 1
+            st["last_outcome"] = "failed"
+            st["last_error"] = repr(error)
+    obs.counter(f"faults.retry.{site}.attempts").add(attempts)
+    if retried:
+        obs.counter(f"faults.retry.{site}.retries").add(retried)
+        obs.instant_event("faults.retry", site=site, retried=retried,
+                          outcome="ok" if ok else "failed")
+    if not ok:
+        obs.counter(f"faults.retry.{site}.failures").add(1)
+
+
+def retry_stats(site: Optional[str] = None):
+    """Per-site retry accounting since process start (or last reset):
+    ``{site: {calls, attempts, retries, failures, last_outcome,
+    last_error}}`` -- or one site's dict (empty if never seen)."""
+    with _RETRY_LOCK:
+        if site is not None:
+            return dict(_RETRY_STATS.get(site, {}))
+        return {s: dict(st) for s, st in _RETRY_STATS.items()}
+
+
+def reset_retry_stats() -> None:
+    with _RETRY_LOCK:
+        _RETRY_STATS.clear()
+
+
 def retry_transient(fn: Callable[[], object], *, retries: int = 3,
                     backoff: float = 0.01,
                     retry_on: tuple = (OSError,),
                     on_retry: Optional[Callable[[int, BaseException], None]]
-                    = None):
+                    = None, site: Optional[str] = None):
     """Run ``fn`` with bounded retry + exponential backoff on transient
     errors.  ``InjectedThreadDeath`` (BaseException) always escapes.
 
     ``retries`` is the number of *re*-attempts: the function runs at
     most ``retries + 1`` times.  The final failure is re-raised as-is
-    so callers keep the typed error.
+    so callers keep the typed error.  ``site`` names the call site for
+    ``retry_stats`` / obs accounting, so retries that eventually
+    SUCCEED are still visible afterwards.
     """
     attempt = 0
     while True:
         try:
-            return fn()
+            out = fn()
         except retry_on as e:
             attempt += 1
             if attempt > retries:
+                if site is not None:
+                    _record_retry(site, attempt, attempt - 1, False, e)
                 raise
             if on_retry is not None:
                 on_retry(attempt, e)
             if backoff > 0:
                 time.sleep(backoff * (2.0 ** (attempt - 1)))
+        else:
+            if site is not None:
+                _record_retry(site, attempt + 1, attempt, True, None)
+            return out

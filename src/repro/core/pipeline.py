@@ -63,6 +63,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from . import backend as backend_mod
 from . import ebound, encode, fixedpoint, grid, mop, predictors, quantize
 
@@ -471,6 +472,9 @@ def unit_fns(shape, block, n_levels, predictor, be, be_lorenzo=None
     with _REGISTRY_LOCK:
         fns = _UNIT_FNS.get(key)
         if fns is None:
+            # registry miss = a fresh jit trace per stage; the retrace
+            # counter is how shape churn shows up in obs.snapshot()
+            obs.counter("pipeline.registry_miss.unit_fns").add(1)
             fns = _UNIT_FNS[key] = UnitFns(shape, block, n_levels,
                                            predictor, be, be_lorenzo)
     return fns
@@ -606,9 +610,11 @@ def batch_fns(sig, block, n_levels) -> BatchFns:
     with _REGISTRY_LOCK:
         fns = _BATCH_FNS.get(key)
         if fns is None:
+            obs.counter("pipeline.registry_miss.batch_fns").add(1)
             skey = (sig[0], block, n_levels)
             stages = _BATCH_STAGES.get(skey)
             if stages is None:
+                obs.counter("pipeline.registry_miss.batch_stages").add(1)
                 stages = _BATCH_STAGES[skey] = _BatchStages(
                     sig[0], block, n_levels)
             fns = _BATCH_FNS[key] = BatchFns(sig, block, n_levels, stages)
@@ -1179,7 +1185,9 @@ def compress_field(ex: PlanExecutor, u, v, ufp, vfp) -> FieldEncode:
     # eb derivation evaluates every face's SoS predicate along the way
     # (the crossed-face zeroing); reuse those instead of a second full
     # predicate pass over the original field (the seed paid it twice)
-    eb_vertex, slice_pred0, slab_pred0 = ex.derive_eb(ufp_j, vfp_j)
+    with obs.span("pipeline.derive_eb", shape=list(shape)):
+        eb_vertex, slice_pred0, slab_pred0 = ex.derive_eb(ufp_j, vfp_j)
+        obs.device_sync(eb_vertex)
     lossless_extra = jnp.zeros(shape, dtype=bool)
     if p.tau < 1 or p.n_usable < 1:
         lossless_extra = jnp.ones(shape, dtype=bool)
@@ -1190,26 +1198,32 @@ def compress_field(ex: PlanExecutor, u, v, ufp, vfp) -> FieldEncode:
     rounds = 0
     bad_counts = []
     while True:
-        res_u, res_v, bm, lossless = _encode_field(
-            ex, enc_variant, ufp_j, vfp_j, eb_vertex, lossless_extra,
-            shape)
+        with obs.span("pipeline.quantize_predict", round=rounds):
+            res_u, res_v, bm, lossless = _encode_field(
+                ex, enc_variant, ufp_j, vfp_j, eb_vertex, lossless_extra,
+                shape)
+            obs.device_sync(res_u)
         if not p.verify:
             break
         # simulate the exact decode (same code as decompress)
-        xu_d, xv_d = ex.decode_fields(res_u, res_v, bm)
-        if verify_variant == "full":
-            new_extra, n_bad = _verify_full(
-                ex, ctx, shape, u, v, xu_d, xv_d, lossless, lossless_extra)
-        else:
-            new_extra, n_bad = _verify_screened(
-                ex, ctx, shape, ufp_j, vfp_j, u_j, v_j, xu_d, xv_d,
-                lossless, lossless_extra)
+        with obs.span("pipeline.verify_round", round=rounds) as _vs:
+            xu_d, xv_d = ex.decode_fields(res_u, res_v, bm)
+            if verify_variant == "full":
+                new_extra, n_bad = _verify_full(
+                    ex, ctx, shape, u, v, xu_d, xv_d, lossless,
+                    lossless_extra)
+            else:
+                new_extra, n_bad = _verify_screened(
+                    ex, ctx, shape, ufp_j, vfp_j, u_j, v_j, xu_d, xv_d,
+                    lossless, lossless_extra)
+            _vs.set(n_bad=n_bad)
         bad_counts.append(n_bad)
         if n_bad == 0 or rounds >= p.max_rounds:
             break
         ctx.prev_extra = lossless_extra
         lossless_extra = new_extra
         rounds += 1
+    obs.count("pipeline.verify_rounds", rounds)
     return FieldEncode(res_u, res_v, bm, lossless, rounds, bad_counts)
 
 
@@ -1245,10 +1259,14 @@ def pack_field(ex: PlanExecutor, u, v, enc: FieldEncode, t0: float):
     p = ex.plan
     lossless_np = np.asarray(enc.lossless)
     bm_np = np.asarray(enc.bm)
-    sections = ex.encode_sections(
-        enc.res_u, enc.res_v, lossless_np, u[lossless_np], v[lossless_np],
-        bm_np)
-    blob = encode.pack(field_header(p, u.shape), sections, p.zstd_level)
+    with obs.span("pipeline.symbolize", codec=ex.codec):
+        sections = ex.encode_sections(
+            enc.res_u, enc.res_v, lossless_np, u[lossless_np],
+            v[lossless_np], bm_np)
+    with obs.span("pipeline.pack") as _ps:
+        blob = encode.pack(field_header(p, u.shape), sections,
+                           p.zstd_level)
+        _ps.set(bytes=len(blob))
     t1 = time.perf_counter()
     orig_bytes = u.nbytes + v.nbytes
     stats = {

@@ -71,6 +71,7 @@ import numpy as np
 
 from . import encode, tiling
 from . import faults as faults_mod
+from .. import obs
 
 
 class EngineStallError(RuntimeError):
@@ -125,7 +126,15 @@ class Scheduler:
         self.next_w = 0         # next window index to derive
         self.T = 0
         self.eof = False
-        self.n_emitted = 0      # units handed to emit, ever
+        # units handed to emit, ever -- a per-scheduler view over the
+        # process-wide "engine.units_emitted" obs counter (kept as a
+        # public field because checkpoints snapshot it)
+        self._c_emitted = obs.child_counter("engine.units_emitted")
+        self._c_windows = obs.child_counter("engine.windows_emitted")
+
+    @property
+    def n_emitted(self) -> int:
+        return self._c_emitted.value
 
     def add_frame(self, u_t, v_t, ufp_t=None, vfp_t=None):
         tiling._add_frame(self.st, self.T, u_t, v_t, ufp_t, vfp_t)
@@ -146,7 +155,10 @@ class Scheduler:
         self.frontier = int(ckpt["frontier"])
         self.next_w = int(ckpt["next_w"])
         self.T = int(ckpt["resume_from"])
-        self.n_emitted = int(ckpt["n_units"])
+        # restored units were emitted by the CRASHED run: reset only
+        # this scheduler's view so n_emitted matches the checkpoint
+        # without double-counting them in the process-wide counter
+        self._c_emitted.set_local(int(ckpt["n_units"]))
 
     def _derive_ready(self):
         """Derive every window whose extension is fully buffered."""
@@ -188,7 +200,8 @@ class Scheduler:
         for w in fix[:emit_hi]:
             for p in tiling._unit_payloads(st, w):
                 self.emit(p)
-                self.n_emitted += 1
+                self._c_emitted.add(1)
+            self._c_windows.add(1)
             self.pending.remove(w)
             self.frontier = w.t1
             emitted = True
@@ -327,7 +340,7 @@ class _Session:
         exists now; start the journal with the run fingerprint."""
         self.st = st
         self.file.flush()
-        os.fsync(self.file.fileno())
+        encode.fsync_timed(self.file.fileno())
         self.journal = encode.JournalWriter(self.journal_path)
         self.journal.append({
             "t": "begin",
@@ -379,6 +392,11 @@ class _Session:
                 count=H * W).astype(bool).reshape(H, W)
         self.st = st
         self.resumed = True
+        obs.counter("journal.resumes").add(1)
+        obs.instant_event("journal.resume",
+                          resume_from=int(ck["resume_from"]),
+                          n_units=int(ck["n_units"]),
+                          bytes=int(ck["bytes"]))
         # rewrite the journal without the (now truncated-away) tail so
         # a crash DURING this resumed run restores consistently; the
         # tmp+rename keeps the swap atomic
@@ -418,20 +436,27 @@ class _Session:
         reader requires every claimed unit record to precede its ckpt),
         and the sync=True on the ckpt append flushes + fsyncs the whole
         batch once."""
-        snap["bytes"] = int(self.st.writer.bytes_written)
-        self.file.flush()
-        os.fsync(self.file.fileno())
-        for rec in self._pending_recs:
-            self.journal.append(rec)
-        self._pending_recs.clear()
-        self.journal.append(snap, sync=True)
+        t0 = time.perf_counter_ns()
+        with obs.span("journal.checkpoint", units=len(self._pending_recs),
+                      frontier=int(snap.get("frontier", -1))):
+            snap["bytes"] = int(self.st.writer.bytes_written)
+            self.file.flush()
+            encode.fsync_timed(self.file.fileno())
+            for rec in self._pending_recs:
+                self.journal.append(rec)
+            self._pending_recs.clear()
+            self.journal.append(snap, sync=True)
+        obs.counter("journal.checkpoints").add(1)
+        if obs.enabled():
+            obs.histogram("journal.checkpoint_ns").observe(
+                time.perf_counter_ns() - t0)
 
     # -- teardown -------------------------------------------------------------
     def complete(self):
         """Successful finish: make the container durable, drop the
         journal (it would otherwise shadow the finished footer)."""
         self.file.flush()
-        os.fsync(self.file.fileno())
+        encode.fsync_timed(self.file.fileno())
         self.file.close()
         self.file = None
         if self.journal is not None:
@@ -607,18 +632,23 @@ class _AsyncEngine:
     # ---- ingest stage ---------------------------------------------------
 
     def _ingest(self, pairs):
+        obs.name_thread("engine.ingest")
         try:
-            for uf, vf in pairs:
-                self.faults.check("stream.ingest")
-                uf = np.asarray(uf, np.float32)
-                vf = np.asarray(vf, np.float32)
-                scale = self.scale
-                ufp = vfp = None
-                if scale is not None:
-                    # deterministic: bit-equal wherever it is computed
-                    ufp = np.round(uf.astype(np.float64) * scale)
-                    vfp = np.round(vf.astype(np.float64) * scale)
-                if not self._put(self.q_in, (uf, vf, ufp, vfp)):
+            for t, (uf, vf) in enumerate(pairs):
+                with obs.span("engine.ingest", t=t):
+                    self.faults.check("stream.ingest")
+                    uf = np.asarray(uf, np.float32)
+                    vf = np.asarray(vf, np.float32)
+                    scale = self.scale
+                    ufp = vfp = None
+                    if scale is not None:
+                        # deterministic: bit-equal wherever it is
+                        # computed
+                        ufp = np.round(uf.astype(np.float64) * scale)
+                        vfp = np.round(vf.astype(np.float64) * scale)
+                ok = self._put(self.q_in, (uf, vf, ufp, vfp))
+                obs.count("engine.frames_ingested", 1)
+                if not ok:
                     return
         except BaseException as e:  # propagate to the compute thread
             self._fail(e)
@@ -638,9 +668,13 @@ class _AsyncEngine:
     # ---- writer stage ---------------------------------------------------
 
     def _writer(self):
+        obs.name_thread("engine.writer")
         try:
             while True:
                 p = self.q_out.get()
+                if obs.enabled():
+                    obs.counter_event("engine.q_out",
+                                      depth=self.q_out.qsize())
                 if p is _EOF:
                     return
                 if isinstance(p, tuple) and p[0] == "ckpt":
@@ -648,11 +682,13 @@ class _AsyncEngine:
                     # has been written, so the byte count is durable
                     self.session.checkpoint(p[1])
                     continue
-                self.faults.check("stream.write")
-                if self.session is not None:
-                    self.session.write_unit(p)
-                else:
-                    tiling._write_unit(self.st, p)
+                with obs.span("engine.write", key=list(p.key)):
+                    self.faults.check("stream.write")
+                    if self.session is not None:
+                        self.session.write_unit(p)
+                    else:
+                        tiling._write_unit(self.st, p)
+                obs.count("engine.units_written", 1)
         except BaseException as e:
             self._fail(e)
             # keep draining so a blocked compute-thread put always
@@ -676,10 +712,18 @@ class _AsyncEngine:
         item is dropped -- the run is already failing).  With a
         stage_timeout, a consumer that stops consuming converts the
         wait into EngineStallError instead of an unbounded block."""
+        qname = "q_in" if q is self.q_in else "q_out"
         waited = 0.0
         while True:
             try:
                 q.put(item, timeout=0.1)
+                if waited:
+                    # back-pressure stall: this stage sat on a full
+                    # queue before the consumer made room
+                    obs.count(f"engine.{qname}.stall_ms",
+                              int(waited * 1000))
+                if obs.enabled():
+                    obs.counter_event(f"engine.{qname}", depth=q.qsize())
                 return True
             except queue.Full:
                 waited += 0.1
@@ -689,6 +733,9 @@ class _AsyncEngine:
                     return False
                 if (self.stage_timeout is not None
                         and waited >= self.stage_timeout):
+                    obs.count("engine.watchdog.fired", 1)
+                    obs.instant_event("engine.watchdog", queue=qname,
+                                      waited_s=round(waited, 1))
                     raise EngineStallError(
                         f"stage consuming {q is self.q_in and 'frames' or 'units'} "
                         f"made no progress for {waited:.1f}s "
@@ -730,17 +777,27 @@ class _AsyncEngine:
         waited = 0.0
         while True:
             try:
-                return self.q_in.get(timeout=0.1)
+                item = self.q_in.get(timeout=0.1)
+                if waited:
+                    obs.count("engine.compute.stall_ms",
+                              int(waited * 1000))
+                return item
             except queue.Empty:
                 waited += 0.1
                 self._check_failed()
                 if (self.stage_timeout is not None
                         and waited >= self.stage_timeout):
+                    obs.count("engine.watchdog.fired", 1)
+                    obs.instant_event("engine.watchdog", queue="q_in",
+                                      waited_s=round(waited, 1))
                     raise EngineStallError(
                         f"ingest produced no frame for {waited:.1f}s "
                         f"(stalled source?)")
 
     def run(self, pairs, t_start):
+        obs.name_thread("engine.compute")
+        if self.stage_timeout is not None:
+            obs.count("engine.watchdog.armed", 1)
         ingest = threading.Thread(target=self._ingest, args=(pairs,),
                                   name="repro-stream-ingest", daemon=True)
         writer = threading.Thread(target=self._writer,
@@ -764,6 +821,8 @@ class _AsyncEngine:
                 if item is _EOF:
                     break
                 uf, vf, ufp, vfp = item
+                _csp = obs.span("engine.compute",
+                                t=sched.T if sched is not None else 0)
                 self.faults.check("stream.compute")
                 if sched is None:
                     H, W = uf.shape
@@ -781,7 +840,9 @@ class _AsyncEngine:
                         self.st, self.cfg, self.grid, emit=self._emit,
                         checkpoint=None if session is None
                         else self._checkpoint)
-                sched.add_frame(uf, vf, ufp, vfp)
+                with _csp:
+                    sched.add_frame(uf, vf, ufp, vfp)
+                obs.count("engine.frames_computed", 1)
             self._check_failed()
             if sched is None or sched.T < 2:
                 raise ValueError("need at least 2 frames")
@@ -831,7 +892,11 @@ def resume_info(path) -> dict:
     bench; read-only."""
     path = os.fspath(path)
     out = {"path": path, "complete": False, "resumable": False,
-           "resume_from": 0, "n_units": 0, "bytes": 0}
+           "resume_from": 0, "n_units": 0, "bytes": 0,
+           # per-site transient-retry accounting (faults.retry_stats):
+           # a run that survived on retries is distinguishable here
+           # from one that never saw an I/O hiccup
+           "retries": faults_mod.retry_stats()}
     try:
         size = os.path.getsize(path)
         with open(path, "rb") as f:

@@ -68,6 +68,7 @@ import numpy as np
 from . import backend as backend_mod
 from . import compressor, ebound, encode, fixedpoint, pipeline, sos
 from . import grid as mesh
+from .. import obs
 
 # v4: prologue frame + per-frame "CPUN"/"CPPR" preambles (walkable body,
 # salvageable without a footer) + per-unit CRC in the directory.
@@ -378,16 +379,20 @@ def _derive_window(st: _State, w):
     groups = {}
     for spec in w.specs:
         groups.setdefault(spec.ext_shape, []).append(spec)
-    for specs in groups.values():
-        us = np.stack([st.ufp.box(s.ext_box) for s in specs])
-        vs = np.stack([st.vfp.box(s.ext_box) for s in specs])
-        ebs, slice_c, slab_c = run(us, vs)
-        ebs = np.asarray(ebs)
-        slice_c = np.asarray(slice_c)
-        slab_c = np.asarray(slab_c)
-        for k, spec in enumerate(specs):
-            st.eb.min_box(spec.ext_box, ebs[k])
-            st.preds[spec.key] = (slice_c[k], slab_c[k])
+    with obs.span("tiling.derive_window", window=int(w.wi),
+                  units=len(w.specs)):
+        for specs in groups.values():
+            us = np.stack([st.ufp.box(s.ext_box) for s in specs])
+            vs = np.stack([st.vfp.box(s.ext_box) for s in specs])
+            ebs, slice_c, slab_c = run(us, vs)
+            # np.asarray of the device results is the host fetch -- the
+            # stage's device-sync point
+            ebs = np.asarray(ebs)
+            slice_c = np.asarray(slice_c)
+            slab_c = np.asarray(slab_c)
+            for k, spec in enumerate(specs):
+                st.eb.min_box(spec.ext_box, ebs[k])
+                st.preds[spec.key] = (slice_c[k], slab_c[k])
     w.derived = True
 
 
@@ -538,6 +543,7 @@ def _round_work(st: _State, work):
     for items in groups.values():
         for lo in range(0, len(items), _BATCH_CAP):
             chunk = items[lo:lo + _BATCH_CAP]
+            obs.observe("pipeline.batch_group_size", len(chunk))
             if len(chunk) == 1:
                 # a 1-unit batch would just compile a second executable
                 # set for the same work; the per-unit path is bit-equal
@@ -580,7 +586,10 @@ def _fixpoint(st: _State, windows, frontier: int = 0):
     while work:
         additions = {}
         n_bad = 0
-        for spec, forced_ext, nb in _round_work(st, work):
+        with obs.span("tiling.verify_round", round=rounds,
+                      units=len(work)):
+            round_out = _round_work(st, work)
+        for spec, forced_ext, nb in round_out:
             n_bad += nb
             new = forced_ext & ~st.forced.box(spec.ext_box)
             if new.any():
@@ -613,6 +622,7 @@ def _fixpoint(st: _State, windows, frontier: int = 0):
             ])
             if delta.any():
                 work.append((spec, delta))
+    obs.count("tiling.verify_rounds", rounds)
     for spec in specs:
         st.seen[spec.key] = st.forced.box(spec.ext_box)
     for w in windows:
@@ -841,6 +851,15 @@ class _UnitPayload:
 
 
 def _unit_payloads(st: _State, w):
+    """Span-wrapped entry for :func:`_unit_payloads_impl` (the device
+    half of window emission; the async engine times this stage per
+    window through the same span)."""
+    with obs.span("tiling.unit_payloads", window=int(w.wi),
+                  units=len(w.specs)):
+        return _unit_payloads_impl(st, w)
+
+
+def _unit_payloads_impl(st: _State, w):
     """Device/plane-reading half of window emission.
 
     Runs the final-mask encode (batched by signature when the plan
@@ -905,13 +924,16 @@ def _attach_entropy_fragments(st: _State, payloads):
     groups = {}
     for i, p in enumerate(payloads):
         groups.setdefault(tuple(p.res_u.shape), []).append(i)
-    for idxs in groups.values():
-        frags = st.ex.entropy_fragments(
-            stack([payloads[i].res_u for i in idxs]),
-            stack([payloads[i].res_v for i in idxs]))
-        for i, frag in zip(idxs, frags):
-            payloads[i].frag = frag
-            payloads[i].res_u = payloads[i].res_v = None
+    with obs.span("tiling.entropy_fragments", units=len(payloads),
+                  groups=len(groups)):
+        for idxs in groups.values():
+            obs.observe("pipeline.batch_group_size", len(idxs))
+            frags = st.ex.entropy_fragments(
+                stack([payloads[i].res_u for i in idxs]),
+                stack([payloads[i].res_v for i in idxs]))
+            for i, frag in zip(idxs, frags):
+                payloads[i].frag = frag
+                payloads[i].res_u = payloads[i].res_v = None
 
 
 def _write_unit(st: _State, p: _UnitPayload):
@@ -931,6 +953,7 @@ def _write_unit(st: _State, p: _UnitPayload):
     if p.seg is not None:
         st.tindex.add_unit(p.key, *p.seg)
     bm = np.asarray(p.bm)
+    obs.count("tiling.units_written", 1)
     st.n_units += 1
     st.n_ll += int(p.ll.sum())
     st.n_verts += p.ll.size
@@ -939,8 +962,11 @@ def _write_unit(st: _State, p: _UnitPayload):
 
 
 def _emit_window(st: _State, w):
-    for p in _unit_payloads(st, w):
-        _write_unit(st, p)
+    payloads = _unit_payloads(st, w)
+    with obs.span("tiling.write_units", window=int(w.wi),
+                  units=len(payloads)):
+        for p in payloads:
+            _write_unit(st, p)
 
 
 def _finish_header(st: _State, T: int):
@@ -1056,12 +1082,16 @@ def compress_tiled(u, v, cfg=None, grid: Optional[TileGrid] = None,
     grid = grid or getattr(cfg, "tiling", None) or TileGrid()
     grid.validate()
     t_start = time.perf_counter()
-    st, windows, T = _prepare(u, v, cfg, grid, sink)
-    if cfg.verify:
-        _fixpoint(st, windows, frontier=0)
-    for w in windows:
-        _emit_window(st, w)
-    blob = st.writer.finish(_finish_header(st, T))
+    with obs.span("tiling.compress_tiled", codec=None) as _sp:
+        st, windows, T = _prepare(u, v, cfg, grid, sink)
+        _sp.set(codec=st.ex.codec, n_windows=len(windows),
+                shape=[int(T), int(st.H), int(st.W)])
+        if cfg.verify:
+            with obs.span("tiling.fixpoint", n_windows=len(windows)):
+                _fixpoint(st, windows, frontier=0)
+        for w in windows:
+            _emit_window(st, w)
+        blob = st.writer.finish(_finish_header(st, T))
     return blob, _stats(st, T, blob, t_start)
 
 
@@ -1176,11 +1206,17 @@ class DecodeReport:
     ``missing_units`` lists one dict per unit that failed its checksum
     or could not be read ({"key", "box", "error"}); the corresponding
     output voxels are holes (left at 0).  A report with no missing
-    units is a complete decode."""
+    units is a complete decode.
+
+    ``retries`` is the per-site :func:`faults.retry_stats` snapshot
+    taken when the decode finished -- a decode that only succeeded
+    because the source retried transient read errors is visible here
+    instead of looking identical to a clean one."""
 
     n_units: int = 0                 # units the region plan touched
     n_decoded: int = 0
     missing_units: list = dataclasses.field(default_factory=list)
+    retries: dict = dataclasses.field(default_factory=dict)
 
     @property
     def complete(self) -> bool:
@@ -1281,6 +1317,9 @@ def decompress_tiled(src, region=None, backend=None, degraded=False):
                 {"key": tuple(e["key"]), "box": tuple(e["box"]),
                  "error": str(err)} for e, err in failures]
     if degraded:
+        from . import faults as faults_mod
+
+        report.retries = faults_mod.retry_stats()
         return u_out, v_out, report
     return u_out, v_out
 

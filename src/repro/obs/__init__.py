@@ -1,0 +1,150 @@
+"""repro.obs -- unified tracing, metrics & rate accounting (DESIGN.md #14).
+
+Two layers with different gating:
+
+* **Carrier metrics** (``obs.counter/gauge/histogram/child_counter``)
+  are always live: they are the storage behind pre-existing public
+  counters (``ContainerSource.reads``, ``Scheduler.n_emitted``,
+  ``UnitCache`` stats, ``faults.retry_stats``), whose values existing
+  tests pin with or without observability on.  One
+  ``obs.snapshot()`` exports everything.
+* **Ambient instrumentation** (``obs.span``, ``obs.count``,
+  ``obs.observe``, ``obs.gauge_set``, trace counter/instant events,
+  ``obs.device_sync``) is gated on ``REPRO_OBS`` (or
+  ``obs.enable()``): disabled, ``span`` returns one shared no-op
+  singleton and the record helpers fall through a single boolean test
+  -- the hot paths stay within the bench-gated <= 2% envelope.
+
+Tracing exports Chrome trace events (``obs.export_trace(path)``,
+loadable in Perfetto); ``obs.run_report(container)`` breaks a finished
+archive into bytes per section kind and achieved-vs-Shannon bits per
+unit.  Instrumentation is strictly observational: container bytes are
+identical with observability on and off (CI gates this).
+"""
+from __future__ import annotations
+
+import os as _os
+
+from . import metrics as _metrics
+from . import trace as _trace
+from .metrics import REGISTRY
+
+__all__ = [
+    "enabled", "enable", "disable",
+    "counter", "gauge", "histogram", "child_counter",
+    "count", "gauge_set", "observe",
+    "span", "counter_event", "instant_event", "name_thread",
+    "device_sync", "snapshot", "export_trace", "trace_events",
+    "reset", "run_report", "REGISTRY",
+]
+
+_enabled = _os.environ.get("REPRO_OBS", "0").strip() not in ("", "0")
+
+
+def enabled() -> bool:
+    return _enabled
+
+
+def enable():
+    global _enabled
+    _enabled = True
+
+
+def disable():
+    global _enabled
+    _enabled = False
+
+
+# -- carrier metrics (always live) -------------------------------------
+
+def counter(name: str) -> _metrics.Counter:
+    return REGISTRY.counter(name)
+
+
+def gauge(name: str) -> _metrics.Gauge:
+    return REGISTRY.gauge(name)
+
+
+def histogram(name: str) -> _metrics.Histogram:
+    return REGISTRY.histogram(name)
+
+
+def child_counter(name: str) -> _metrics.Counter:
+    return REGISTRY.child_counter(name)
+
+
+def snapshot() -> dict:
+    return REGISTRY.snapshot()
+
+
+# -- ambient instrumentation (REPRO_OBS-gated) -------------------------
+
+def count(name: str, n: int = 1):
+    if _enabled:
+        REGISTRY.counter(name).add(n)
+
+
+def gauge_set(name: str, v):
+    if _enabled:
+        REGISTRY.gauge(name).set(v)
+
+
+def observe(name: str, v):
+    if _enabled:
+        REGISTRY.histogram(name).observe(v)
+
+
+def span(name: str, **args):
+    if not _enabled:
+        return _trace.NOOP
+    return _trace.Span(name, args)
+
+
+def counter_event(name: str, **values):
+    if _enabled:
+        _trace.counter_event(name, **values)
+
+
+def instant_event(name: str, **values):
+    if _enabled:
+        _trace.instant_event(name, **values)
+
+
+def name_thread(label: str):
+    if _enabled:
+        _trace.name_thread(label)
+
+
+def device_sync(x):
+    """Block until device work backing ``x`` is done -- ONLY when
+    tracing is on, so span boundaries measure the device time of their
+    own stage instead of billing async dispatch to whoever syncs next.
+    Value-neutral: returns ``x`` unchanged either way."""
+    if _enabled and x is not None:
+        import jax
+
+        try:
+            jax.block_until_ready(x)
+        except Exception:
+            pass  # host arrays / tracers: nothing to sync
+    return x
+
+
+def export_trace(path: str) -> int:
+    return _trace.export(path)
+
+
+def trace_events() -> list:
+    return _trace.events()
+
+
+def reset():
+    """Clear metrics and the trace buffer (tests, bench arms)."""
+    REGISTRY.reset()
+    _trace.reset()
+
+
+def run_report(container: bytes) -> dict:
+    from .report import run_report as _rr
+
+    return _rr(container)

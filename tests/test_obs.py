@@ -1,0 +1,318 @@
+"""repro.obs: metrics registry, span tracing, disabled-path no-ops,
+trace JSON schema, and engine/threading integration (DESIGN.md #14)."""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import metrics, trace
+from repro.core import CompressionConfig, TileGrid, compress_tiled
+from repro.core.tiling import compress_stream
+
+CFG = dict(eb=1e-2, mode="rel", predictor="mop", backend="xla",
+           verify=True, fused=True, track_index=False)
+GRID = TileGrid(tile_h=8, tile_w=12, window_t=3)
+
+
+@pytest.fixture
+def obs_state():
+    """Restore the enabled flag and clear the trace buffer afterwards
+    so tests compose regardless of the REPRO_OBS env the suite runs
+    under.  The metrics registry is NOT reset: carrier metrics are
+    process-wide by design, so tests assert on deltas or unique
+    names."""
+    was = obs.enabled()
+    yield
+    (obs.enable if was else obs.disable)()
+    trace.reset()
+
+
+# ----------------------------------------------------------------------
+# metrics registry
+# ----------------------------------------------------------------------
+
+def test_histogram_log2_bucket_edges():
+    h = metrics.Histogram("t")
+    h.observe(0)                     # exact zero -> bucket 0
+    h.observe(1)                     # [1, 2)     -> bucket 1
+    h.observe(2)                     # [2, 4)     -> bucket 2
+    h.observe(3)
+    h.observe(4)                     # [4, 8)     -> bucket 3
+    h.observe(7)
+    h.observe(-5)                    # clamped to 0 -> bucket 0
+    h.observe(2**62)                 # top bucket absorbs the tail
+    h.observe(2**63 + 1)
+    snap = h.snapshot()
+    assert snap["buckets"] == {0: 2, 1: 1, 2: 2, 3: 2, 63: 2}
+    assert snap["count"] == 9
+    assert snap["min"] == 0
+    assert snap["max"] == 2**63 + 1
+    # exact power-of-two edges: 2^k lands in bucket k+1 (lower edge
+    # of [2^k, 2^(k+1)))
+    for k in range(1, 20):
+        hh = metrics.Histogram("e")
+        hh.observe(2**k)
+        hh.observe(2**k - 1)
+        b = hh.snapshot()["buckets"]
+        assert b == {k + 1: 1, k: 1}, f"2^{k} bucketed wrong: {b}"
+
+
+def test_registry_kind_mismatch_raises():
+    r = metrics.Registry()
+    r.counter("x")
+    with pytest.raises(TypeError):
+        r.gauge("x")
+
+
+def test_child_counter_rollup_and_set_local():
+    parent = obs.counter("test.obs.rollup")
+    base = parent.value
+    a = obs.child_counter("test.obs.rollup")
+    b = obs.child_counter("test.obs.rollup")
+    a.add(3)
+    b.add(4)
+    assert (a.value, b.value) == (3, 4)
+    assert parent.value == base + 7
+    # restore/clear path: local view resets, process total survives
+    a.set_local(0)
+    assert a.value == 0
+    assert parent.value == base + 7
+    a.add(2)
+    assert parent.value == base + 9
+
+
+def test_snapshot_exact_under_concurrent_writers():
+    n_threads, n_adds = 8, 2_000
+    c = obs.counter("test.obs.concurrent")
+    h = obs.histogram("test.obs.concurrent_h")
+    base = c.value
+    stop = threading.Event()
+    snaps = []
+
+    def writer():
+        child = obs.child_counter("test.obs.concurrent")
+        for i in range(n_adds):
+            child.add(1)
+            h.observe(i)
+
+    def snapshotter():
+        while not stop.is_set():
+            snaps.append(obs.snapshot())
+
+    ts = [threading.Thread(target=writer) for _ in range(n_threads)]
+    sn = threading.Thread(target=snapshotter)
+    sn.start()
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    stop.set()
+    sn.join()
+    # concurrent snapshots observed monotone, never-corrupt values
+    seen = [s["test.obs.concurrent"]["value"] for s in snaps
+            if "test.obs.concurrent" in s]
+    assert all(x <= y for x, y in zip(seen, seen[1:]))
+    final = obs.snapshot()
+    assert final["test.obs.concurrent"]["value"] == \
+        base + n_threads * n_adds
+    hs = final["test.obs.concurrent_h"]
+    assert hs["count"] >= n_threads * n_adds
+    assert sum(hs["buckets"].values()) == hs["count"]
+
+
+# ----------------------------------------------------------------------
+# disabled path
+# ----------------------------------------------------------------------
+
+def test_disabled_mode_is_noop(obs_state):
+    obs.disable()
+    trace.reset()
+    s1 = obs.span("a", x=1)
+    s2 = obs.span("b")
+    assert s1 is s2 is trace.NOOP          # one shared singleton
+    with s1 as sp:
+        assert sp.set(y=2) is sp
+    assert sp.dur_ns == 0 and sp.dur_s == 0.0
+    obs.count("test.obs.gated_counter_never", 5)
+    obs.observe("test.obs.gated_hist_never", 5)
+    obs.gauge_set("test.obs.gated_gauge_never", 5)
+    obs.counter_event("qq", depth=1)
+    obs.instant_event("ii")
+    obs.name_thread("tt")
+    assert obs.trace_events() == []
+    snap = obs.snapshot()
+    for name in ("test.obs.gated_counter_never",
+                 "test.obs.gated_hist_never",
+                 "test.obs.gated_gauge_never"):
+        assert name not in snap            # gated helpers never registered
+    # device_sync is value-neutral in both modes
+    x = np.arange(3)
+    assert obs.device_sync(x) is x
+    obs.enable()
+    assert obs.device_sync(x) is x
+
+
+# ----------------------------------------------------------------------
+# span tracing
+# ----------------------------------------------------------------------
+
+def test_span_nesting_and_attributes(obs_state):
+    obs.enable()
+    trace.reset()
+    with obs.span("outer", a=1) as so:
+        assert trace.current_span() is so
+        with obs.span("inner") as si:
+            assert trace.current_span() is si
+            si.set(found=7)
+        assert trace.current_span() is so
+    assert trace.current_span() is None
+    evs = {e["name"]: e for e in obs.trace_events()}
+    outer, inner = evs["outer"], evs["inner"]
+    assert outer["args"] == {"a": 1}
+    assert inner["args"] == {"found": 7}
+    # containment: inner starts no earlier and ends no later
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-3
+    assert "stack_corrupt" not in outer["args"]
+
+    with pytest.raises(RuntimeError):
+        with obs.span("failing"):
+            raise RuntimeError("boom")
+    fail = [e for e in obs.trace_events() if e["name"] == "failing"][0]
+    assert fail["args"]["error"] == "RuntimeError"
+
+
+def test_trace_json_schema_golden(obs_state, tmp_path):
+    obs.enable()
+    trace.reset()
+    obs.name_thread("golden-thread")
+    with obs.span("golden.work", unit=3):
+        obs.counter_event("golden.queue", depth=2, backlog=0)
+        obs.instant_event("golden.marker", why="test")
+    path = tmp_path / "trace.json"
+    n = obs.export_trace(str(path))
+    assert n == 4
+    payload = json.loads(path.read_text())
+    assert set(payload) == {"traceEvents", "displayTimeUnit"}
+    assert payload["displayTimeUnit"] == "ms"
+    evs = payload["traceEvents"]
+    assert [e["ph"] for e in sorted(evs, key=lambda e: e["ph"])] == \
+        ["C", "M", "X", "i"]
+    by_ph = {e["ph"]: e for e in evs}
+    x = by_ph["X"]
+    assert x["name"] == "golden.work" and x["args"] == {"unit": 3}
+    assert isinstance(x["ts"], float) and isinstance(x["dur"], float)
+    assert x["dur"] >= 0 and x["pid"] > 0 and x["tid"] > 0
+    c = by_ph["C"]
+    assert c["name"] == "golden.queue"
+    assert c["args"] == {"depth": 2, "backlog": 0}
+    i = by_ph["i"]
+    assert i["s"] == "t" and i["args"] == {"why": "test"}
+    m = by_ph["M"]
+    assert m["name"] == "thread_name"
+    assert m["args"] == {"name": "golden-thread"}
+    # ts-sorted on export (metadata events carry no ts and sort first)
+    tss = [e.get("ts", 0.0) for e in evs]
+    assert tss == sorted(tss)
+
+
+# ----------------------------------------------------------------------
+# engine integration: spans + metrics under the threaded async engine
+# ----------------------------------------------------------------------
+
+def test_async_engine_spans_and_metrics(small_field, obs_state):
+    u, v = small_field
+    cfg = CompressionConfig(**CFG)
+    vr = (float(min(u.min(), v.min())), float(max(u.max(), v.max())))
+    obs.enable()
+    trace.reset()
+    units0 = obs.counter("engine.units_emitted").value
+    blob, stats = compress_stream(
+        list(zip(u, v)), cfg, GRID, value_range=vr, async_engine=True)
+    evs = obs.trace_events()
+    by_name = {}
+    for e in evs:
+        by_name.setdefault(e["name"], []).append(e)
+
+    # all three engine stages produced spans, on distinct threads
+    for stage in ("engine.ingest", "engine.compute", "engine.write"):
+        assert by_name.get(stage), f"no {stage} spans"
+    tids = {s: {e["tid"] for e in by_name[s]}
+            for s in ("engine.ingest", "engine.compute", "engine.write")}
+    assert tids["engine.ingest"].isdisjoint(tids["engine.compute"])
+    assert tids["engine.write"].isdisjoint(tids["engine.compute"])
+
+    # attribute integrity under threading: every span exited cleanly on
+    # its own thread's stack
+    for e in evs:
+        if e["ph"] == "X":
+            assert "stack_corrupt" not in e["args"], e
+    assert len(by_name["engine.ingest"]) == u.shape[0]
+    assert len(by_name["engine.write"]) == stats["n_units"]
+
+    # queue-depth counter events for both handoff queues
+    assert by_name.get("engine.q_in")
+    assert by_name.get("engine.q_out")
+    assert all(e["args"]["depth"] >= 0 for e in by_name["engine.q_in"])
+
+    # thread self-labelling metadata
+    labels = {e["args"]["name"] for e in evs if e["ph"] == "M"}
+    assert {"engine.ingest", "engine.writer",
+            "engine.compute"} <= labels
+
+    # tiling-level spans rode along on the compute thread
+    assert by_name.get("tiling.derive_window")
+    assert by_name.get("tiling.unit_payloads")
+
+    # carrier metrics: the scheduler's public field and the process
+    # counter agree
+    assert obs.counter("engine.units_emitted").value - units0 \
+        == stats["n_units"]
+    snap = obs.snapshot()
+    assert snap["engine.windows_emitted"]["value"] >= 1
+
+    # and the engine's scheduling left the bytes alone
+    blob_t, _ = compress_tiled(u, v, cfg, GRID)
+    assert blob == blob_t
+
+
+def test_byte_identity_and_run_report(small_field, obs_state):
+    u, v = small_field
+    cfg = CompressionConfig(**CFG)
+    obs.disable()
+    blob_off, _ = compress_tiled(u, v, cfg, GRID)
+    obs.enable()
+    blob_on, _ = compress_tiled(u, v, cfg, GRID)
+    assert blob_off == blob_on, \
+        "observability changed the container bytes"
+    rep = obs.run_report(blob_on)
+    assert rep["container_bytes"] == len(blob_on)
+    assert rep["kind_bytes_total"] == len(blob_on)
+    assert sum(rep["bytes_by_kind"].values()) == len(blob_on)
+    assert rep["n_units"] == len(rep["units"])
+    assert all(r["n_symbols"] > 0 for r in rep["units"])
+
+
+def test_retry_accounting_visible_on_success():
+    from repro.core import faults
+
+    site = "test.obs.retry_site"
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return "ok"
+
+    before = obs.counter(f"faults.retry.{site}.attempts").value
+    assert faults.retry_transient(flaky, retries=3, backoff=0,
+                                  site=site) == "ok"
+    st = faults.retry_stats(site)
+    assert st["calls"] >= 1
+    assert st["retries"] >= 2
+    assert st["last_outcome"] == "ok"
+    assert obs.counter(f"faults.retry.{site}.attempts").value \
+        == before + 3
