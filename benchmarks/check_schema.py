@@ -151,6 +151,33 @@ def check(payload: dict) -> list:
          "the accounting is decoding the wrong streams")
     checked.append("rate_accounting")
 
+    tune = payload.get("autotune")
+    need(isinstance(tune, dict) and isinstance(tune.get("shapes"), list)
+         and tune["shapes"], "autotune section missing or empty")
+    need(tune.get("calibrated") is True and tune.get("n_coeffs", 0) > 0,
+         "autotune ran without a fitted calibration table")
+    for row in tune["shapes"]:
+        for k in ("scenario", "shape", "arms", "chosen_plan",
+                  "best_plan", "default_plan", "MBps_autotuned",
+                  "MBps_best", "MBps_default", "ratio_vs_best",
+                  "ratio_vs_default"):
+            need(k in row, f"autotune row missing {k}: {row}")
+        need(len(row["arms"]) >= 4,
+             f"autotune {row['scenario']} measured < 4 arms (no "
+             "exhaustive baseline to compare against)")
+        # the model's measure-verified top-3 may not miss the true
+        # exhaustive best by more than 10%, on ANY shape
+        need(row["ratio_vs_best"] >= 0.9,
+             f"autotune {row['scenario']} {row['shape']}: chosen plan "
+             f"{row['chosen_plan']} is {row['ratio_vs_best']}x the "
+             f"exhaustive best {row['best_plan']} (< 0.9)")
+    # tuning must actually beat the out-of-the-box plan somewhere
+    need(any(row["ratio_vs_default"] >= 1.1 for row in tune["shapes"]),
+         "autotune never beat the default plan by >= 1.1x on any "
+         "shape: " + str([(r["scenario"], r["ratio_vs_default"])
+                          for r in tune["shapes"]]))
+    checked.append("autotune")
+
     traj = payload.get("trajectory_analysis")
     need(isinstance(traj, dict) and traj.get("rows"),
          "trajectory_analysis section missing or empty")

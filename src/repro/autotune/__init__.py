@@ -1,0 +1,182 @@
+"""Cost-model-driven plan auto-tuning (DESIGN.md #15).
+
+Pick the fastest pipeline plan for an input, calibrated from measured
+obs spans:
+
+    blob, stats = repro.compress(u, v, cfg, autotune=True)
+    print(repro.autotune.explain())
+
+``tune_config`` enumerates the discrete plan space (search.py), ranks
+it with the analytic cost model (costmodel.py) seeded from roofline
+terms and calibrated against obs span measurements (calibrate.py), then
+measure-verifies the top-k candidates on the actual field before
+committing.  The chosen plan is returned as an ordinary
+CompressionConfig -- from there on the pipeline is exactly the one a
+user could have configured by hand, so autotuning can change speed but
+never the bytes a given chosen plan produces.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from .calibrate import (CalibrationTable, CalibrationTableError,
+                        calibrate, default_table_path, load_or_calibrate,
+                        load_table, save_table)
+from .costmodel import CostModel, Workload, device_kind
+from .search import PlanCandidate, apply, available_backends, \
+    enumerate_candidates, search
+
+__all__ = [
+    "CalibrationTable", "CalibrationTableError", "CostModel",
+    "PlanCandidate", "Workload", "apply", "available_backends",
+    "calibrate", "default_table_path", "device_kind",
+    "enumerate_candidates", "explain", "last_report", "load_or_calibrate",
+    "load_table", "save_table", "search", "tune_config", "tune_stream",
+]
+
+# measure-verify the top-k model picks on the real field when it is
+# small enough to rerun cheaply; above the cap trust the model ranking
+_MEASURE_ELEMS_CAP = 2_000_000
+_TOP_K = 3
+
+_LAST_REPORT: Optional[dict] = None
+
+
+def _measure_fn(u, v, cfg):
+    """measure(cand) -> seconds: one untimed warmup (compile) + one
+    timed run of the candidate on the actual field."""
+    from ..core import compressor, tiling
+
+    def measure(cand):
+        c = apply(cfg, cand)
+        def run():
+            if c.tiling is None:
+                return compressor.compress(u, v, c)
+            return tiling.compress_tiled(u, v, c, c.tiling)
+        run()  # warmup: jit compile off the clock (shared helper rule)
+        t0 = time.perf_counter()
+        run()
+        return time.perf_counter() - t0
+
+    return measure
+
+
+def _sample(u, v):
+    """A temporally-subsampled stand-in field for measure-verify when
+    the input is too large to rerun per candidate."""
+    T = u.shape[0]
+    step = max(T * u.shape[1] * u.shape[2] * 2 // _MEASURE_ELEMS_CAP, 1)
+    tt = max(T // step, 4)
+    return u[:tt], v[:tt]
+
+
+def _build_report(shape, stream, ranked, chosen, table, elapsed_s):
+    return {
+        "shape": tuple(int(s) for s in shape),
+        "stream": stream,
+        "device_kind": table.device_kind if table else device_kind(),
+        "calibrated": bool(table and table.coeffs),
+        "tune_time_s": elapsed_s,
+        "chosen": chosen.cand.describe(),
+        "plans": [
+            {
+                "plan": r.cand.describe(),
+                "chosen": r.cand == chosen.cand,
+                "predicted_s": r.predicted["total"],
+                "predicted_stages": dict(r.predicted["stages"]),
+                "measured_s": r.measured_s,
+            }
+            for r in ranked
+        ],
+    }
+
+
+def tune_config(u, v, cfg, table: Optional[CalibrationTable] = None,
+                measure: Optional[bool] = None, top_k: int = _TOP_K):
+    """Return a new CompressionConfig running the predicted-fastest plan
+    for field (u, v).  ``measure=None`` auto-decides: top-k candidates
+    are timed on the real field (or a temporal subsample when huge);
+    ``measure=False`` trusts the model ranking outright."""
+    global _LAST_REPORT
+    from ..core import compressor  # noqa: F401  (config type lives there)
+
+    t0 = time.perf_counter()
+    u = np.asarray(u)
+    v = np.asarray(v)
+    shape = u.shape
+    if table is None:
+        table = load_or_calibrate()
+    model = CostModel(coeffs=table.coeffs, kind=table.device_kind)
+    if measure is None or measure:
+        mu, mv = (u, v) if u.size * 2 <= _MEASURE_ELEMS_CAP \
+            else _sample(u, v)
+        measure_cb = _measure_fn(mu, mv, cfg)
+    else:
+        measure_cb, top_k = None, 0
+    ranked = search(shape, model=model, top_k=top_k, measure=measure_cb)
+    chosen = ranked[0]
+    _LAST_REPORT = _build_report(shape, False, ranked, chosen, table,
+                                 time.perf_counter() - t0)
+    return apply(cfg, chosen.cand)
+
+
+def tune_stream(shape, cfg, table: Optional[CalibrationTable] = None,
+                ingest_s_per_frame: float = 0.0):
+    """Model-only tuning for the streaming path (the stream cannot be
+    rerun per candidate, so no measure-verify).  ``shape`` is the
+    (T, H, W) the stream will deliver -- T may be an estimate.
+    ``ingest_s_per_frame`` is the producer's per-frame latency (a paced
+    solver); it is what makes the async engine worth its coordination
+    cost in the model.  Returns (new cfg, chosen PlanCandidate); the
+    cfg's grid is always set (streams are tiled by construction)."""
+    global _LAST_REPORT
+    t0 = time.perf_counter()
+    if table is None:
+        table = load_or_calibrate()
+    model = CostModel(coeffs=table.coeffs, kind=table.device_kind)
+    ranked = search(tuple(shape), model=model, stream=True,
+                    ingest_s=ingest_s_per_frame * shape[0])
+    chosen = ranked[0]
+    _LAST_REPORT = _build_report(tuple(shape), True, ranked, chosen,
+                                 table, time.perf_counter() - t0)
+    return apply(cfg, chosen.cand), chosen.cand
+
+
+def last_report() -> Optional[dict]:
+    """The raw report dict from the most recent tune (or None)."""
+    return _LAST_REPORT
+
+
+def explain(report: Optional[dict] = None, limit: int = 8) -> str:
+    """Human-readable predicted-vs-measured account of the last tune:
+    the chosen plan first, then the best rejected candidates."""
+    rep = report or _LAST_REPORT
+    if rep is None:
+        return "autotune: no tuning run recorded in this process"
+    lines = [
+        "autotune report: shape=%s %s device=%s (%s) tuned in %.3fs"
+        % ("x".join(str(s) for s in rep["shape"]),
+           "stream" if rep["stream"] else "in-memory",
+           rep["device_kind"],
+           "calibrated" if rep["calibrated"] else "seed coefficients",
+           rep["tune_time_s"]),
+        "%-28s %10s %10s  %s" % ("plan", "pred(s)", "meas(s)", ""),
+    ]
+    for p in rep["plans"][:limit]:
+        meas = "%.4f" % p["measured_s"] if p["measured_s"] is not None \
+            else "-"
+        mark = "<= chosen" if p["chosen"] else ""
+        lines.append("%-28s %10.4f %10s  %s"
+                     % (p["plan"], p["predicted_s"], meas, mark))
+        if p["chosen"]:
+            for stage, s in sorted(p["predicted_stages"].items(),
+                                   key=lambda kv: -kv[1]):
+                lines.append("    %-24s %10.4f" % (stage, s))
+    extra = len(rep["plans"]) - limit
+    if extra > 0:
+        lines.append("  ... %d more candidates pruned by the model"
+                     % extra)
+    return "\n".join(lines)

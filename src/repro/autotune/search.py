@@ -1,0 +1,208 @@
+"""Plan search: enumerate + cost-prune candidate pipeline plans.
+
+The discrete space is the cross product of
+
+    tile geometry (divisor/halving heuristics over H, W) x
+    window length x batch chunk (batch_cap) x backend x codec x
+    async on/off x queue bounds,
+
+plus the monolithic (untiled) candidate when the input is in memory.
+Every candidate is ranked by the analytic cost model (costmodel.py,
+optionally calibrated from obs spans); ``search`` can then
+measure-verify the top-k on the actual field so a mispriced model
+never silently picks a slow plan.  Ordering is deterministic: ties on
+predicted/measured cost break on the candidate's knob tuple, so a
+fixed calibration table always yields the same chosen plan.
+
+None of the searched knobs can change container bytes for a *chosen*
+plan: backend/codec/tiling select the plan itself (different plans =
+different containers, by design), while batch_cap / queue bounds /
+async are pure scheduling (see DESIGN.md #15 for the argument).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+from . import costmodel
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class PlanCandidate:
+    """One point of the search space.  ``grid`` is (tile_h, tile_w,
+    window_t) or None for the monolithic pipeline."""
+
+    grid: Optional[tuple] = None
+    backend: str = "xla"
+    codec: str = "host"
+    batch_units: bool = True
+    batch_cap: int = 8
+    async_engine: bool = False
+    q_in_frames: Optional[int] = None
+    q_out_units: Optional[int] = None
+
+    @property
+    def key(self):
+        """Deterministic tie-break / identity tuple."""
+        return (self.grid or (0, 0, 0), self.backend, self.codec,
+                self.batch_units, self.batch_cap, self.async_engine,
+                self.q_in_frames or 0, self.q_out_units or 0)
+
+    def describe(self) -> str:
+        g = "mono" if self.grid is None else \
+            f"{self.grid[0]}x{self.grid[1]}x{self.grid[2]}"
+        bits = [g, self.backend, self.codec,
+                f"cap{self.batch_cap}" if self.grid else "",
+                "async" if self.async_engine else ""]
+        return "/".join(b for b in bits if b)
+
+
+def available_backends() -> tuple:
+    """Backends worth searching on this host.  pallas only exists on
+    TPU (backend.resolve would demote it per-unit anyway, making it a
+    duplicate of xla on CPU)."""
+    if costmodel.device_kind() == "tpu":
+        return ("pallas", "xla", "numpy")
+    return ("xla", "numpy")
+
+
+def _axis_tiles(n: int) -> tuple:
+    """Candidate tile sizes along one spatial axis: the full extent
+    plus halvings down to 8, preferring exact divisors (no ragged last
+    tile -> fewer signature groups)."""
+    out = [n]
+    t = n
+    while t > 8:
+        t = max(t // 2, 8)
+        out.append(t)
+    # snap each halving to the nearest divisor within 25% if one exists
+    divs = [d for d in range(8, n + 1) if n % d == 0]
+    snapped = []
+    for t in out:
+        best = min(divs, key=lambda d: abs(d - t), default=t)
+        snapped.append(best if abs(best - t) <= max(t // 4, 1) else t)
+    # dedupe, keep order
+    seen, res = set(), []
+    for t in snapped:
+        if t not in seen:
+            seen.add(t)
+            res.append(t)
+    return tuple(res[:3])
+
+
+def _window_lengths(T: int) -> tuple:
+    out, w = [T], T
+    while w > 4:
+        w = max(w // 2, 4)
+        out.append(w)
+    seen, res = set(), []
+    for w in out:
+        if w not in seen:
+            seen.add(w)
+            res.append(w)
+    return tuple(res[:3])
+
+
+def enumerate_candidates(shape, stream: bool = False,
+                         backends: Optional[Sequence[str]] = None,
+                         codecs: Sequence[str] = ("host", "device"),
+                         batch_caps: Sequence[int] = (4, 8, 16)) -> list:
+    """The full (pre-pruning) candidate list for one field shape.
+
+    ``stream=True`` drops the monolithic candidate (a stream cannot be
+    monolithic) and adds async-engine / queue-bound variants.
+    """
+    T, H, W = shape
+    backends = tuple(backends or available_backends())
+    cands = []
+    if not stream:
+        for be in backends:
+            cands.append(PlanCandidate(grid=None, backend=be))
+    grids = [(th, tw, wt)
+             for th in _axis_tiles(H)
+             for tw in _axis_tiles(W)
+             for wt in _window_lengths(T)]
+    # a 1x1-tile "grid" covering everything in one window duplicates the
+    # monolithic plan's work at tiled overhead; keep it only for streams
+    if not stream:
+        grids = [g for g in grids
+                 if not (g[0] >= H and g[1] >= W and g[2] >= T)]
+    for g in grids:
+        nti = -(-H // g[0])
+        ntj = -(-W // g[1])
+        for be in backends:
+            for codec in codecs:
+                for cap in batch_caps:
+                    if cap > nti * ntj and cap != batch_caps[0]:
+                        continue  # caps beyond the unit count duplicate
+                    base = PlanCandidate(grid=g, backend=be, codec=codec,
+                                         batch_cap=cap)
+                    cands.append(base)
+                    if stream:
+                        tpw = nti * ntj
+                        cands.append(dataclasses.replace(
+                            base, async_engine=True,
+                            q_in_frames=max(g[2], 2),
+                            q_out_units=max(2 * tpw, 2)))
+                        cands.append(dataclasses.replace(
+                            base, async_engine=True,
+                            q_in_frames=2,
+                            q_out_units=max(tpw // 2, 2)))
+    # dedupe (divisor snapping can collide) with deterministic order
+    seen, out = set(), []
+    for c in cands:
+        if c.key not in seen:
+            seen.add(c.key)
+            out.append(c)
+    return out
+
+
+@dataclasses.dataclass
+class Ranked:
+    cand: PlanCandidate
+    predicted: dict                  # costmodel.predict output
+    measured_s: Optional[float] = None
+
+
+def search(shape, model: Optional[costmodel.CostModel] = None,
+           stream: bool = False, verify_rounds: float = 2.0,
+           backends: Optional[Sequence[str]] = None,
+           top_k: int = 0,
+           measure: Optional[Callable[[PlanCandidate], float]] = None,
+           candidates: Optional[Sequence[PlanCandidate]] = None,
+           ingest_s: float = 0.0) -> list:
+    """Rank the candidate space by predicted cost; optionally measure
+    the ``top_k`` cheapest with ``measure(cand) -> seconds`` and re-rank
+    those by measured time.  Returns [Ranked] sorted best-first --
+    measured candidates (if any) always sort ahead of unmeasured ones.
+    """
+    model = model or costmodel.CostModel()
+    T, H, W = shape
+    wl = costmodel.Workload(T=T, H=H, W=W, verify_rounds=verify_rounds,
+                            stream=stream, ingest_s=ingest_s)
+    cands = list(candidates) if candidates is not None else \
+        enumerate_candidates(shape, stream=stream, backends=backends)
+    ranked = [Ranked(c, model.predict(c, wl)) for c in cands]
+    ranked.sort(key=lambda r: (r.predicted["total"], r.cand.key))
+    if top_k and measure is not None:
+        head = ranked[:top_k]
+        for r in head:
+            r.measured_s = measure(r.cand)
+        head.sort(key=lambda r: (r.measured_s, r.cand.key))
+        ranked = head + ranked[top_k:]
+    return ranked
+
+
+def apply(cfg, cand: PlanCandidate):
+    """A new CompressionConfig realizing ``cand`` (cfg untouched)."""
+    from ..core import tiling
+
+    grid = None
+    if cand.grid is not None:
+        grid = tiling.TileGrid(tile_h=cand.grid[0], tile_w=cand.grid[1],
+                               window_t=cand.grid[2])
+    return dataclasses.replace(
+        cfg, backend=cand.backend, codec=cand.codec,
+        batch_units=cand.batch_units, batch_cap=cand.batch_cap,
+        q_in_frames=cand.q_in_frames, q_out_units=cand.q_out_units,
+        tiling=grid)

@@ -46,6 +46,8 @@ from . import backend as backend_mod
 from . import ebound, encode, fixedpoint, pipeline, predictors, quantize
 
 jax.config.update("jax_enable_x64", True)
+# opt-in persistent compilation cache (REPRO_JIT_CACHE; README)
+perfflags.apply_jit_cache()
 
 FORMAT_VERSION = pipeline.FORMAT_VERSION
 
@@ -78,6 +80,14 @@ class CompressionConfig:
                                       # CPU Huffman + zstd/zlib) |
                                       # 'device' (batched accelerator
                                       # entropy stage, core/entropy.py)
+    # execution-scheduling knobs (pipeline.PLAN_KNOBS): these change how
+    # fast a fixed plan runs, NEVER the container bytes it produces --
+    # repro.autotune searches over them alongside the plan knobs above
+    batch_cap: int = 8                # tiled: max units per stacked batch
+    q_in_frames: Optional[int] = None   # async engine ingest queue bound
+                                        # (None -> max(window_t, 2))
+    q_out_units: Optional[int] = None   # async engine handoff queue bound
+                                        # (None -> 2 * tiles per window)
 
 
 def _as_fields(u, v):
@@ -137,11 +147,21 @@ def _residuals(xu, xv, scale, xi_unit, cfg: CompressionConfig):
 # public API
 # ----------------------------------------------------------------------
 
-def compress(u, v, cfg: Optional[CompressionConfig] = None):
+def compress(u, v, cfg: Optional[CompressionConfig] = None,
+             autotune: bool = False):
     # default is constructed per call: a module-level default instance
     # would be shared (and mutable) across every caller
     if cfg is None:
         cfg = CompressionConfig()
+    if autotune:
+        # pick the fastest searched config for this input (calibrated
+        # cost model + top-k measurement, repro.autotune); the chosen
+        # config may set cfg.tiling, switch backend/codec etc. -- but
+        # for the plan it picks, the bytes are identical to a
+        # hand-configured run with that same plan
+        from .. import autotune as autotune_mod
+
+        cfg = autotune_mod.tune_config(u, v, cfg)
     if cfg.tiling is not None:
         from . import tiling
         return tiling.compress_tiled(u, v, cfg, cfg.tiling)

@@ -96,6 +96,40 @@ def _codec_bindings(base: tuple, codec: str) -> tuple:
                    else HOST_ENTROPY_BINDINGS)
 
 
+# Tunable plan/execution knobs: the single declarative source for every
+# configurable default that plan construction and the tiled/streaming
+# executors read.  ``plan_from_cfg`` and the execution paths resolve
+# each knob through ``resolve_knobs`` (no scattered hand-set getattr
+# defaults), and ``repro.autotune`` derives its search space from the
+# same rows -- adding a knob here is the one step that exposes it to
+# both.  Rows are (name, default); scheduling knobs (batch_cap, queue
+# bounds) never reach the PipelinePlan and can never change container
+# bytes -- only how fast a fixed plan executes.
+PLAN_KNOBS = (
+    ("predictor", "mop"),
+    ("block", predictors.DEFAULT_BLOCK),
+    ("n_levels", quantize.DEFAULT_LEVELS),
+    ("zstd_level", 12),
+    ("verify", True),
+    ("max_rounds", 12),
+    ("batch_units", True),       # stack same-signature units (vmapped)
+    ("codec", "host"),           # entropy stage: host | device
+    ("batch_cap", 8),            # tiled: max units per stacked batch
+    ("q_in_frames", None),       # async engine: ingest queue bound
+                                 # (None -> max(window_t, 2))
+    ("q_out_units", None),       # async engine: handoff queue bound
+                                 # (None -> max(2 * tiles_per_window, 2))
+)
+PLAN_DEFAULTS = dict(PLAN_KNOBS)
+
+
+def resolve_knobs(cfg) -> dict:
+    """Every PLAN_KNOBS value for ``cfg``, falling back to the declared
+    defaults for knobs the config object does not carry."""
+    return {name: getattr(cfg, name, default)
+            for name, default in PLAN_KNOBS}
+
+
 @dataclasses.dataclass(frozen=True)
 class PipelinePlan:
     """One pipeline configuration: global stream parameters + bindings.
@@ -139,16 +173,22 @@ def lorenzo_backend(be: str, xi_unit: int) -> str:
 
 def plan_from_cfg(cfg, be: str, scale: float, eb_abs: float,
                   name: str = "fused") -> PipelinePlan:
-    """Plan from a CompressionConfig + the field-derived stream params."""
+    """Plan from a CompressionConfig + the field-derived stream params.
+
+    Every configurable default routes through PLAN_KNOBS/resolve_knobs
+    -- plan construction is fully data-driven, so autotune's searched
+    configs and hand-written ones resolve through the same table.
+    """
+    knobs = resolve_knobs(cfg)
     tau = max(int(np.floor(eb_abs * scale)), 0)
-    xi_unit, n_usable = quantize.ladder(tau, cfg.n_levels)
+    xi_unit, n_usable = quantize.ladder(tau, knobs["n_levels"])
     return PipelinePlan(
         name=name,
-        predictor=cfg.predictor,
+        predictor=knobs["predictor"],
         backend=be,
         backend_lorenzo=lorenzo_backend(be, xi_unit),
-        block=cfg.block,
-        n_levels=cfg.n_levels,
+        block=knobs["block"],
+        n_levels=knobs["n_levels"],
         scale=scale,
         eb_abs=eb_abs,
         tau=tau,
@@ -158,14 +198,14 @@ def plan_from_cfg(cfg, be: str, scale: float, eb_abs: float,
         cfl_y=cfg.dt / cfg.dy,
         d_max=cfg.d_max,
         n_max=cfg.n_max,
-        zstd_level=cfg.zstd_level,
-        verify=cfg.verify,
-        max_rounds=cfg.max_rounds,
-        batch_units=getattr(cfg, "batch_units", True),
-        codec=getattr(cfg, "codec", "host"),
+        zstd_level=knobs["zstd_level"],
+        verify=knobs["verify"],
+        max_rounds=knobs["max_rounds"],
+        batch_units=knobs["batch_units"],
+        codec=knobs["codec"],
         bindings=_codec_bindings(
             LEGACY_BINDINGS if name == "legacy" else FUSED_BINDINGS,
-            getattr(cfg, "codec", "host")),
+            knobs["codec"]),
     )
 
 

@@ -69,7 +69,7 @@ import zlib
 import msgpack
 import numpy as np
 
-from . import encode, tiling
+from . import encode, pipeline, tiling
 from . import faults as faults_mod
 from .. import obs
 
@@ -609,8 +609,16 @@ class _AsyncEngine:
         self.session = session
         self.faults = faults or faults_mod.FaultPoint(None)
         self.stage_timeout = stage_timeout
-        # at most ~one window of frames buffered ahead of the planes
-        self.q_in = queue.Queue(maxsize=max(grid.window_t, 2))
+        # queue bounds are searched scheduling knobs (pipeline.PLAN_KNOBS
+        # q_in_frames / q_out_units); the defaults keep the original
+        # sizing: ~one window of frames ahead of the planes, ~two
+        # windows of unit payloads ahead of the writer.  Bounds change
+        # stall behavior only -- emission order (hence bytes) is fixed
+        # by the scheduler.
+        knobs = pipeline.resolve_knobs(cfg)
+        q_in = knobs["q_in_frames"] or max(grid.window_t, 2)
+        self._q_out_units = knobs["q_out_units"]
+        self.q_in = queue.Queue(maxsize=max(int(q_in), 2))
         self.q_out = None           # sized once the tile count is known
         self.stop = threading.Event()
         self.scale = None           # set after state init; read by ingest
@@ -880,6 +888,9 @@ class _AsyncEngine:
                 ingest.join(timeout=0.1)
 
     def _size_q_out(self, H, W):
+        if self._q_out_units:
+            self.q_out = queue.Queue(maxsize=max(int(self._q_out_units), 2))
+            return
         nti = -(-H // self.grid.tile_h)
         ntj = -(-W // self.grid.tile_w)
         # ~2 windows of unit payloads in flight, max

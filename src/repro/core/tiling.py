@@ -58,6 +58,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import itertools
 import time
 from typing import Optional
 
@@ -83,8 +84,11 @@ TILED_FORMAT_VERSION = 4
 TILED_FORMAT_VERSION_DEVICE = 5
 _EB_BIG = np.int64(2**62)
 # batched unit execution: cap the stacked batch (with pow2 padding this
-# bounds both peak memory and the number of compiled batch sizes)
-_BATCH_CAP = 8
+# bounds both peak memory and the number of compiled batch sizes).
+# The per-run value is a searched scheduling knob
+# (pipeline.PLAN_KNOBS["batch_cap"], carried on _State); chunking by
+# signature group keeps the bytes identical for every cap value.
+_BATCH_CAP = pipeline.PLAN_DEFAULTS["batch_cap"]
 
 
 class StreamingCascadeError(RuntimeError):
@@ -271,6 +275,8 @@ class _State:
     n_blocks: int = 0
     n_verts: int = 0
     n_units: int = 0
+    batch_cap: int = _BATCH_CAP     # searched scheduling knob (never
+                                    # changes bytes; pipeline.PLAN_KNOBS)
 
 
 def _init_state(cfg, grid: TileGrid, H, W, vrange, sink):
@@ -306,6 +312,7 @@ def _init_state(cfg, grid: TileGrid, H, W, vrange, sink):
         cfg=cfg, grid=grid, ex=ex, be=be, H=H, W=W,
         scale=plan.scale, eb_abs=plan.eb_abs, tau=plan.tau,
         xi_unit=plan.xi_unit, n_usable=plan.n_usable, g2f=plan.g2f,
+        batch_cap=max(int(pipeline.resolve_knobs(cfg)["batch_cap"]), 1),
         stepper=ex.stepper,
         u=_Planes(H, W, np.float32, 0.0),
         v=_Planes(H, W, np.float32, 0.0),
@@ -541,8 +548,8 @@ def _round_work(st: _State, work):
             (spec, delta))
     out = []
     for items in groups.values():
-        for lo in range(0, len(items), _BATCH_CAP):
-            chunk = items[lo:lo + _BATCH_CAP]
+        for lo in range(0, len(items), st.batch_cap):
+            chunk = items[lo:lo + st.batch_cap]
             obs.observe("pipeline.batch_group_size", len(chunk))
             if len(chunk) == 1:
                 # a 1-unit batch would just compile a second executable
@@ -880,8 +887,8 @@ def _unit_payloads_impl(st: _State, w):
         for spec in w.specs:
             groups.setdefault(_sig(spec), []).append(spec)
         for specs in groups.values():
-            for lo in range(0, len(specs), _BATCH_CAP):
-                chunk = specs[lo:lo + _BATCH_CAP]
+            for lo in range(0, len(specs), st.batch_cap):
+                chunk = specs[lo:lo + st.batch_cap]
                 if len(chunk) == 1:
                     continue          # per-unit path below is bit-equal
                 for spec, enc in zip(chunk, _encode_group(st, chunk)):
@@ -1097,7 +1104,8 @@ def compress_tiled(u, v, cfg=None, grid: Optional[TileGrid] = None,
 
 def compress_stream(pairs, cfg=None, grid: Optional[TileGrid] = None,
                     value_range=None, sink=None, async_engine=False,
-                    resume=False, faults=None, stage_timeout=None):
+                    resume=False, faults=None, stage_timeout=None,
+                    autotune=False, n_frames_hint=None):
     """Streaming tiled compression of an iterable of (u_t, v_t) frames.
 
     ``value_range=(lo, hi)`` must be the exact global min/max over both
@@ -1129,8 +1137,40 @@ def compress_stream(pairs, cfg=None, grid: Optional[TileGrid] = None,
     (seconds; also REPRO_STAGE_TIMEOUT) are the fault-injection /
     watchdog hooks of the async engine -- test and benchmark plumbing,
     inert in production use.
+
+    ``autotune=True`` picks grid/backend/codec/scheduling via the cost
+    model (repro.autotune, model-only: a stream cannot be rerun per
+    candidate) before any frame is compressed; ``n_frames_hint`` bounds
+    the workload estimate when ``pairs`` has no ``len``.  Incompatible
+    with ``resume`` -- a resumed run must replay the original plan
+    bit-for-bit, not search for a new one.
     """
     cfg = cfg or compressor.CompressionConfig()
+    if autotune:
+        if resume:
+            raise ValueError(
+                "autotune=True cannot be combined with resume=True: a "
+                "resumed run must replay the journaled plan exactly; "
+                "rerun with the original grid/config")
+        from .. import autotune as autotune_mod
+
+        src = pairs(0) if callable(pairs) else pairs
+        n_frames = None
+        try:
+            n_frames = len(src)
+        except TypeError:
+            pass
+        it = iter(src)
+        try:
+            first = next(it)
+        except StopIteration:
+            raise ValueError("autotune=True needs at least one frame")
+        H, W = np.asarray(first[0]).shape
+        cfg, cand = autotune_mod.tune_stream(
+            (n_frames or n_frames_hint or 64, H, W), cfg)
+        grid = cfg.tiling
+        async_engine = cand.async_engine
+        pairs = itertools.chain([first], it)
     grid = grid or getattr(cfg, "tiling", None) or TileGrid()
     grid.validate()
     from . import stream_engine

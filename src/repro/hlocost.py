@@ -106,6 +106,28 @@ _SKIP_BYTES_OPS = {
 # estimate.  We simulate TPU fusion by not charging bytes for top-level
 # elementwise ops (their large inputs are dot/fusion results, which are
 # charged where produced).  They still contribute 1 flop/element.
+# Non-dot structured-op flop weights (per element *touched*, see
+# _nondot_charge for which operand that is).  The compression pipeline's
+# entropy stage is built from exactly these shapes -- symbol gather/
+# scatter routing, histogram-style reduces for the code-table build,
+# prefix-sum (reduce-window / cumulative) passes for the bit-pack -- and
+# the dot-dominated approximation above prices them all at 1 flop/elem,
+# which misprices the stage by an order of magnitude.  The raw
+# (dot-dominated) total stays in ``HloCost.flops``; the reweighted total
+# is recorded separately as ``flops_adjusted`` with a per-opcode
+# breakdown, mirroring how the stock cost_analysis numbers are kept as
+# reference alongside the trip-count-aware walk.
+NONDOT_FLOP_WEIGHTS = {
+    "gather": 4.0,              # address compute + clamp per gathered elem
+    "scatter": 6.0,             # address + combine per update elem
+    "dynamic-slice": 2.0,
+    "dynamic-update-slice": 2.0,
+    "reduce": 2.0,              # histogram/sum trees: combine + route
+    "reduce-window": 8.0,       # prefix-sum style windowed passes
+    "select-and-scatter": 8.0,
+    "sort": 16.0,               # ~log2(n) compare-exchange passes
+}
+
 _ELEMENTWISE_OPS = {
     "add", "subtract", "multiply", "divide", "maximum", "minimum",
     "power", "exponential", "log", "tanh", "rsqrt", "sqrt", "negate",
@@ -254,11 +276,30 @@ def _fusion_windowed_discount(op, comps, shapes):
 
 @dataclasses.dataclass
 class HloCost:
-    flops: float = 0.0
+    flops: float = 0.0           # raw: dot/conv + 1-flop/elem elementwise
     bytes: float = 0.0
     collective_bytes: float = 0.0
     coll_breakdown: Dict[str, float] = dataclasses.field(default_factory=dict)
     loop_info: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
+    # non-dot structured-op charges (NONDOT_FLOP_WEIGHTS), trip-weighted:
+    # full per-opcode charge, and the raw total with those ops re-priced
+    nondot_flops: Dict[str, float] = dataclasses.field(default_factory=dict)
+    flops_adjusted: float = 0.0
+
+
+def _nondot_charge(op: _Op, shapes: Dict[str, str]) -> float:
+    """Elements a structured non-dot op actually touches: reductions and
+    windowed passes are priced on their *input* (a histogram over 1M
+    elements producing 256 bins does 1M combines, not 256), scatter on
+    its update operand, gather/slice on the gathered window."""
+    oc = op.opcode
+    if oc in ("reduce", "reduce-window", "select-and-scatter", "sort"):
+        n = shape_elems(shapes.get(op.operands[0], "")) if op.operands else 0
+        return float(n or shape_elems(op.type_str))
+    if oc == "scatter" and len(op.operands) > 1:
+        n = shape_elems(shapes.get(op.operands[1], ""))
+        return float(n or shape_elems(op.type_str))
+    return float(shape_elems(op.type_str))
 
 
 def analyze_text(text: str) -> HloCost:
@@ -273,6 +314,7 @@ def analyze_text(text: str) -> HloCost:
     entry = next((c for c in comps.values() if c.is_entry), None)
     if entry is None:
         return cost
+    adjust = [0.0]      # extra flops from re-priced non-dot ops
 
     def visit(comp: _Computation, mult: float, in_fusion: bool):
         for op in comp.ops:
@@ -285,6 +327,17 @@ def analyze_text(text: str) -> HloCost:
             elif oc not in _SKIP_BYTES_OPS and not in_fusion:
                 # elementwise estimate: 1 flop per output element
                 cost.flops += mult * shape_elems(op.type_str)
+
+            if oc in NONDOT_FLOP_WEIGHTS:
+                # re-priced charge recorded alongside the raw estimate
+                # (which billed 1 flop/output-elem at top level, 0 in
+                # fusions); the raw ``flops`` total is left untouched
+                full = NONDOT_FLOP_WEIGHTS[oc] * _nondot_charge(op, shapes)
+                naive = 0.0 if in_fusion or oc in _SKIP_BYTES_OPS \
+                    else float(shape_elems(op.type_str))
+                cost.nondot_flops[oc] = (
+                    cost.nondot_flops.get(oc, 0.0) + mult * full)
+                adjust[0] += mult * max(full - naive, 0.0)
 
             base = oc.replace("-start", "")
             if base in ("all-reduce", "all-gather", "reduce-scatter",
@@ -345,4 +398,5 @@ def analyze_text(text: str) -> HloCost:
             # reduce/sort/map comparators: skipped (negligible)
 
     visit(entry, 1.0, False)
+    cost.flops_adjusted = cost.flops + adjust[0]
     return cost

@@ -35,10 +35,19 @@ __all__ = [
     "count", "gauge_set", "observe",
     "span", "counter_event", "instant_event", "name_thread",
     "device_sync", "snapshot", "export_trace", "trace_events",
-    "reset", "run_report", "REGISTRY",
+    "reset", "run_report", "stage_durations", "REGISTRY",
 ]
 
 _enabled = _os.environ.get("REPRO_OBS", "0").strip() not in ("", "0")
+
+# Every finished span also lands its duration in a "span.<name>"
+# Histogram, so per-stage wall time is queryable from the metrics
+# snapshot (not just the bounded trace buffer).  This is the data
+# autotune calibration fits its cost-model coefficients from
+# (repro.autotune.calibrate); spans only exist when tracing is
+# enabled, so the disabled path cost is unchanged.
+_trace.set_exit_hook(
+    lambda name, dur_ns: REGISTRY.histogram("span." + name).observe(dur_ns))
 
 
 def enabled() -> bool:
@@ -128,6 +137,33 @@ def device_sync(x):
         except Exception:
             pass  # host arrays / tracers: nothing to sync
     return x
+
+
+def stage_durations(prefix: str = "") -> dict:
+    """Per-span-name duration aggregates from the ``span.*`` Histograms.
+
+    Returns ``{span_name: {"count", "sum_s", "min_s", "max_s"}}`` for
+    every span whose name starts with ``prefix`` ("" = all).  This is
+    the calibration export: a calibration run executes a workload with
+    tracing enabled, then reads stage wall times from here instead of
+    walking the (bounded, droppable) trace buffer.
+    """
+    out = {}
+    for name, snap in REGISTRY.snapshot().items():
+        if not name.startswith("span."):
+            continue
+        stage = name[len("span."):]
+        if not stage.startswith(prefix):
+            continue
+        if snap.get("type") != "histogram" or not snap.get("count"):
+            continue
+        out[stage] = {
+            "count": snap["count"],
+            "sum_s": snap["sum"] / 1e9,
+            "min_s": (snap["min"] or 0) / 1e9,
+            "max_s": (snap["max"] or 0) / 1e9,
+        }
+    return out
 
 
 def export_trace(path: str) -> int:

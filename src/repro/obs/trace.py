@@ -33,6 +33,19 @@ _EVENTS: list = []
 _DROPPED = 0
 _TLS = threading.local()
 
+# span-exit observer installed by repro.obs: every finished span also
+# lands its duration in a metrics Histogram ("span.<name>"), which is
+# what autotune calibration fits its per-stage coefficients from.  A
+# plain module global (not thread-local): the hook itself is expected
+# to be thread-safe, and instrumentation must never raise.
+_EXIT_HOOK = None
+
+
+def set_exit_hook(fn):
+    """``fn(name, dur_ns)`` called after every Span exit (or None)."""
+    global _EXIT_HOOK
+    _EXIT_HOOK = fn
+
 
 def _stack():
     st = getattr(_TLS, "stack", None)
@@ -95,6 +108,11 @@ class Span:
             "tid": threading.get_ident(),
             "args": self.args,
         })
+        if _EXIT_HOOK is not None:
+            try:
+                _EXIT_HOOK(self.name, self.dur_ns)
+            except Exception:
+                pass  # instrumentation must never take down the pipeline
         return False
 
     @property

@@ -49,10 +49,20 @@ class Roofline:
     memory_report: dict
     raw_cost_analysis: dict = dataclasses.field(default_factory=dict)
     loop_info: list = dataclasses.field(default_factory=list)
+    # non-dot re-pricing (hlocost.NONDOT_FLOP_WEIGHTS): adjusted total
+    # and per-opcode breakdown, recorded alongside the raw dot-dominated
+    # count the same way raw_cost_analysis keeps the stock numbers
+    flops_adjusted_per_device: float = 0.0
+    nondot_flops: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def t_compute(self):
         return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_compute_adjusted(self):
+        f = self.flops_adjusted_per_device or self.flops_per_device
+        return f / PEAK_FLOPS
 
     @property
     def t_memory(self):
@@ -93,6 +103,11 @@ class Roofline:
             "bottleneck": self.bottleneck,
             "model_flops": self.model_flops,
             "hlo_flops_total": self.flops_per_device * self.n_chips,
+            "hlo_flops_raw": self.flops_per_device,
+            "hlo_flops_adjusted": self.flops_adjusted_per_device
+            or self.flops_per_device,
+            "t_compute_adjusted_s": self.t_compute_adjusted,
+            "nondot_flops": self.nondot_flops,
             "useful_flops_ratio": self.useful_flops_ratio,
             "roofline_fraction": self.roofline_fraction,
             "coll_breakdown": self.coll_breakdown,
@@ -160,4 +175,6 @@ def analyze(compiled, arch, shape, mesh_name, n_chips, cfg, cell,
             "bytes accessed": float(ca.get("bytes accessed", 0.0)),
         },
         loop_info=hc.loop_info[:32],
+        flops_adjusted_per_device=hc.flops_adjusted,
+        nondot_flops={k: float(v) for k, v in hc.nondot_flops.items()},
     )
