@@ -141,6 +141,12 @@ def check(payload: dict) -> list:
              f"rate_accounting.{codec} covered no units")
         need(row.get("n_symbols", 0) > 0,
              f"rate_accounting.{codec} decoded no symbols")
+        for ur in row.get("units", []):
+            # the adaptive-rate search reads these per-unit columns;
+            # losing either breaks target-ratio allocation silently
+            need("achieved_bps" in ur and "eb_base" in ur,
+                 f"rate_accounting.{codec} unit row missing "
+                 f"eb_base/achieved_bps columns: {sorted(ur)}")
     dev = rate["codecs"]["device"]
     # packed canonical-Huffman bitstreams cannot beat the zero-order
     # Shannon bound of their own histogram (host zstd LZ can, so the
@@ -150,6 +156,23 @@ def check(payload: dict) -> list:
          f"bits/sym beats the Shannon bound {dev['shannon_bps']} -- "
          "the accounting is decoding the wrong streams")
     checked.append("rate_accounting")
+
+    adapt = payload.get("adaptive_rate")
+    need(isinstance(adapt, dict), "adaptive_rate section missing")
+    need(adapt.get("ratio_adaptive", 0) > adapt.get("ratio_uniform", 1e9),
+         f"adaptive_rate: adaptive ratio {adapt.get('ratio_adaptive')} "
+         f"does not beat uniform-tight {adapt.get('ratio_uniform')} -- "
+         "relaxing non-feature units must buy rate")
+    need(adapt.get("FC_t") == 0 and adapt.get("FC_s") == 0,
+         f"adaptive_rate has false cases: FC_t={adapt.get('FC_t')} "
+         f"FC_s={adapt.get('FC_s')} (the verify fixpoint must keep "
+         "topology policy-independent)")
+    need(adapt.get("tracks_preserved") is True,
+         f"adaptive_rate did not preserve the track set: {adapt}")
+    tgt = adapt.get("target_search")
+    need(isinstance(tgt, dict) and tgt.get("met") is True,
+         f"adaptive_rate target-ratio search missed its target: {tgt}")
+    checked.append("adaptive_rate")
 
     tune = payload.get("autotune")
     need(isinstance(tune, dict) and isinstance(tune.get("shapes"), list)

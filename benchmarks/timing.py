@@ -899,6 +899,82 @@ def _bench_rate_accounting(eb, shape, log):
             "codecs": codecs}
 
 
+def _bench_adaptive_rate(eb, shape, log):
+    """Adaptive per-unit bounds vs the uniform scalar bound at equal
+    feature fidelity (DESIGN.md #16): a track-aware policy keeps
+    trajectory-covering units at the tight bound and relaxes the rest,
+    so the ratio must come out strictly higher than uniform-tight while
+    FC stays 0 and the track set is preserved exactly.  Also exercises
+    the ``compress(..., target_ratio=...)`` search end to end."""
+    import dataclasses as _dc
+
+    from repro import analysis
+    from repro.core import ebpolicy, fixedpoint, trajectory
+    from repro.data import synthetic
+
+    T, H, W = shape
+    u, v = synthetic.double_gyre(T=T, H=H, W=W)
+    tight, relaxed = 1e-3, 2e-1
+    uni_cfg = CompressionConfig(eb=tight, mode="abs", predictor="mop",
+                                backend="xla", verify=True, fused=True)
+    blob_u, st_u = compress(u, v, uni_cfg)
+
+    wt = min(max(T // 2, 1), 4)
+    th = min(H, max(8, H // 8))
+    tw = min(W, max(8, W // 8))
+    pol = analysis.track_aware_policy(u, v, tight=tight, relaxed=relaxed,
+                                      window_t=wt, tile_h=th, tile_w=tw)
+    ad_cfg = _dc.replace(uni_cfg, eb_policy=pol,
+                         n_levels=ebpolicy.levels_for(pol,
+                                                      uni_cfg.n_levels))
+    blob_a, st_a = compress(u, v, ad_cfg)
+    ur, vr = decompress(blob_a)
+    fc = trajectory.false_cases(u, v, ur, vr, st_a["scale"])
+
+    def track_set(uu, vv):
+        _, ufp, vfp = fixedpoint.to_fixed(uu, vv)
+        traj = analysis.extract(ufp, vfp, classify=False)
+        return (len(traj.tracks),
+                sum(len(t.nodes) for t in traj.tracks))
+
+    nt0, nn0 = track_set(u, v)
+    nt1, nn1 = track_set(ur, vr)
+
+    from repro.autotune import compress_with_target
+
+    target = round(st_u["ratio"] * 1.1, 3)
+    _, st_t = compress_with_target(u, v, uni_cfg, target, max_iters=4)
+    rt = st_t["rate_target"]
+
+    sec = {
+        "field": f"double_gyre {T}x{H}x{W}",
+        "tight": tight, "relaxed": relaxed,
+        "policy_grid": [wt, th, tw],
+        "n_protected_units": len(pol.values),
+        "n_levels": ad_cfg.n_levels,
+        "ratio_uniform": round(st_u["ratio"], 3),
+        "ratio_adaptive": round(st_a["ratio"], 3),
+        "adaptive_higher": bool(st_a["ratio"] > st_u["ratio"]),
+        "FC_t": fc["FC_t"], "FC_s": fc["FC_s"],
+        "tracks_orig": nt0, "tracks_rec": nt1,
+        "nodes_orig": nn0, "nodes_rec": nn1,
+        "tracks_preserved": bool(nt0 == nt1 and nn0 == nn1),
+        "target_search": {
+            "target_ratio": rt["target_ratio"],
+            "achieved_ratio": round(rt["achieved_ratio"], 3),
+            "met": rt["met"],
+            "relax": rt["relax"],
+            "rungs_tried": rt.get("rungs_tried", []),
+        },
+    }
+    log(f"[bench] adaptive_rate {T}x{H}x{W}: uniform "
+        f"{sec['ratio_uniform']} -> adaptive {sec['ratio_adaptive']} "
+        f"(FC_t={fc['FC_t']} FC_s={fc['FC_s']}, tracks "
+        f"{nt0}->{nt1}); target {target} "
+        f"{'met' if rt['met'] else 'MISSED'} at relax {rt['relax']}")
+    return sec
+
+
 def bench_compress(small=True, eb=1e-2, backends=("xla",),
                    predictors=("lorenzo", "sl", "mop"),
                    speedup_shape=(64, 256, 256), repeat=2, log=print,
@@ -910,6 +986,7 @@ def bench_compress(small=True, eb=1e-2, backends=("xla",),
                    entropy_shape=(2, 16, 16),
                    obs_shape=(16, 64, 64),
                    rate_shape=(16, 64, 64),
+                   adaptive_shape=(8, 64, 64),
                    autotune_shapes=((8, 32, 32), (16, 64, 64))):
     """Emit the BENCH_compress.json payload.
 
@@ -1003,6 +1080,9 @@ def bench_compress(small=True, eb=1e-2, backends=("xla",),
     rate_accounting = None
     if rate_shape is not None:
         rate_accounting = _bench_rate_accounting(eb, rate_shape, log)
+    adaptive_rate = None
+    if adaptive_shape is not None:
+        adaptive_rate = _bench_adaptive_rate(eb, adaptive_shape, log)
     autotune = None
     if autotune_shapes is not None:
         autotune = _bench_autotune(eb, autotune_shapes, repeat, log)
@@ -1015,6 +1095,7 @@ def bench_compress(small=True, eb=1e-2, backends=("xla",),
             "trajectory_analysis": traj,
             "obs_overhead": obs_overhead,
             "rate_accounting": rate_accounting,
+            "adaptive_rate": adaptive_rate,
             "autotune": autotune,
             "eb": eb, "small": small}
 
@@ -1046,6 +1127,7 @@ if __name__ == "__main__":
             batched_shape=(6, 32, 32), async_shape=(8, 32, 32),
             recovery_shape=(9, 32, 32), entropy_shape=(2, 16, 16),
             obs_shape=(6, 32, 32), rate_shape=(6, 32, 32),
+            adaptive_shape=(8, 64, 64),
             autotune_shapes=((6, 32, 32),))
     else:
         payload = bench_compress(

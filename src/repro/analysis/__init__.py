@@ -12,10 +12,13 @@ queryable objects:
 * ``decode_for_track``    -- decode ONLY the covering units and rebuild
                              the exact polyline
 * ``track_summaries``     -- all per-track index summaries
+* ``track_aware_policy``  -- tighten-near-trajectories adaptive eb
+                             policy (core.ebpolicy; DESIGN.md #16)
 
 See DESIGN.md #9 for the sidecar index format and the seam-stitching
 argument.
 """
+from .adaptive import track_aware_policy, track_units  # noqa: F401
 from .classify import classify_nodes  # noqa: F401
 from .extraction import extract  # noqa: F401
 from .index import (  # noqa: F401

@@ -26,15 +26,17 @@ from .calibrate import (CalibrationTable, CalibrationTableError,
                         calibrate, default_table_path, load_or_calibrate,
                         load_table, save_table)
 from .costmodel import CostModel, Workload, device_kind
+from .rate import compress_with_target
 from .search import PlanCandidate, apply, available_backends, \
     enumerate_candidates, search
 
 __all__ = [
     "CalibrationTable", "CalibrationTableError", "CostModel",
     "PlanCandidate", "Workload", "apply", "available_backends",
-    "calibrate", "default_table_path", "device_kind",
-    "enumerate_candidates", "explain", "last_report", "load_or_calibrate",
-    "load_table", "save_table", "search", "tune_config", "tune_stream",
+    "calibrate", "compress_with_target", "default_table_path",
+    "device_kind", "enumerate_candidates", "explain", "last_report",
+    "load_or_calibrate", "load_table", "save_table", "search",
+    "tune_config", "tune_stream",
 ]
 
 # measure-verify the top-k model picks on the real field when it is
@@ -73,10 +75,24 @@ def _sample(u, v):
     return u[:tt], v[:tt]
 
 
-def _build_report(shape, stream, ranked, chosen, table, elapsed_s):
+def _policy_spec_of(cfg) -> tuple:
+    """Canonical spec of cfg's eb policy, () for uniform -- stamped on
+    every candidate so the tune's identity includes the byte-changing
+    knob it ran under (search.py module doc)."""
+    from ..core import ebpolicy
+
+    return tuple(ebpolicy.policy_spec(
+        ebpolicy.normalize(getattr(cfg, "eb_policy", None))) or ())
+
+
+def _build_report(shape, stream, ranked, chosen, table, elapsed_s,
+                  eb_policy=()):
     return {
         "shape": tuple(int(s) for s in shape),
         "stream": stream,
+        # byte-changing plan knob the tune ran under (carried, never
+        # searched); "uniform" when no policy was set
+        "eb_policy": "adaptive" if eb_policy else "uniform",
         "device_kind": table.device_kind if table else device_kind(),
         "calibrated": bool(table and table.coeffs),
         "tune_time_s": elapsed_s,
@@ -116,10 +132,13 @@ def tune_config(u, v, cfg, table: Optional[CalibrationTable] = None,
         measure_cb = _measure_fn(mu, mv, cfg)
     else:
         measure_cb, top_k = None, 0
-    ranked = search(shape, model=model, top_k=top_k, measure=measure_cb)
+    pol_spec = _policy_spec_of(cfg)
+    ranked = search(shape, model=model, top_k=top_k, measure=measure_cb,
+                    eb_policy=pol_spec)
     chosen = ranked[0]
     _LAST_REPORT = _build_report(shape, False, ranked, chosen, table,
-                                 time.perf_counter() - t0)
+                                 time.perf_counter() - t0,
+                                 eb_policy=pol_spec)
     return apply(cfg, chosen.cand)
 
 
@@ -137,11 +156,14 @@ def tune_stream(shape, cfg, table: Optional[CalibrationTable] = None,
     if table is None:
         table = load_or_calibrate()
     model = CostModel(coeffs=table.coeffs, kind=table.device_kind)
+    pol_spec = _policy_spec_of(cfg)
     ranked = search(tuple(shape), model=model, stream=True,
-                    ingest_s=ingest_s_per_frame * shape[0])
+                    ingest_s=ingest_s_per_frame * shape[0],
+                    eb_policy=pol_spec)
     chosen = ranked[0]
     _LAST_REPORT = _build_report(tuple(shape), True, ranked, chosen,
-                                 table, time.perf_counter() - t0)
+                                 table, time.perf_counter() - t0,
+                                 eb_policy=pol_spec)
     return apply(cfg, chosen.cand), chosen.cand
 
 
@@ -163,6 +185,8 @@ def explain(report: Optional[dict] = None, limit: int = 8) -> str:
            rep["device_kind"],
            "calibrated" if rep["calibrated"] else "seed coefficients",
            rep["tune_time_s"]),
+        "eb policy: %s (byte-changing plan knob -- carried through the "
+        "search, never enumerated)" % rep.get("eb_policy", "uniform"),
         "%-28s %10s %10s  %s" % ("plan", "pred(s)", "meas(s)", ""),
     ]
     for p in rep["plans"][:limit]:

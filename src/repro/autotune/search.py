@@ -18,6 +18,15 @@ None of the searched knobs can change container bytes for a *chosen*
 plan: backend/codec/tiling select the plan itself (different plans =
 different containers, by design), while batch_cap / queue bounds /
 async are pure scheduling (see DESIGN.md #15 for the argument).
+
+The eb policy (core/ebpolicy.py) is the opposite kind of knob: it is
+BYTE-CHANGING, so the search never enumerates it -- every candidate
+carries the caller's policy through unchanged (``eb_policy`` below is
+the policy's canonical spec, informational: it rides in the candidate
+key and report so two tunes under different policies are never
+conflated, but ``apply`` leaves ``cfg.eb_policy`` untouched).  Picking
+per-unit bounds for a target ratio is a separate, rate-distortion
+search: autotune/rate.py.
 """
 from __future__ import annotations
 
@@ -40,20 +49,25 @@ class PlanCandidate:
     async_engine: bool = False
     q_in_frames: Optional[int] = None
     q_out_units: Optional[int] = None
+    # byte-changing plan knob carried through, never searched (module
+    # doc): the canonical ebpolicy spec, () for uniform
+    eb_policy: tuple = ()
 
     @property
     def key(self):
         """Deterministic tie-break / identity tuple."""
         return (self.grid or (0, 0, 0), self.backend, self.codec,
                 self.batch_units, self.batch_cap, self.async_engine,
-                self.q_in_frames or 0, self.q_out_units or 0)
+                self.q_in_frames or 0, self.q_out_units or 0,
+                self.eb_policy)
 
     def describe(self) -> str:
         g = "mono" if self.grid is None else \
             f"{self.grid[0]}x{self.grid[1]}x{self.grid[2]}"
         bits = [g, self.backend, self.codec,
                 f"cap{self.batch_cap}" if self.grid else "",
-                "async" if self.async_engine else ""]
+                "async" if self.async_engine else "",
+                "eb-adaptive" if self.eb_policy else ""]
         return "/".join(b for b in bits if b)
 
 
@@ -106,18 +120,23 @@ def _window_lengths(T: int) -> tuple:
 def enumerate_candidates(shape, stream: bool = False,
                          backends: Optional[Sequence[str]] = None,
                          codecs: Sequence[str] = ("host", "device"),
-                         batch_caps: Sequence[int] = (4, 8, 16)) -> list:
+                         batch_caps: Sequence[int] = (4, 8, 16),
+                         eb_policy: tuple = ()) -> list:
     """The full (pre-pruning) candidate list for one field shape.
 
     ``stream=True`` drops the monolithic candidate (a stream cannot be
     monolithic) and adds async-engine / queue-bound variants.
+    ``eb_policy`` (a canonical spec, () for uniform) is stamped on
+    every candidate unchanged -- carried, never enumerated.
     """
     T, H, W = shape
     backends = tuple(backends or available_backends())
+    eb_policy = tuple(eb_policy or ())
     cands = []
     if not stream:
         for be in backends:
-            cands.append(PlanCandidate(grid=None, backend=be))
+            cands.append(PlanCandidate(grid=None, backend=be,
+                                       eb_policy=eb_policy))
     grids = [(th, tw, wt)
              for th in _axis_tiles(H)
              for tw in _axis_tiles(W)
@@ -136,7 +155,8 @@ def enumerate_candidates(shape, stream: bool = False,
                     if cap > nti * ntj and cap != batch_caps[0]:
                         continue  # caps beyond the unit count duplicate
                     base = PlanCandidate(grid=g, backend=be, codec=codec,
-                                         batch_cap=cap)
+                                         batch_cap=cap,
+                                         eb_policy=eb_policy)
                     cands.append(base)
                     if stream:
                         tpw = nti * ntj
@@ -170,7 +190,7 @@ def search(shape, model: Optional[costmodel.CostModel] = None,
            top_k: int = 0,
            measure: Optional[Callable[[PlanCandidate], float]] = None,
            candidates: Optional[Sequence[PlanCandidate]] = None,
-           ingest_s: float = 0.0) -> list:
+           ingest_s: float = 0.0, eb_policy: tuple = ()) -> list:
     """Rank the candidate space by predicted cost; optionally measure
     the ``top_k`` cheapest with ``measure(cand) -> seconds`` and re-rank
     those by measured time.  Returns [Ranked] sorted best-first --
@@ -181,7 +201,8 @@ def search(shape, model: Optional[costmodel.CostModel] = None,
     wl = costmodel.Workload(T=T, H=H, W=W, verify_rounds=verify_rounds,
                             stream=stream, ingest_s=ingest_s)
     cands = list(candidates) if candidates is not None else \
-        enumerate_candidates(shape, stream=stream, backends=backends)
+        enumerate_candidates(shape, stream=stream, backends=backends,
+                             eb_policy=eb_policy)
     ranked = [Ranked(c, model.predict(c, wl)) for c in cands]
     ranked.sort(key=lambda r: (r.predicted["total"], r.cand.key))
     if top_k and measure is not None:
@@ -194,7 +215,11 @@ def search(shape, model: Optional[costmodel.CostModel] = None,
 
 
 def apply(cfg, cand: PlanCandidate):
-    """A new CompressionConfig realizing ``cand`` (cfg untouched)."""
+    """A new CompressionConfig realizing ``cand`` (cfg untouched).
+
+    ``cfg.eb_policy`` passes through unmodified: the candidate's
+    ``eb_policy`` field is a record of the policy the tune ran under,
+    not a knob the search is allowed to move (byte-changing)."""
     from ..core import tiling
 
     grid = None

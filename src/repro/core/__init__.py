@@ -8,6 +8,11 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 from .compressor import CompressionConfig, compress, decompress  # noqa: E402,F401
+from .ebpolicy import (  # noqa: E402,F401
+    DegenerateRangeError,
+    TilePolicy,
+    UniformPolicy,
+)
 from .tiling import (  # noqa: E402,F401
     TileGrid,
     compress_stream,

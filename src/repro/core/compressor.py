@@ -43,13 +43,16 @@ import numpy as np
 
 from .. import perfflags
 from . import backend as backend_mod
-from . import ebound, encode, fixedpoint, pipeline, predictors, quantize
+from . import ebound, ebpolicy, encode, fixedpoint, pipeline, predictors, \
+    quantize
+from .ebpolicy import DegenerateRangeError, TilePolicy, UniformPolicy
 
 jax.config.update("jax_enable_x64", True)
 # opt-in persistent compilation cache (REPRO_JIT_CACHE; README)
 perfflags.apply_jit_cache()
 
 FORMAT_VERSION = pipeline.FORMAT_VERSION
+FORMAT_VERSION_ADAPTIVE = pipeline.FORMAT_VERSION_ADAPTIVE
 
 
 @dataclasses.dataclass
@@ -88,6 +91,13 @@ class CompressionConfig:
                                         # (None -> max(window_t, 2))
     q_out_units: Optional[int] = None   # async engine handoff queue bound
                                         # (None -> 2 * tiles per window)
+    # byte-changing plan knob (NOT a scheduling knob): per-(window,
+    # tile) base-bound policy (core/ebpolicy.py).  None / "uniform" /
+    # UniformPolicy() -> the scalar cfg.eb path, byte-identical to a
+    # config predating the knob; a TilePolicy resolves into a
+    # per-vertex base-bound field before the derive stage and bumps
+    # the container version (DESIGN.md #16)
+    eb_policy: Optional[object] = None
 
 
 def _as_fields(u, v):
@@ -103,13 +113,25 @@ def _as_fields(u, v):
     return u.astype(np.float32), v.astype(np.float32)
 
 
-def _abs_eb(u, v, cfg):
+def _eb_factor(u, v, cfg):
+    """The mode factor turning a bound in ``cfg.eb`` units absolute:
+    1.0 for ``abs``, the value range for ``rel``.  Raises
+    :class:`DegenerateRangeError` on (near-)constant relative-mode
+    fields, where the range carries no signal to scale with."""
     if cfg.mode == "abs":
-        return float(cfg.eb)
-    rng = float(
-        max(u.max(), v.max()) - min(u.min(), v.min())
-    )
-    return float(cfg.eb) * max(rng, 1e-30)
+        return 1.0
+    lo = min(u.min(), v.min())
+    hi = max(u.max(), v.max())
+    # the subtraction stays in the fields' float32 (bit-compatibility
+    # with the pre-policy scalar path)
+    rng = float(hi - lo)
+    ebpolicy.check_relative_range(rng, max(abs(float(lo)),
+                                           abs(float(hi))))
+    return max(rng, 1e-30)
+
+
+def _abs_eb(u, v, cfg):
+    return float(cfg.eb) * _eb_factor(u, v, cfg)
 
 
 # ----------------------------------------------------------------------
@@ -148,11 +170,19 @@ def _residuals(xu, xv, scale, xi_unit, cfg: CompressionConfig):
 # ----------------------------------------------------------------------
 
 def compress(u, v, cfg: Optional[CompressionConfig] = None,
-             autotune: bool = False):
+             autotune: bool = False, target_ratio: Optional[float] = None):
     # default is constructed per call: a module-level default instance
     # would be shared (and mutable) across every caller
     if cfg is None:
         cfg = CompressionConfig()
+    if target_ratio is not None:
+        # rate-distortion mode: search per-unit base bounds (an eb
+        # policy) until the container hits the target ratio, keeping
+        # track-covering units at cfg.eb (repro.autotune.rate)
+        from ..autotune import rate as rate_mod
+
+        return rate_mod.compress_with_target(u, v, cfg,
+                                             float(target_ratio))
     if autotune:
         # pick the fastest searched config for this input (calibrated
         # cost model + top-k measurement, repro.autotune); the chosen
@@ -171,11 +201,23 @@ def compress(u, v, cfg: Optional[CompressionConfig] = None,
 
     t0 = time.perf_counter()
     u, v = _as_fields(u, v)
-    eb_abs = _abs_eb(u, v, cfg)
+    pol = ebpolicy.normalize(cfg.eb_policy)
+    factor = _eb_factor(u, v, cfg)
+    # the plan's global (tau, xi_unit) derive from the policy's LOOSEST
+    # bound; per-vertex caps only ever clamp down from there, so the
+    # quantization grid stays global and decode is unchanged
+    eb_abs = float(cfg.eb if pol is None else
+                   ebpolicy.max_bound(pol)) * factor
     scale, ufp, vfp = fixedpoint.to_fixed(u, v, cfg.fixed_bits)
     plan = pipeline.plan_from_cfg(cfg, be, scale, eb_abs, name)
     ex = pipeline.PlanExecutor(plan)
-    enc = pipeline.compress_field(ex, u, v, ufp, vfp)
+    if pol is None:
+        enc = pipeline.compress_field(ex, u, v, ufp, vfp)
+    else:
+        enc = pipeline.compress_field(
+            ex, u, v, ufp, vfp,
+            eb_cap=ebpolicy.field_caps(pol, u.shape, factor, scale),
+            eb_bound=ebpolicy.field_bounds(pol, u.shape, factor))
     return pipeline.pack_field(ex, u, v, enc, t0)
 
 
@@ -185,9 +227,9 @@ def decompress(blob: bytes, backend: Optional[str] = None):
         return tiling.decompress_tiled(blob, backend=backend)
     header, sections = encode.unpack(blob)
     version = header.get("version", 1)
-    if version > FORMAT_VERSION:
+    if version > FORMAT_VERSION_ADAPTIVE:
         raise ValueError(
             f"container format version {version} is newer than this "
-            f"decoder (supports <= {FORMAT_VERSION})")
+            f"decoder (supports <= {FORMAT_VERSION_ADAPTIVE})")
     ex = pipeline.executor_from_header(header, backend)
     return pipeline.decode_field_blob(ex, header, sections)

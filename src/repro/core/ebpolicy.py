@@ -1,0 +1,264 @@
+"""Per-unit adaptive base error bounds (EbPolicy; DESIGN.md #16).
+
+The base error bound used to be one global scalar (``cfg.eb``).  An
+*EbPolicy* generalizes it to a per-(window, tile) field over the
+policy's OWN grid -- deliberately independent of the execution tiling
+-- resolved into per-vertex base-bound planes before the derive stage:
+
+* the per-vertex base bound is the MIN over policy units whose
+  one-cell / one-frame inflated owned box covers the vertex -- the same
+  min-reduction rule the tiled eb derivation applies on halo seams
+  (PR 2), so every engine (monolithic, tiled, streaming serial/async,
+  resumed) resolves the identical field from the policy alone;
+* the global plan parameters (tau, xi_unit, scale) derive from the
+  policy's MAXIMUM bound: adaptivity only ever clamps per-vertex bounds
+  DOWN, which keeps the quantization grid global and the decode path
+  byte-for-byte unchanged (a bound below xi_unit simply forces the
+  vertex lossless);
+* correctness (FC = 0) is policy-independent: the verify fixpoint
+  forces any violating vertex to lossless regardless of the base bound,
+  so a policy changes rate, never topology (DESIGN.md #16).
+
+The temporal neighbor rule counts window ``(t + 1) // window_t`` even
+when frame ``t + 1`` does not exist, so streaming resolves frame ``t``
+without knowing the final T and still matches the in-memory engines
+bit-for-bit.
+
+The default (policy ``None`` / :class:`UniformPolicy`) routes through
+the exact pre-policy scalar code paths and produces byte-identical
+containers -- the refactor is provably behavior-preserving where not
+opted in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+
+class DegenerateRangeError(ValueError):
+    """``mode="rel"`` on a (near-)constant field: the value range is
+    (numerically) zero, so a relative bound would collapse to
+    ``cfg.eb * 1e-30`` and explode the quantizer level count."""
+
+
+# a range this many orders below the value magnitude carries no signal
+# a *relative* bound could meaningfully scale to
+_REL_RANGE_FLOOR = 1e-12
+
+
+def check_relative_range(rng: float, max_abs: float) -> float:
+    """Validate the value range a ``mode="rel"`` bound scales with.
+
+    Raises :class:`DegenerateRangeError` (a typed ValueError, never an
+    assert -- must hold under ``python -O``) when the range is zero or
+    vanishes against the value magnitude.  Returns the range.
+    """
+    if rng <= max_abs * _REL_RANGE_FLOOR:
+        raise DegenerateRangeError(
+            f"mode='rel' on a (near-)constant field: value range {rng!r} "
+            f"vs magnitude {max_abs!r}; a relative error bound is "
+            "meaningless here -- use mode='abs' with an explicit bound")
+    return rng
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformPolicy:
+    """The default policy: one global base bound (``cfg.eb``)
+    everywhere.  Compresses through the exact scalar code paths --
+    containers are byte-identical to a config with no policy at all."""
+
+    @property
+    def is_uniform(self) -> bool:
+        return True
+
+    def spec(self):
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePolicy:
+    """Explicit per-(window, tile) base bounds over the policy's own
+    grid.
+
+    ``values`` maps policy-unit keys ``(wi, ti, tj)`` to base bounds in
+    ``cfg.eb`` units (``cfg.mode`` applies: relative bounds scale with
+    the field's value range exactly like the scalar path); units absent
+    from ``values`` use ``default``.  The grid here is the POLICY grid
+    -- resolution never reads the execution tiling, so the resolved
+    per-vertex field (and therefore the container bytes) cannot depend
+    on which engine or tile geometry runs the compression.
+    """
+
+    window_t: int
+    tile_h: int
+    tile_w: int
+    default: float
+    values: tuple = ()          # sorted (((wi, ti, tj), eb), ...)
+
+    @classmethod
+    def make(cls, window_t: int, tile_h: int, tile_w: int,
+             default: float, values=None) -> "TilePolicy":
+        """Normalized construction from a ``{key: eb}`` mapping."""
+        items = tuple(sorted(
+            (tuple(int(x) for x in k), float(ebv))
+            for k, ebv in dict(values or {}).items()))
+        pol = cls(window_t=int(window_t), tile_h=int(tile_h),
+                  tile_w=int(tile_w), default=float(default),
+                  values=items)
+        pol.validate()
+        return pol
+
+    def validate(self):
+        # real raises, not asserts: policy validation must survive -O
+        if min(self.window_t, self.tile_h, self.tile_w) < 1:
+            raise ValueError(f"policy grid sizes must be >= 1: {self}")
+        if not (self.default > 0.0):
+            raise ValueError(f"policy default bound must be > 0, got "
+                             f"{self.default}")
+        for key, ebv in self.values:
+            if len(key) != 3 or min(key) < 0:
+                raise ValueError(f"policy unit key must be a "
+                                 f"(wi, ti, tj) of non-negatives: {key}")
+            if not (ebv > 0.0):
+                raise ValueError(f"policy bound for {key} must be > 0, "
+                                 f"got {ebv}")
+
+    @property
+    def is_uniform(self) -> bool:
+        # an all-equal TilePolicy is still treated as adaptive: it was
+        # explicitly opted into, so it writes the self-describing
+        # (versioned) container rather than silently aliasing uniform
+        return False
+
+    def spec(self):
+        """Canonical msgpack-able identity (plan knob / fingerprint /
+        container header form)."""
+        return ("tile", int(self.window_t), int(self.tile_h),
+                int(self.tile_w), float(self.default),
+                tuple((tuple(int(x) for x in k), float(v))
+                      for k, v in self.values))
+
+
+def normalize(policy):
+    """Config-level policy -> resolved form: ``None`` for the uniform
+    scalar path, a validated :class:`TilePolicy` otherwise."""
+    if policy is None or policy == "uniform":
+        return None
+    if isinstance(policy, UniformPolicy):
+        return None
+    if isinstance(policy, TilePolicy):
+        policy.validate()
+        return policy
+    if isinstance(policy, (tuple, list)):
+        return policy_from_spec(policy)
+    raise TypeError(f"eb_policy must be None, 'uniform', UniformPolicy, "
+                    f"TilePolicy or a policy spec, got {type(policy)}")
+
+
+def policy_spec(policy):
+    """Canonical spec of a normalized policy (None for uniform)."""
+    return None if policy is None else policy.spec()
+
+
+def policy_from_spec(spec) -> TilePolicy:
+    """Inverse of :meth:`TilePolicy.spec` (accepts the msgpack list
+    form a container header round-trips through)."""
+    if not spec or spec[0] != "tile" or len(spec) != 6:
+        raise ValueError(f"unknown eb policy spec: {spec!r}")
+    _, wt, th, tw, default, values = spec
+    return TilePolicy.make(wt, th, tw, default,
+                           {tuple(k): v for k, v in values})
+
+
+def min_bound(policy: TilePolicy) -> float:
+    """The policy's tightest bound (``cfg.eb`` units)."""
+    return float(min([policy.default] + [v for _, v in policy.values]))
+
+
+def levels_for(policy: TilePolicy, n_levels: int = 1) -> int:
+    """Quantizer levels covering the policy's dynamic range.
+
+    The ladder's finest grid is ``xi_unit = tau >> (n_levels - 1)``
+    with tau derived from the policy's loosest bound; a vertex whose
+    bound falls below xi_unit is forced lossless.  For tight units to
+    QUANTIZE (at their own finer grid) rather than store raw values,
+    the ladder must reach down to the tightest bound:
+    ``n_levels >= log2(loosest / tightest) + 1``.  Returns that floor,
+    never below the caller's ``n_levels``.
+    """
+    import math
+
+    span = max_bound(policy) / min_bound(policy)
+    return max(int(n_levels), int(math.ceil(math.log2(span))) + 1)
+
+
+def max_bound(policy: TilePolicy) -> float:
+    """The policy's loosest bound (``cfg.eb`` units) -- what the global
+    plan (tau, xi_unit) derives from.  The default participates: every
+    frame's resolution can reach it through uncovered or
+    past-the-stream-end neighbor windows."""
+    return float(max([policy.default] + [v for _, v in policy.values]))
+
+
+@functools.lru_cache(maxsize=32)
+def _window_plane(policy: TilePolicy, wi: int, H: int, W: int):
+    """(H, W) float64 plane of window ``wi``'s bounds (policy units):
+    per-tile values min-reduced over ONE-CELL inflated owned boxes, so
+    a vertex on (or next to) a tile seam takes the tighter side --
+    exactly the halo min-reduction rule of the tiled eb derivation."""
+    vals = dict(policy.values)
+    th, tw = policy.tile_h, policy.tile_w
+    plane = np.full((H, W), np.inf, np.float64)
+    for ti in range(-(-H // th)):
+        i0, i1 = ti * th, min(ti * th + th, H)
+        for tj in range(-(-W // tw)):
+            j0, j1 = tj * tw, min(tj * tw + tw, W)
+            v = vals.get((wi, ti, tj), policy.default)
+            sl = plane[max(i0 - 1, 0):min(i1 + 1, H),
+                       max(j0 - 1, 0):min(j1 + 1, W)]
+            np.minimum(sl, v, out=sl)
+    plane.setflags(write=False)
+    return plane
+
+
+def frame_bounds(policy: TilePolicy, t: int, H: int, W: int,
+                 factor: float) -> np.ndarray:
+    """(H, W) float64 ABSOLUTE per-vertex base bounds for frame ``t``.
+
+    Min over the windows owning frames t-1, t, t+1 (one-frame
+    inflation; ``(t + 1) // window_t`` counts even past the stream end
+    so streaming needs no final-T knowledge), times the mode factor
+    (1.0 for abs, the f32-reduced value range for rel).  Scaling by a
+    positive scalar commutes with min, so the factor applies once.
+    """
+    wis = sorted({tt // policy.window_t for tt in (t - 1, t, t + 1)
+                  if tt >= 0})
+    plane = _window_plane(policy, wis[0], H, W)
+    for wi in wis[1:]:
+        plane = np.minimum(plane, _window_plane(policy, wi, H, W))
+    return plane * float(factor)
+
+
+def frame_caps(policy: TilePolicy, t: int, H: int, W: int,
+               factor: float, scale: float) -> np.ndarray:
+    """(H, W) int64 fixed-point caps for frame ``t`` -- the per-vertex
+    analogue of the plan's ``tau = floor(eb_abs * scale)``."""
+    return np.floor(frame_bounds(policy, t, H, W, factor)
+                    * float(scale)).astype(np.int64)
+
+
+def field_bounds(policy: TilePolicy, shape, factor: float) -> np.ndarray:
+    """(T, H, W) float64 absolute base bounds (monolithic resolution)."""
+    T, H, W = shape
+    return np.stack([frame_bounds(policy, t, H, W, factor)
+                     for t in range(T)])
+
+
+def field_caps(policy: TilePolicy, shape, factor: float,
+               scale: float) -> np.ndarray:
+    """(T, H, W) int64 caps (monolithic resolution)."""
+    T, H, W = shape
+    return np.stack([frame_caps(policy, t, H, W, factor, scale)
+                     for t in range(T)])

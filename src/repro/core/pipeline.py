@@ -65,11 +65,17 @@ import numpy as np
 
 from .. import obs
 from . import backend as backend_mod
-from . import ebound, encode, fixedpoint, grid, mop, predictors, quantize
+from . import ebound, ebpolicy, encode, fixedpoint, grid, mop, predictors, \
+    quantize
 
 jax.config.update("jax_enable_x64", True)
 
 FORMAT_VERSION = 2
+# written only by adaptive (non-uniform eb policy) monolithic encodes:
+# the header additionally records the policy spec.  Uniform containers
+# stay at FORMAT_VERSION, so pre-policy readers (and the goldens) are
+# unaffected (DESIGN.md #16).
+FORMAT_VERSION_ADAPTIVE = 3
 
 STAGES = ("fixedpoint", "eb_derive", "quantize", "predict",
           "verify_fixpoint", "symbolize", "pack")
@@ -119,6 +125,9 @@ PLAN_KNOBS = (
                                  # (None -> max(window_t, 2))
     ("q_out_units", None),       # async engine: handoff queue bound
                                  # (None -> max(2 * tiles_per_window, 2))
+    ("eb_policy", None),         # BYTE-CHANGING plan knob: per-unit
+                                 # base-bound policy (core/ebpolicy.py);
+                                 # None/uniform -> the scalar path
 )
 PLAN_DEFAULTS = dict(PLAN_KNOBS)
 
@@ -158,6 +167,10 @@ class PipelinePlan:
     max_rounds: int = 12
     batch_units: bool = True
     codec: str = "host"
+    # canonical spec tuple of the eb policy (ebpolicy.policy_spec);
+    # None for uniform.  A PLAN knob, not a scheduling knob: it changes
+    # container bytes, so it lives on the plan and in the header.
+    eb_policy: object = None
     bindings: tuple = FUSED_BINDINGS + HOST_ENTROPY_BINDINGS
 
     @property
@@ -203,6 +216,8 @@ def plan_from_cfg(cfg, be: str, scale: float, eb_abs: float,
         max_rounds=knobs["max_rounds"],
         batch_units=knobs["batch_units"],
         codec=knobs["codec"],
+        eb_policy=ebpolicy.policy_spec(
+            ebpolicy.normalize(knobs["eb_policy"])),
         bindings=_codec_bindings(
             LEGACY_BINDINGS if name == "legacy" else FUSED_BINDINGS,
             knobs["codec"]),
@@ -1164,14 +1179,19 @@ def _encode_field(ex: PlanExecutor, variant, ufp_j, vfp_j, eb_vertex,
 
 
 def _verify_screened(ex, ctx: _ScreenedCtx, shape, ufp_j, vfp_j, u_j, v_j,
-                     xu_d, xv_d, lossless, lossless_extra):
+                     xu_d, xv_d, lossless, lossless_extra,
+                     eb_bound=None):
     """Fused verify round: device-resident pointwise check + screened /
-    incremental face re-verification (DESIGN.md #3.5)."""
+    incremental face re-verification (DESIGN.md #3.5).
+
+    ``eb_bound``: per-vertex absolute base bounds (adaptive policy);
+    None keeps the plan's scalar -- the exact pre-policy trace."""
     p = ex.plan
     fns = ex.fns(shape)
     forced, n_pt, ur_fp, vr_fp = fns.check_pt(
         xu_d, xv_d, lossless, lossless_extra, u_j, v_j,
-        p.scale, p.xi_unit, p.eb_abs)
+        p.scale, p.xi_unit,
+        p.eb_abs if eb_bound is None else jnp.asarray(eb_bound))
     n_bad = int(n_pt)
     delta = None if ctx.prev_extra is None else np.asarray(
         lossless_extra ^ ctx.prev_extra)
@@ -1184,7 +1204,7 @@ def _verify_screened(ex, ctx: _ScreenedCtx, shape, ufp_j, vfp_j, u_j, v_j,
 
 
 def _verify_full(ex, ctx: _ScreenedCtx, shape, u, v, xu_d, xv_d, lossless,
-                 lossless_extra):
+                 lossless_extra, eb_bound=None):
     """Legacy verify round: full predicate re-evaluation + host
     transfers (seed pipeline, kept for A/B benchmarking)."""
     p = ex.plan
@@ -1203,7 +1223,8 @@ def _verify_full(ex, ctx: _ScreenedCtx, shape, u, v, xu_d, xv_d, lossless,
         np.abs(np.asarray(u_rec, dtype=np.float64) - u.astype(np.float64)),
         np.abs(np.asarray(v_rec, dtype=np.float64) - v.astype(np.float64)),
     )
-    bad_pt = err > p.eb_abs
+    bad_pt = err > (p.eb_abs if eb_bound is None
+                    else np.asarray(eb_bound))
     n_bad = int(bad_slice.sum()) + int(bad_slab.sum()) + int(bad_pt.sum())
     extra = np.asarray(lossless_extra).copy()
     extra |= bad_pt
@@ -1211,10 +1232,15 @@ def _verify_full(ex, ctx: _ScreenedCtx, shape, u, v, xu_d, xv_d, lossless,
     return jnp.asarray(extra), n_bad
 
 
-def compress_field(ex: PlanExecutor, u, v, ufp, vfp) -> FieldEncode:
+def compress_field(ex: PlanExecutor, u, v, ufp, vfp,
+                   eb_cap=None, eb_bound=None) -> FieldEncode:
     """Full-field quantize -> predict -> verify-fixpoint driver; the
     monolithic pipelines are this single-unit loop (the tiled fixpoint
-    in core/tiling.py runs the same stages per unit)."""
+    in core/tiling.py runs the same stages per unit).
+
+    ``eb_cap`` / ``eb_bound``: per-vertex int64 caps and float64
+    absolute bounds of an adaptive eb policy; both None on the uniform
+    path, which then runs the exact pre-policy traces."""
     p = ex.plan
     T, H, W = u.shape
     shape = (T, H, W)
@@ -1227,6 +1253,11 @@ def compress_field(ex: PlanExecutor, u, v, ufp, vfp) -> FieldEncode:
     # predicate pass over the original field (the seed paid it twice)
     with obs.span("pipeline.derive_eb", shape=list(shape)):
         eb_vertex, slice_pred0, slab_pred0 = ex.derive_eb(ufp_j, vfp_j)
+        if eb_cap is not None:
+            # adaptive policy: clamp the derived bounds DOWN to the
+            # per-vertex caps -- min composes with the derivation's own
+            # tau clamp, so ordering cannot matter
+            eb_vertex = jnp.minimum(eb_vertex, jnp.asarray(eb_cap))
         obs.device_sync(eb_vertex)
     lossless_extra = jnp.zeros(shape, dtype=bool)
     if p.tau < 1 or p.n_usable < 1:
@@ -1251,11 +1282,11 @@ def compress_field(ex: PlanExecutor, u, v, ufp, vfp) -> FieldEncode:
             if verify_variant == "full":
                 new_extra, n_bad = _verify_full(
                     ex, ctx, shape, u, v, xu_d, xv_d, lossless,
-                    lossless_extra)
+                    lossless_extra, eb_bound=eb_bound)
             else:
                 new_extra, n_bad = _verify_screened(
                     ex, ctx, shape, ufp_j, vfp_j, u_j, v_j, xu_d, xv_d,
-                    lossless, lossless_extra)
+                    lossless, lossless_extra, eb_bound=eb_bound)
             _vs.set(n_bad=n_bad)
         bad_counts.append(n_bad)
         if n_bad == 0 or rounds >= p.max_rounds:
@@ -1274,10 +1305,15 @@ def compress_field(ex: PlanExecutor, u, v, ufp, vfp) -> FieldEncode:
 def field_header(plan: PipelinePlan, shape) -> dict:
     T, H, W = shape
     header = {
-        "version": FORMAT_VERSION,
+        # the version only moves when the policy does: uniform
+        # containers are byte-identical to pre-policy output
+        "version": (FORMAT_VERSION_ADAPTIVE if plan.eb_policy
+                    else FORMAT_VERSION),
         "pipeline": plan.name,
         "predictor": plan.predictor,
     }
+    if plan.eb_policy:
+        header["eb_policy"] = plan.eb_policy
     if plan.name != "legacy":
         header["sl_backend"] = plan.backend
     header.update({

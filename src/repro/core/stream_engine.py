@@ -69,7 +69,7 @@ import zlib
 import msgpack
 import numpy as np
 
-from . import encode, pipeline, tiling
+from . import ebpolicy, encode, pipeline, tiling
 from . import faults as faults_mod
 from .. import obs
 
@@ -207,7 +207,10 @@ class Scheduler:
             emitted = True
         if self.pending:
             keep = self.pending[0].t0 - grid.thalo
-            for planes in (st.u, st.v, st.ufp, st.vfp, st.eb, st.forced):
+            drop = [st.u, st.v, st.ufp, st.vfp, st.eb, st.forced]
+            if st.ebf is not None:
+                drop.append(st.ebf)
+            for planes in drop:
                 planes.drop_below(keep)
             if emitted and self.checkpoint is not None:
                 self.checkpoint(self._snapshot(keep))
@@ -243,6 +246,12 @@ def _fingerprint(cfg, grid, value_range, H, W) -> dict:
     """Everything that must match for resumed bytes to splice cleanly."""
     fp = {k: v for k, v in dataclasses.asdict(cfg).items()
           if isinstance(v, (int, float, str, bool, type(None)))}
+    # the scalar filter above silently drops the policy (asdict turns a
+    # TilePolicy into a nested dict); it is byte-changing, so a resumed
+    # run MUST re-present the identical policy -- record its canonical
+    # spec explicitly (_fp_equal's msgpack round trip normalizes tuples)
+    fp["eb_policy"] = ebpolicy.policy_spec(
+        ebpolicy.normalize(getattr(cfg, "eb_policy", None)))
     fp["grid"] = dataclasses.asdict(grid)
     fp["value_range"] = [float(value_range[0]), float(value_range[1])]
     fp["H"], fp["W"] = int(H), int(W)

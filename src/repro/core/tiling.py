@@ -67,7 +67,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import backend as backend_mod
-from . import compressor, ebound, encode, fixedpoint, pipeline, sos
+from . import compressor, ebound, ebpolicy, encode, fixedpoint, pipeline, sos
 from . import grid as mesh
 from .. import obs
 
@@ -82,6 +82,12 @@ TILED_FORMAT_VERSION = 4
 # instead of CPTZ1/CPTL1.  Host-codec archives keep writing v4 -- the
 # bump applies only where an old reader would actually fail.
 TILED_FORMAT_VERSION_DEVICE = 5
+# v6: adaptive eb policy (core/ebpolicy.py): the container header
+# records the policy spec and every unit frame records its own base
+# bound ("eb_base", self-describing msgpack extras a v<=5 reader skips).
+# Uniform-policy archives keep writing v4/v5, so the goldens and old
+# readers are unaffected (DESIGN.md #16).
+TILED_FORMAT_VERSION_ADAPTIVE = 6
 _EB_BIG = np.int64(2**62)
 # batched unit execution: cap the stacked batch (with pow2 padding this
 # bounds both peak memory and the number of compiled batch sizes).
@@ -277,6 +283,13 @@ class _State:
     n_units: int = 0
     batch_cap: int = _BATCH_CAP     # searched scheduling knob (never
                                     # changes bytes; pipeline.PLAN_KNOBS)
+    policy: object = None           # normalized ebpolicy.TilePolicy |
+                                    # None (uniform scalar path)
+    ebf: object = None              # adaptive only: float64 _Planes of
+                                    # resolved per-vertex ABSOLUTE base
+                                    # bounds (verify + eb_base headers)
+    eb_factor: float = 1.0          # cfg.eb-units -> absolute (1.0 for
+                                    # abs mode, the f32 range for rel)
 
 
 def _init_state(cfg, grid: TileGrid, H, W, vrange, sink):
@@ -288,15 +301,21 @@ def _init_state(cfg, grid: TileGrid, H, W, vrange, sink):
     grid.validate()
     be = backend_mod.resolve(cfg.backend)
     lo, hi = float(vrange[0]), float(vrange[1])
+    pol = ebpolicy.normalize(getattr(cfg, "eb_policy", None))
     if cfg.mode == "abs":
-        eb_abs = float(cfg.eb)
+        eb_factor = 1.0
     else:
         # the value range is reduced in float32 exactly like the
         # monolithic _abs_eb (fields are float32, so lo/hi are exactly
         # representable and only the SUBTRACTION rounding matters --
         # a f64 subtract here once cost a off-by-one tau at 64x256x256)
         rng = float(np.float32(hi) - np.float32(lo))
-        eb_abs = float(cfg.eb) * max(rng, 1e-30)
+        ebpolicy.check_relative_range(rng, max(abs(lo), abs(hi)))
+        eb_factor = max(rng, 1e-30)
+    # the global plan derives from the policy's LOOSEST bound; adaptive
+    # per-vertex caps only clamp down from it (core/ebpolicy.py)
+    eb_abs = float(cfg.eb if pol is None
+                   else ebpolicy.max_bound(pol)) * eb_factor
     max_abs = max(abs(lo), abs(hi), 1e-300)
     scale = fixedpoint.compute_scale(max_abs, cfg.fixed_bits)
     plan = pipeline.plan_from_cfg(cfg, be, scale, eb_abs, name="tiled")
@@ -320,6 +339,10 @@ def _init_state(cfg, grid: TileGrid, H, W, vrange, sink):
         vfp=_Planes(H, W, np.int64, 0),
         eb=_Planes(H, W, np.int64, _EB_BIG),
         forced=_Planes(H, W, bool, all_ll),
+        policy=pol,
+        ebf=(None if pol is None
+             else _Planes(H, W, np.float64, np.inf)),
+        eb_factor=eb_factor,
     )
     # v4 prologue: the global decode parameters, written up front so a
     # footerless (crashed/truncated) archive remains self-describing
@@ -400,6 +423,18 @@ def _derive_window(st: _State, w):
             for k, spec in enumerate(specs):
                 st.eb.min_box(spec.ext_box, ebs[k])
                 st.preds[spec.key] = (slice_c[k], slab_c[k])
+    if st.policy is not None:
+        # adaptive policy: min the resolved per-vertex caps into the
+        # derived bound planes (idempotent, so thalo overlap between
+        # windows and journaled re-derivation after resume are safe);
+        # the float64 bound planes feed verify and the eb_base headers
+        et0 = min(s.et0 for s in w.specs)
+        for t in range(et0, w.et1):
+            boundf = ebpolicy.frame_bounds(st.policy, t, st.H, st.W,
+                                           st.eb_factor)
+            cap = np.floor(boundf * st.scale).astype(np.int64)
+            np.minimum(st.eb.ensure(t), cap, out=st.eb.ensure(t))
+            np.minimum(st.ebf.ensure(t), boundf, out=st.ebf.ensure(t))
     w.derived = True
 
 
@@ -444,7 +479,12 @@ def _tile_round(st: _State, spec: TileSpec, delta):
     v_e = jnp.asarray(st.v.box(spec.ext_box))
     forced, n_pt, ur_fp, vr_fp = fns_e.check_pt(
         xu_sim, xv_sim, ll_e, extra_e, u_e, v_e,
-        st.scale, st.xi_unit, st.eb_abs)
+        st.scale, st.xi_unit,
+        # uniform passes the exact scalar (pre-policy trace); adaptive
+        # passes the resolved per-vertex absolute bounds, which the
+        # pointwise check broadcasts elementwise
+        st.eb_abs if st.policy is None
+        else jnp.asarray(st.ebf.box(spec.ext_box)))
     n_bad = int(n_pt)
     forced_np = np.asarray(forced)
     add, nf = pipeline.check_faces(
@@ -505,7 +545,13 @@ def _round_group(st: _State, specs, deltas):
     pb = xu_p.shape[0]
     scales = jnp.full((pb,), st.scale, jnp.float64)
     xis = jnp.full((pb,), st.xi_unit, jnp.int64)
-    ebs = jnp.full((pb,), st.eb_abs, jnp.float64)
+    if st.policy is None:
+        ebs = jnp.full((pb,), st.eb_abs, jnp.float64)
+    else:
+        # per-vertex bound stacks ride the same vmapped check: the
+        # mapped axis stays 0, the inner broadcast turns elementwise
+        (ebs,), _ = pipeline._pad_pow2(
+            [jnp.asarray(_stack_boxes(st, specs, st.ebf))])
     forced_b, n_pt_b, ur_b, vr_b = bf.check_pt(
         xu_p, xv_p, ll_p, ex_p, u_p, v_p, scales, xis, ebs)
 
@@ -855,6 +901,10 @@ class _UnitPayload:
     frag: object = None  # device-codec entropy fragment (HuffSections +
                         # escapes, core/entropy.py); res_u/res_v are
                         # released once it exists
+    eb_base: object = None  # adaptive only: the unit's loosest resolved
+                        # absolute base bound (self-describing per-unit
+                        # header extra); computed here because the
+                        # async writer thread has no plane access
 
 
 def _unit_payloads(st: _State, w):
@@ -910,7 +960,9 @@ def _unit_payloads_impl(st: _State, w):
             key=spec.key, box=spec.owned_box, ll=ll_o,
             u_ll=u_o[ll_o], v_ll=v_o[ll_o],
             res_u=res_u, res_v=res_v, bm=bm,
-            seg=None if seg_records is None else seg_records[spec.key]))
+            seg=None if seg_records is None else seg_records[spec.key],
+            eb_base=(None if st.policy is None else
+                     float(st.ebf.box(spec.owned_box).max()))))
         # original-predicate tables and seam snapshots are dead now
         st.preds.pop(spec.key, None)
         st.seen.pop(spec.key, None)
@@ -949,6 +1001,11 @@ def _write_unit(st: _State, p: _UnitPayload):
     engine runs this on its writer thread while the device encodes the
     next window."""
     header = {"box": [int(x) for x in p.box]}
+    if p.eb_base is not None:
+        # self-describing per-unit base bound (adaptive policy); v<=5
+        # readers skip unknown msgpack keys, so only obs/report tooling
+        # needs to know it exists
+        header["eb_base"] = float(p.eb_base)
     if p.frag is not None:
         from . import entropy
         sections = entropy.merge_sections(
@@ -992,13 +1049,20 @@ def _finish_header(st: _State, T: int):
 
 def _container_header(st: _State, T: int):
     cfg = st.cfg
-    return {
-        # device-codec containers hold CPTH1 unit frames an older
-        # reader cannot parse, so only THEY bump the version; host-codec
-        # containers stay at v4 (old readers keep working, and the v4
-        # golden pin in tests/test_container_golden.py stays exact)
-        "version": (TILED_FORMAT_VERSION_DEVICE
-                    if st.ex.codec == "device" else TILED_FORMAT_VERSION),
+    # device-codec containers hold CPTH1 unit frames an older reader
+    # cannot parse, so only THEY bump to v5; host-codec containers stay
+    # at v4 (old readers keep working, and the v4 golden pin in
+    # tests/test_container_golden.py stays exact).  An adaptive eb
+    # policy bumps to v6 regardless of codec -- its bytes depend on the
+    # policy, so it can never alias a uniform container.
+    if st.policy is not None:
+        version = TILED_FORMAT_VERSION_ADAPTIVE
+    elif st.ex.codec == "device":
+        version = TILED_FORMAT_VERSION_DEVICE
+    else:
+        version = TILED_FORMAT_VERSION
+    header = {
+        "version": version,
         "pipeline": "tiled",
         "predictor": cfg.predictor,
         "sl_backend": st.be,
@@ -1013,6 +1077,9 @@ def _container_header(st: _State, T: int):
         "eb_abs": float(st.eb_abs),
         "tiling": dataclasses.asdict(st.grid),
     }
+    if st.policy is not None:
+        header["eb_policy"] = ebpolicy.policy_spec(st.policy)
+    return header
 
 
 def _stats(st: _State, T, blob, t0):
@@ -1299,10 +1366,10 @@ def decompress_tiled(src, region=None, backend=None, degraded=False):
     with _source_of(src) as source:
         hdr = source.header()
         version = hdr.get("version", 1)
-        if version > TILED_FORMAT_VERSION_DEVICE:
+        if version > TILED_FORMAT_VERSION_ADAPTIVE:
             raise ValueError(
                 f"container format version {version} is newer than this "
-                f"decoder (supports <= {TILED_FORMAT_VERSION_DEVICE})")
+                f"decoder (supports <= {TILED_FORMAT_VERSION_ADAPTIVE})")
         T, H, W = hdr["shape"]
         if region is None:
             region = (0, T, 0, H, 0, W)

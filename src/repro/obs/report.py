@@ -76,7 +76,7 @@ def _device_frame(frame: bytes):
             kinds["escapes"] += meta["len"]
         else:
             kinds["side_sections"] += meta["len"]
-    return kinds, n_symbols, achieved_bits, shannon_bits
+    return header, kinds, n_symbols, achieved_bits, shannon_bits
 
 
 def _host_frame(frame: bytes):
@@ -98,7 +98,8 @@ def _host_frame(frame: bytes):
             payload_kinds["side_sections"] += nbytes
     kinds = {"unit_frames_compressed": len(frame)}
     achieved_bits = 8 * len(frame)
-    return kinds, n_symbols, achieved_bits, shannon_bits, payload_kinds
+    return (header, kinds, n_symbols, achieved_bits, shannon_bits,
+            payload_kinds)
 
 
 def _merge(dst: dict, src: dict):
@@ -106,7 +107,8 @@ def _merge(dst: dict, src: dict):
         dst[k] = dst.get(k, 0) + v
 
 
-def _unit_row(key, kinds, n_sym, achieved_bits, shannon_bits):
+def _unit_row(key, kinds, n_sym, achieved_bits, shannon_bits,
+              eb_base=None):
     return {
         "key": list(key) if key is not None else None,
         "n_symbols": int(n_sym),
@@ -114,6 +116,11 @@ def _unit_row(key, kinds, n_sym, achieved_bits, shannon_bits):
         "shannon_bits": round(float(shannon_bits), 1),
         "achieved_bps": round(achieved_bits / max(n_sym, 1), 4),
         "shannon_bps": round(shannon_bits / max(n_sym, 1), 4),
+        # per-unit absolute base error bound: the unit frame's own
+        # self-describing "eb_base" (adaptive policy) or the container
+        # scalar -- the rate/bound observable the adaptive allocation
+        # search reads (autotune/rate.py)
+        "eb_base": None if eb_base is None else float(eb_base),
     }
 
 
@@ -144,14 +151,16 @@ def _report_tiled(blob: bytes) -> dict:
         key = fr["header"].get("key")
         if frame[: len(encode.MAGIC_HUF)] == encode.MAGIC_HUF:
             codec = codec or "device"
-            fk, n_sym, ach, sh = _device_frame(frame)
+            fh, fk, n_sym, ach, sh = _device_frame(frame)
             _merge(kinds, fk)
         else:
             codec = codec or "host"
-            fk, n_sym, ach, sh, pk = _host_frame(frame)
+            fh, fk, n_sym, ach, sh, pk = _host_frame(frame)
             _merge(kinds, fk)
             _merge(payload_kinds, pk)
-        units.append(_unit_row(key, fk, n_sym, ach, sh))
+        units.append(_unit_row(
+            key, fk, n_sym, ach, sh,
+            eb_base=fh.get("eb_base", header.get("eb_abs"))))
     out = {
         "container": "CPTT1",
         "codec": codec or "host",
@@ -171,11 +180,11 @@ def _report_tiled(blob: bytes) -> dict:
 
 def _report_monolithic(blob: bytes) -> dict:
     if blob[: len(encode.MAGIC_HUF)] == encode.MAGIC_HUF:
-        fk, n_sym, ach, sh = _device_frame(blob)
+        fh, fk, n_sym, ach, sh = _device_frame(blob)
         codec = "device"
         payload_kinds = None
     else:
-        fk, n_sym, ach, sh, payload_kinds = _host_frame(blob)
+        fh, fk, n_sym, ach, sh, payload_kinds = _host_frame(blob)
         codec = "host"
     out = {
         "container": blob[:5].decode("ascii", "replace"),
@@ -183,7 +192,8 @@ def _report_monolithic(blob: bytes) -> dict:
         "container_bytes": len(blob),
         "n_units": 1,
         "bytes_by_kind": fk,
-        "units": [_unit_row(None, fk, n_sym, ach, sh)],
+        "units": [_unit_row(None, fk, n_sym, ach, sh,
+                            eb_base=fh.get("eb_abs"))],
     }
     if payload_kinds:
         out["payload_bytes_by_kind"] = payload_kinds

@@ -1,0 +1,84 @@
+"""No-accelerator adaptive eb-policy smoke (CI numpy leg).
+
+End to end with REPRO_BACKEND=numpy: build a track-aware policy
+(tight bounds on trajectory-covering units, relaxed elsewhere),
+compress, decode, and require the headline guarantees of DESIGN.md #16
+-- FC_t = FC_s = 0, the extracted track set preserved exactly, a
+strictly higher ratio than the uniform-tight baseline, byte-identical
+containers for the uniform policy spellings, and a met
+``compress(..., target_ratio=...)`` search.  Real raises, not asserts:
+the smoke must fail under -O too.
+
+    REPRO_BACKEND=numpy PYTHONPATH=src python tests/adaptive_smoke.py
+"""
+import dataclasses
+
+import numpy as np
+
+from repro import analysis
+from repro.core import (CompressionConfig, compress, compressor,
+                        decompress, ebpolicy, fixedpoint, trajectory)
+from repro.core.ebpolicy import UniformPolicy
+from repro.data import synthetic
+
+
+def need(cond, what):
+    if not cond:
+        raise SystemExit(f"adaptive_smoke: {what}")
+
+
+def _tracks(u, v):
+    _, ufp, vfp = fixedpoint.to_fixed(u, v)
+    traj = analysis.extract(ufp, vfp, backend="numpy", classify=False)
+    return len(traj.tracks), sum(len(t.nodes) for t in traj.tracks)
+
+
+def main():
+    T, H, W = 8, 64, 64
+    u, v = synthetic.double_gyre(T=T, H=H, W=W)
+    tight, relaxed = 1e-3, 2e-1
+    uni = CompressionConfig(eb=tight, mode="abs", backend="numpy",
+                            fused=True)
+
+    blob_u, st_u = compress(u, v, uni)
+    blob_u2, _ = compress(u, v, dataclasses.replace(
+        uni, eb_policy=UniformPolicy()))
+    blob_u3, _ = compress(u, v, dataclasses.replace(
+        uni, eb_policy="uniform"))
+    need(blob_u == blob_u2 == blob_u3,
+         "uniform policy spellings are not byte-identical")
+
+    pol = analysis.track_aware_policy(u, v, tight=tight, relaxed=relaxed,
+                                      window_t=4, tile_h=8, tile_w=8,
+                                      backend="numpy")
+    ad = dataclasses.replace(uni, eb_policy=pol,
+                             n_levels=ebpolicy.levels_for(pol))
+    blob_a, st_a = compress(u, v, ad)
+    need(st_a["ratio"] > st_u["ratio"],
+         f"adaptive ratio {st_a['ratio']:.3f} does not beat "
+         f"uniform-tight {st_u['ratio']:.3f}")
+
+    ur, vr = decompress(blob_a)
+    fc = trajectory.false_cases(u, v, ur, vr, st_a["scale"])
+    need(fc["FC_t"] == 0 and fc["FC_s"] == 0,
+         f"false cases under the adaptive policy: {fc}")
+    need(_tracks(u, v) == _tracks(ur, vr),
+         "adaptive decode changed the extracted track set")
+
+    target = round(st_u["ratio"] * 1.1, 3)
+    blob_t, st_t = compressor.compress(u, v, uni, target_ratio=target)
+    rt = st_t["rate_target"]
+    need(rt["met"] and rt["achieved_ratio"] >= target,
+         f"target-ratio search missed {target}: {rt}")
+    ur2, vr2 = decompress(blob_t)
+    need(_tracks(u, v) == _tracks(ur2, vr2),
+         "target-ratio container changed the extracted track set")
+
+    print(f"adaptive_smoke: ok (uniform {st_u['ratio']:.2f} -> adaptive "
+          f"{st_a['ratio']:.2f}; target {target} met at relax "
+          f"{rt['relax']}; FC_t=FC_s=0, tracks preserved)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

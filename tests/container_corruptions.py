@@ -149,6 +149,116 @@ def check(cond, what: str):
         raise SystemExit(f"recovery matrix: {what}")
 
 
+def build_adaptive_blob():
+    """(tiled adaptive blob, header, (u, v), policy) on a tiny field."""
+    from repro.core import ebpolicy
+    from repro.data import synthetic
+
+    u, v = synthetic.double_gyre(T=5, H=12, W=16)
+    pol = ebpolicy.TilePolicy.make(
+        2, 6, 8, default=2e-2, values={(0, 0, 0): 1e-3, (1, 1, 1): 4e-3})
+    cfg = CompressionConfig(eb=2e-2, mode="abs", predictor="mop",
+                            fused=True, track_index=True,
+                            dt=0.1, dx=2.0 / 15, dy=1.0 / 11,
+                            eb_policy=pol,
+                            n_levels=ebpolicy.levels_for(pol))
+    blob, _ = compress_tiled(u, v, cfg, TileGrid(tile_h=6, tile_w=8,
+                                                 window_t=3))
+    return blob, encode.tiled_header(blob), (u, v), pol
+
+
+def run_adaptive_matrix(blob: bytes, hdr: dict, field, pol):
+    """Adaptive (v6) container validation, assert-free (python -O):
+    self-description, round-trip, typed refusals on truncation / forged
+    future versions / degenerate relative ranges, and salvage."""
+    import struct as _struct
+    import zlib as _zlib
+
+    import msgpack
+
+    from repro.core import compressor, ebpolicy, tiling
+
+    CE = encode.ContainerError
+    u, v = field
+    m = len(encode.MAGIC_TILED)
+
+    # self-describing: version bump + policy spec round-trip
+    check(hdr["version"] == tiling.TILED_FORMAT_VERSION_ADAPTIVE,
+          f"adaptive tiled container version: {hdr['version']}")
+    check(ebpolicy.policy_from_spec(hdr["eb_policy"]) == pol,
+          "adaptive header policy spec round-trips")
+
+    # round-trip holds the LOOSEST bound (adaptivity only clamps down)
+    ur, vr = tiling.decompress_tiled(blob)
+    loose = ebpolicy.max_bound(pol)
+    check(float(np.abs(ur.astype(np.float64) - u).max()) <= loose
+          and float(np.abs(vr.astype(np.float64) - v).max()) <= loose,
+          "adaptive round-trip violates the loosest bound")
+
+    # truncation surfaces the same typed errors as uniform containers
+    expect(CE, lambda: encode.tiled_header(blob[:-3]),
+           "adaptive truncated footer")
+    expect(CE, lambda: tiling.decompress_tiled(blob[:-3]),
+           "adaptive decompress of truncated container")
+
+    # a FUTURE version (v7) must be refused, not half-decoded: forge
+    # the footer with version+1 and identical everything else
+    header, footer_raw = encode.tiled_footer_ranged(
+        lambda off, ln: blob[off: off + ln], len(blob))
+    forged_hdr = dict(header)
+    forged_hdr["version"] = tiling.TILED_FORMAT_VERSION_ADAPTIVE + 1
+    raw = _zlib.compress(msgpack.packb(forged_hdr, use_bin_type=True), 6)
+    forged = (blob[: len(blob) - len(footer_raw) - 4 - m] + raw
+              + _struct.pack("<I", len(raw)) + encode.MAGIC_TILED)
+    expect(ValueError, lambda: tiling.decompress_tiled(forged),
+           "forged future-version adaptive container")
+
+    # monolithic adaptive (v3) future-version refusal too
+    from repro.core import compress as _compress
+
+    cfg_m = CompressionConfig(eb=2e-2, mode="abs", fused=True,
+                              eb_policy=pol,
+                              n_levels=ebpolicy.levels_for(pol))
+    mono, _ = _compress(u, v, cfg_m)
+    mh, _ = encode.unpack(mono)
+    check(mh["version"] == compressor.FORMAT_VERSION_ADAPTIVE,
+          f"adaptive monolithic version: {mh['version']}")
+    mh2 = dict(mh)
+    mh2["version"] = compressor.FORMAT_VERSION_ADAPTIVE + 1
+    packed = msgpack.packb(mh2, use_bin_type=True)
+    payload = encode.codec_decompress(
+        mono[5:], "zstd" if mono[:5] == encode.MAGIC else "zlib")
+    (hlen,) = _struct.unpack("<I", payload[:4])
+    forged_m = mono[:5] + encode.codec_compress(
+        _struct.pack("<I", len(packed)) + packed + payload[4 + hlen:])
+    expect(ValueError, lambda: compressor.decompress(forged_m),
+           "forged future-version monolithic container")
+
+    # degenerate relative range: typed raise survives -O (the check is
+    # a real ValueError subclass, never an assert)
+    flat = np.full((3, 8, 8), 1.5, np.float32)
+    expect(ebpolicy.DegenerateRangeError,
+           lambda: _compress(flat, flat,
+                             CompressionConfig(eb=1e-2, mode="rel")),
+           "degenerate relative range (monolithic)")
+    expect(ValueError,     # and it IS a ValueError for generic handlers
+           lambda: compress_tiled(flat, flat,
+                                  CompressionConfig(eb=1e-2, mode="rel"),
+                                  TileGrid(tile_h=8, tile_w=8,
+                                           window_t=2)),
+           "degenerate relative range (tiled)")
+
+    # salvage keeps adaptive unit frames readable (per-unit eb_base is
+    # inside the frames, so a rebuilt footer loses nothing needed)
+    units = sorted(hdr["units"], key=lambda e: e["off"])
+    e = units[-1]
+    sblob, rep = encode.salvage_container(blob[: e["off"] + e["len"] // 2])
+    check(rep["units_recovered"] == len(units) - 1,
+          "adaptive salvage drops exactly the torn unit")
+    tiling.decompress_tiled(sblob)
+    return True
+
+
 def _stream_inputs():
     from repro.data import synthetic
 

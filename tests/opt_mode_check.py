@@ -33,6 +33,11 @@ def main() -> int:
     with tempfile.TemporaryDirectory() as td:
         cc.run_recovery_matrix(tiled, hdr, td)
 
+    # adaptive (v6/v3) containers: self-description, typed refusals,
+    # degenerate-range raise -- all must survive assert stripping
+    ablob, ahdr, afield, apol = cc.build_adaptive_blob()
+    cc.run_adaptive_matrix(ablob, ahdr, afield, apol)
+
     # checkpoint restore validation must be a real raise, not an assert
     from repro.train import checkpoint
 

@@ -47,6 +47,11 @@ def test_recovery_matrix_zlib_codec(monkeypatch, tmp_path):
     assert cc.run_recovery_matrix(tiled, hdr, str(tmp_path))
 
 
+def test_adaptive_matrix_default_codec():
+    blob, hdr, field, pol = cc.build_adaptive_blob()
+    assert cc.run_adaptive_matrix(blob, hdr, field, pol)
+
+
 def test_unknown_codec_regression():
     """encode.codec_decompress used to route ANY unknown codec string
     through zlib, decoding forged headers to garbage."""

@@ -1,0 +1,289 @@
+"""Per-unit adaptive error bounds (core/ebpolicy.py; DESIGN.md #16).
+
+Covers the three load-bearing guarantees of the EbPolicy refactor:
+
+* **uniform is byte-identical**: a config with no policy, an explicit
+  :class:`UniformPolicy` and the string ``"uniform"`` produce the exact
+  same containers as before the refactor (same format versions, no new
+  header keys) on every engine;
+* **adaptive resolution is engine-independent**: the policy resolves to
+  the same per-vertex bound field whether compression runs monolithic,
+  tiled, streaming (serial or async) or crash-and-resumed -- tiled
+  containers are byte-identical across those engines and decode equal
+  to the monolithic adaptive container;
+* **adaptive containers are self-describing**: version-bumped headers
+  carry the policy spec and per-unit ``eb_base``, and the policy spec
+  round-trips.
+"""
+import dataclasses
+import io
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompressionConfig,
+    TileGrid,
+    compress,
+    compress_stream,
+    compress_tiled,
+    compressor,
+    decompress,
+    decompress_tiled,
+    encode,
+    pipeline,
+    stream_engine,
+    tiling,
+)
+from repro.core import faults as faults_mod
+from repro.core.ebpolicy import (
+    DegenerateRangeError,
+    TilePolicy,
+    UniformPolicy,
+)
+from repro.core import ebpolicy
+
+T, H, W = 7, 16, 20
+GRID = TileGrid(tile_h=7, tile_w=9, window_t=3)   # != the policy grid
+
+# policy grid deliberately misaligned with GRID: resolution must never
+# read the execution tiling
+POL = TilePolicy.make(2, 6, 8, default=5e-2,
+                      values={(0, 0, 0): 5e-3, (1, 1, 1): 1e-2,
+                              (2, 2, 1): 2e-3})
+
+
+def _cfg(**kw):
+    kw.setdefault("eb", 5e-2)
+    kw.setdefault("mode", "abs")
+    kw.setdefault("predictor", "mop")
+    kw.setdefault("fused", True)
+    return CompressionConfig(**kw)
+
+
+def _adaptive_cfg(**kw):
+    return _cfg(eb_policy=POL,
+                n_levels=ebpolicy.levels_for(POL), **kw)
+
+
+@pytest.fixture(scope="module")
+def field():
+    rng = np.random.default_rng(7)
+    u = rng.normal(size=(T, H, W)).astype(np.float32)
+    v = rng.normal(size=(T, H, W)).astype(np.float32)
+    u[:, :, 9] *= 0.05   # near-zero bands so crossings exist
+    v[:, 6, :] *= 0.05
+    return u, v
+
+
+# ------------------------------------------------- uniform byte-identity
+
+def test_uniform_policy_byte_identical_monolithic(field):
+    u, v = field
+    blob_none, _ = compress(u, v, _cfg())
+    blob_obj, _ = compress(u, v, _cfg(eb_policy=UniformPolicy()))
+    blob_str, _ = compress(u, v, _cfg(eb_policy="uniform"))
+    assert blob_none == blob_obj == blob_str
+    header, _ = encode.unpack(blob_none)
+    assert header["version"] == pipeline.FORMAT_VERSION
+    assert "eb_policy" not in header
+
+
+def test_uniform_policy_byte_identical_tiled(field):
+    u, v = field
+    blob_none, _ = compress_tiled(u, v, _cfg(), GRID)
+    blob_obj, _ = compress_tiled(u, v, _cfg(eb_policy=UniformPolicy()),
+                                 GRID)
+    assert blob_none == blob_obj
+    header = encode.tiled_header(blob_none)
+    assert header["version"] == tiling.TILED_FORMAT_VERSION
+    assert "eb_policy" not in header
+
+
+# ------------------------------------------- engine-independent adaptive
+
+def test_adaptive_monolithic_decodes_equal_to_tiled(field):
+    u, v = field
+    blob_m, st_m = compress(u, v, _adaptive_cfg())
+    blob_t, st_t = compress_tiled(u, v, _adaptive_cfg(), GRID)
+    um, vm = decompress(blob_m)
+    ut, vt = decompress_tiled(blob_t)
+    assert np.array_equal(um, ut) and np.array_equal(vm, vt)
+    # adaptivity only clamps DOWN: the loosest policy bound still holds
+    loose = ebpolicy.max_bound(POL)
+    assert np.abs(um.astype(np.float64) - u).max() <= loose
+    assert np.abs(vm.astype(np.float64) - v).max() <= loose
+
+
+def _vr(u, v):
+    return (float(min(u.min(), v.min())), float(max(u.max(), v.max())))
+
+
+def test_adaptive_streaming_serial_async_byte_identical(field):
+    u, v = field
+    pairs = list(zip(u, v))
+    blob_t, _ = compress_tiled(u, v, _adaptive_cfg(), GRID)
+    for use_async in (False, True):
+        blob_s, _ = compress_stream(iter(pairs), _adaptive_cfg(), GRID,
+                                    value_range=_vr(u, v),
+                                    async_engine=use_async)
+        assert blob_s == blob_t, f"async={use_async}"
+
+
+def test_adaptive_kill_and_resume_byte_identical(field, tmp_path):
+    u, v = field
+    pairs = list(zip(u, v))
+    cfg = _adaptive_cfg()
+    blob_ref, _ = compress_tiled(u, v, cfg, GRID)
+    p = tmp_path / "crash.cptt"
+
+    def feed(t0):
+        return iter(pairs[t0:])
+
+    plan = faults_mod.FaultPlan().io_error("stream.compute", nth=4)
+    with pytest.raises(faults_mod.InjectedFault):
+        compress_stream(feed, cfg, GRID, value_range=_vr(u, v),
+                        sink=str(p), faults=plan)
+    info = stream_engine.resume_info(str(p))
+    assert info["resumable"] and not info["complete"]
+    compress_stream(feed, cfg, GRID, value_range=_vr(u, v),
+                    sink=str(p), resume=True)
+    assert p.read_bytes() == blob_ref
+
+
+def test_resume_fingerprint_includes_policy():
+    """The journal's run fingerprint carries the policy spec (the
+    dataclasses.asdict scalar filter would silently drop it), so a
+    resume under a different policy trips the existing ResumeError
+    mismatch check instead of splicing mixed-bound bytes."""
+    fp_a = stream_engine._fingerprint(_adaptive_cfg(), GRID,
+                                      (0.0, 1.0), H, W)
+    fp_u = stream_engine._fingerprint(_cfg(), GRID, (0.0, 1.0), H, W)
+    assert fp_a["eb_policy"] == POL.spec()
+    assert fp_u["eb_policy"] is None
+    assert not stream_engine._fp_equal(fp_a, fp_u)
+    other = TilePolicy.make(2, 6, 8, default=5e-2,
+                            values={(0, 0, 0): 1e-3})
+    fp_o = stream_engine._fingerprint(
+        _cfg(eb_policy=other, n_levels=_adaptive_cfg().n_levels),
+        GRID, (0.0, 1.0), H, W)
+    assert not stream_engine._fp_equal(fp_a, fp_o)
+    # same policy from a round-tripped spec still matches
+    fp_rt = stream_engine._fingerprint(
+        _cfg(eb_policy=POL.spec(), n_levels=_adaptive_cfg().n_levels),
+        GRID, (0.0, 1.0), H, W)
+    assert stream_engine._fp_equal(fp_a, fp_rt)
+
+
+# ------------------------------------------------ self-describing format
+
+def test_adaptive_container_versions_and_policy_header(field):
+    u, v = field
+    blob_m, _ = compress(u, v, _adaptive_cfg())
+    hm, _ = encode.unpack(blob_m)
+    assert hm["version"] == pipeline.FORMAT_VERSION_ADAPTIVE
+    assert ebpolicy.policy_from_spec(hm["eb_policy"]) == POL
+
+    blob_t, _ = compress_tiled(u, v, _adaptive_cfg(), GRID)
+    ht = encode.tiled_header(blob_t)
+    assert ht["version"] == tiling.TILED_FORMAT_VERSION_ADAPTIVE
+    assert ebpolicy.policy_from_spec(ht["eb_policy"]) == POL
+
+
+def test_adaptive_unit_frames_record_eb_base(field):
+    u, v = field
+    blob_t, _ = compress_tiled(u, v, _adaptive_cfg(), GRID)
+    frames, _, _ = encode._scan_frames(blob_t)
+    seen = 0
+    for fr in frames:
+        if fr["mark"] == encode.PROLOGUE_MARK:
+            continue
+        frame = blob_t[fr["off"]: fr["off"] + fr["len"]]
+        fh, _ = encode.unpack(frame)
+        assert isinstance(fh["eb_base"], float) and fh["eb_base"] > 0
+        seen += 1
+    assert seen > 1
+
+
+def test_run_report_eb_base_column(field):
+    from repro import obs
+
+    u, v = field
+    blob_u, st_u = compress_tiled(u, v, _cfg(), GRID)
+    for row in obs.run_report(blob_u)["units"]:
+        assert row["eb_base"] == pytest.approx(st_u["eb_abs"])
+    blob_a, _ = compress_tiled(u, v, _adaptive_cfg(), GRID)
+    bases = {row["eb_base"]
+             for row in obs.run_report(blob_a)["units"]}
+    assert len(bases) > 1       # per-unit bounds actually vary
+
+
+def test_policy_spec_roundtrip_and_validation():
+    spec = POL.spec()
+    assert ebpolicy.policy_from_spec(spec) == POL
+    # msgpack round-trips tuples as lists; from_spec must accept both
+    import msgpack
+
+    listy = msgpack.unpackb(msgpack.packb(spec, use_bin_type=True),
+                            raw=False)
+    assert ebpolicy.policy_from_spec(listy) == POL
+    with pytest.raises(ValueError):
+        TilePolicy.make(0, 6, 8, default=1e-2)
+    with pytest.raises(ValueError):
+        TilePolicy.make(2, 6, 8, default=-1.0)
+    with pytest.raises(ValueError):
+        TilePolicy.make(2, 6, 8, default=1e-2,
+                        values={(0, 0): 1e-3})
+    with pytest.raises(TypeError):
+        ebpolicy.normalize(object())
+
+
+def test_levels_for_covers_policy_span():
+    pol = TilePolicy.make(1, 8, 8, default=0.64,
+                          values={(0, 0, 0): 0.01})
+    # span 64 -> ladder needs ceil(log2(64)) + 1 = 7 rungs
+    assert ebpolicy.levels_for(pol) == 7
+    assert ebpolicy.levels_for(pol, n_levels=9) == 9
+    assert ebpolicy.min_bound(pol) == 0.01
+    assert ebpolicy.max_bound(pol) == 0.64
+
+
+# --------------------------------------------------- degenerate range
+
+def test_degenerate_range_typed_error():
+    """mode='rel' on a constant field: a typed DegenerateRangeError (a
+    ValueError, raised not asserted), never a silent eb collapse."""
+    u = np.full((3, 8, 8), 2.5, np.float32)
+    v = np.full((3, 8, 8), 2.5, np.float32)
+    with pytest.raises(DegenerateRangeError):
+        compress(u, v, CompressionConfig(eb=1e-2, mode="rel"))
+    with pytest.raises(ValueError):        # it IS a ValueError
+        compressor._abs_eb(u, v, CompressionConfig(eb=1e-2, mode="rel"))
+    with pytest.raises(DegenerateRangeError):
+        compress_tiled(u, v, CompressionConfig(eb=1e-2, mode="rel"),
+                       TileGrid(tile_h=8, tile_w=8, window_t=3))
+    # abs mode on the same field stays fine
+    blob, _ = compress(u, v, CompressionConfig(eb=1e-2, mode="abs"))
+    ur, vr = decompress(blob)
+    assert np.abs(ur - u).max() <= 1e-2
+
+
+# --------------------------------------------------- target-ratio API
+
+def test_compress_target_ratio_uniform_sufficient(field):
+    u, v = field
+    cfg = _cfg(backend="numpy")
+    _, st0 = compress(u, v, cfg)
+    blob, st = compress(u, v, cfg, target_ratio=st0["ratio"] * 0.5)
+    rt = st["rate_target"]
+    assert rt["met"] and rt["uniform_sufficient"]
+    ur, vr = decompress(blob)
+    assert ur.shape == u.shape
+
+
+def test_compress_target_ratio_rejects_explicit_policy(field):
+    u, v = field
+    with pytest.raises(ValueError):
+        compress(u, v, _adaptive_cfg(), target_ratio=2.0)
+    with pytest.raises(ValueError):
+        compress(u, v, _cfg(), target_ratio=-1.0)

@@ -179,6 +179,42 @@ def test_random_geometry_bitwise_roundtrip(gi):
     assert np.array_equal(um, ut) and np.array_equal(vm, vt)
 
 
+@settings(max_examples=2, deadline=None)
+@given(st.integers(min_value=0, max_value=len(_GEOMS) - 1),
+       st.integers(min_value=0, max_value=10**6))
+def test_nonuniform_bounds_tiled_matches_monolithic(gi, seed):
+    """Random non-uniform per-tile base bounds (core/ebpolicy.py): the
+    policy resolves over its OWN grid, so a random execution tiling and
+    the monolithic pipeline must decode identically under it -- the
+    seam min-reduction and the policy's one-cell/one-frame inflation
+    rule compose engine-independently.  Both predictors."""
+    from repro.core import ebpolicy
+
+    rng = np.random.default_rng(seed)
+    wt = int(rng.integers(1, T + 1))
+    th = int(rng.integers(2, H + 1))
+    tw = int(rng.integers(2, W + 1))
+    values = {}
+    for wi in range(-(-T // wt)):
+        for ti in range(-(-H // th)):
+            for tj in range(-(-W // tw)):
+                if rng.random() < 0.5:
+                    values[(wi, ti, tj)] = float(10.0
+                                                 ** rng.uniform(-3, -1.3))
+    pol = ebpolicy.TilePolicy.make(wt, th, tw, default=5e-2,
+                                   values=values)
+    for pred in ("mop", "lorenzo"):
+        cfg = CompressionConfig(eb=5e-2, mode="abs", predictor=pred,
+                                fused=True, eb_policy=pol,
+                                n_levels=ebpolicy.levels_for(pol))
+        blob_m, _ = compress(_U, _V, cfg)
+        um, vm = decompress(blob_m)
+        blob_t, _ = compress_tiled(_U, _V, cfg, _grid(gi))
+        ut, vt = decompress_tiled(blob_t)
+        assert np.array_equal(um, ut) and np.array_equal(vm, vt), \
+            (pred, gi, wt, th, tw)
+
+
 def test_box_vertex_ids_order_isomorphic():
     """The invariant the tiled path rests on: a sub-box's row-major
     local ids preserve the global id order, so SoS tie-breaks (pure <
